@@ -1,0 +1,28 @@
+"""Appendix Fig 11/12: DeMo chunk-size sweep at rates 1/16 and 1/8 +
+bandwidth usage table."""
+from benchmarks import settings as S
+from benchmarks.common import train_replicated
+from repro.configs import get_config
+from repro.core import FlexConfig
+from repro.core.compression import rate_to_topk
+from repro.data.synthetic import Seq2Seq
+
+import numpy as np
+
+
+def run(n_steps=None):
+    cfg = get_config("t5-repro").reduced(n_layers=S.N_LAYERS,
+                                         d_model=S.D_MODEL, vocab=S.VOCAB)
+    stream = Seq2Seq(S.VOCAB, S.SRC_LEN, S.BATCH)
+    rows = []
+    for rate in (1 / 16, 1 / 8):
+        for chunk in (16, 32, 64, 128):
+            flex = FlexConfig(scheme="demo", rate=rate, chunk_size=chunk)
+            res = train_replicated(cfg, flex, stream, n_steps or S.N_STEPS,
+                                   lr=S.LR, eval_every=S.EVAL_EVERY,
+                                   name=f"chunk{chunk}@{rate:g}")
+            rows.append({"rate": rate, "chunk": chunk,
+                         "topk": rate_to_topk(rate, chunk),
+                         "final_val": res.final_val(),
+                         "wire_bytes": res.wire_bytes})
+    return rows

@@ -1,0 +1,35 @@
+"""Appendix Fig 10: average time per optimization step under constrained
+inter-node bandwidth (10/100/1000/10000 Mbps).
+
+time/step = measured compute time + modeled transfer (wire_bytes*8/bw).
+Matches the paper's controlled two-node experiment."""
+from benchmarks import settings as S
+from benchmarks.common import train_replicated
+from repro.configs import get_config
+from repro.core import FlexConfig
+from repro.data.synthetic import Seq2Seq
+
+BANDWIDTHS_MBPS = (10, 100, 1000, 10_000)
+
+
+def run(n_steps=8):
+    cfg = get_config("t5-repro").reduced(n_layers=S.N_LAYERS,
+                                         d_model=S.D_MODEL, vocab=S.VOCAB)
+    stream = Seq2Seq(S.VOCAB, S.SRC_LEN, S.BATCH)
+    settings = [
+        ("demo@1/16", FlexConfig(scheme="demo", rate=1 / 16)),
+        ("demo@1/32", FlexConfig(scheme="demo", rate=1 / 32)),
+        ("random@1/16", FlexConfig(scheme="random", rate=1 / 16)),
+        ("random@1/32", FlexConfig(scheme="random", rate=1 / 32)),
+        ("full(adamw-like)", FlexConfig(scheme="full")),
+    ]
+    rows = []
+    for name, flex in settings:
+        res = train_replicated(cfg, flex, stream, n_steps, lr=S.LR,
+                               eval_every=0, name=name)
+        for bw in BANDWIDTHS_MBPS:
+            t = res.seconds_per_step + res.wire_bytes * 8 / (bw * 1e6)
+            rows.append({"setting": name, "bandwidth_mbps": bw,
+                         "wire_bytes": res.wire_bytes,
+                         "s_per_step": t})
+    return rows

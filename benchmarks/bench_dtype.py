@@ -1,0 +1,30 @@
+"""Appendix Fig 13/14: transfer-dtype study (fp32 vs bf16 payload values).
+
+The wire dtype changes BOTH the bandwidth (value_bytes) and the numerics
+(values quantized to bf16 before the mean over R)."""
+from benchmarks import settings as S
+from benchmarks.common import train_replicated
+from repro.configs import get_config
+from repro.core import FlexConfig
+from repro.data.synthetic import Seq2Seq
+
+import numpy as np
+
+
+def run(n_steps=None):
+    cfg = get_config("t5-repro").reduced(n_layers=S.N_LAYERS,
+                                         d_model=S.D_MODEL, vocab=S.VOCAB)
+    stream = Seq2Seq(S.VOCAB, S.SRC_LEN, S.BATCH)
+    rows = []
+    for scheme in ("demo", "random", "full"):
+        for vb in (4, 2):
+            # sign=False so the payload dtype matters (sign is ternary anyway)
+            flex = FlexConfig(scheme=scheme, rate=1 / 8, sign=False,
+                              value_bytes=vb)
+            res = train_replicated(cfg, flex, stream, n_steps or S.N_STEPS,
+                                   lr=S.LR / 2, eval_every=S.EVAL_EVERY,
+                                   name=f"{scheme}/fp{vb*8}")
+            rows.append({"scheme": scheme, "value_bytes": vb,
+                         "final_val": res.final_val(),
+                         "wire_bytes": res.wire_bytes})
+    return rows

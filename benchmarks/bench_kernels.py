@@ -1,0 +1,60 @@
+"""Kernel microbench: Pallas (interpret on CPU) vs jnp reference — wall time
+is NOT meaningful on CPU; the table reports allclose + modeled VMEM/bytes."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dct_topk.ops import dct_topk
+from repro.kernels.dct_topk.ref import dct_topk_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.wkv6.ops import wkv6_chunked
+from repro.models.layers.rwkv6 import rwkv6_attend_chunked
+
+
+def _time(f, *a, n=3):
+    f(*a)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    rows = []
+    rng = np.random.RandomState(0)
+
+    m = jnp.asarray(rng.randn(2 ** 16), jnp.float32)
+    t_k = _time(lambda x: dct_topk(x, 64, 8, interpret=True), m)
+    t_r = _time(lambda x: dct_topk_ref(x.reshape(-1, 64), 8), m)
+    v1 = dct_topk(m, 64, 8, interpret=True)[2]
+    v2 = dct_topk_ref(m.reshape(-1, 64), 8)[2].reshape(-1)
+    rows.append({"kernel": "dct_topk", "n": 2 ** 16,
+                 "interpret_s": t_k, "ref_s": t_r,
+                 "max_err": float(jnp.abs(v1 - v2).max())})
+
+    b, s, h, hd = 1, 128, 2, 64
+    r, k, v = (jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(1 / (1 + np.exp(-rng.randn(b, s, h, hd) - 2)), jnp.float32)
+    u = jnp.asarray(rng.randn(h, hd) * 0.1, jnp.float32)
+    t_k = _time(lambda: wkv6_chunked(r, k, v, w, u, chunk=32, interpret=True))
+    t_r = _time(lambda: rwkv6_attend_chunked(r, k, v, w, u, 32))
+    o1, _ = wkv6_chunked(r, k, v, w, u, chunk=32, interpret=True)
+    o2, _ = rwkv6_attend_chunked(r, k, v, w, u, 32)
+    rows.append({"kernel": "wkv6", "n": b * s * h * hd,
+                 "interpret_s": t_k, "ref_s": t_r,
+                 "max_err": float(jnp.abs(o1 - o2).max())})
+
+    a = jnp.asarray(1 / (1 + np.exp(-rng.randn(2, 128, 128))), jnp.float32)
+    x = jnp.asarray(rng.randn(2, 128, 128), jnp.float32)
+    t_k = _time(lambda: rglru_scan(a, x, interpret=True))
+    t_r = _time(lambda: rglru_scan_ref(a, x))
+    h1 = rglru_scan(a, x, interpret=True)
+    h2 = rglru_scan_ref(a, x)
+    rows.append({"kernel": "rglru", "n": 2 * 128 * 128,
+                 "interpret_s": t_k, "ref_s": t_r,
+                 "max_err": float(jnp.abs(h1 - h2).max())})
+    return rows

@@ -1,0 +1,50 @@
+"""Fig 1 / 2a / 2b / 3: replication schemes x optimizers across the paper's
+three domains (seq2seq translation, image classification, causal LM), at
+EQUAL modeled bandwidth."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import settings as S
+from benchmarks.common import train_replicated
+from repro.configs import get_config
+from repro.core import FlexConfig
+from repro.data.synthetic import BigramLM, ClusteredEmbeddings, Seq2Seq
+
+DOMAINS = {
+    "seq2seq-t5": lambda: (
+        get_config("t5-repro").reduced(n_layers=S.N_LAYERS, d_model=S.D_MODEL,
+                                       vocab=S.VOCAB),
+        Seq2Seq(S.VOCAB, S.SRC_LEN, S.BATCH)),
+    "vit-class": lambda: (
+        get_config("vit-b").reduced(n_layers=S.N_LAYERS, d_model=S.D_MODEL,
+                                    vocab=S.VOCAB),
+        ClusteredEmbeddings(100, S.D_MODEL, 16, S.BATCH)),
+    "causal-lm": lambda: (
+        get_config("olmo2-1b").reduced(n_layers=S.N_LAYERS, d_model=S.D_MODEL,
+                                       vocab=S.VOCAB),
+        BigramLM(S.VOCAB, S.SEQ, S.BATCH)),
+}
+
+SCHEMES = ["demo", "random", "striding", "diloco", "full"]
+
+
+def run(rate=1 / 8, optimizers=("demo_sgd",), domains=None, n_steps=None):
+    rows = []
+    for dom in (domains or DOMAINS):
+        cfg, stream = DOMAINS[dom]()
+        for opt in optimizers:
+            for scheme in SCHEMES:
+                res = train_replicated(
+                    cfg, FlexConfig(scheme=scheme, rate=rate), stream,
+                    n_steps or S.N_STEPS, lr=S.LR, optimizer=opt,
+                    eval_every=S.EVAL_EVERY,
+                    name=f"{dom}/{opt}/{scheme}@{rate:g}")
+                rows.append({
+                    "domain": dom, "optimizer": opt, "scheme": scheme,
+                    "rate": rate, "final_val": res.final_val(),
+                    "final_train": float(np.mean(res.train_losses[-5:])),
+                    "wire_bytes": res.wire_bytes,
+                    "s_per_step": res.seconds_per_step,
+                })
+    return rows

@@ -1,0 +1,43 @@
+"""Fig 5/6: scaling to many nodes. Wall-clock per step is modeled as
+compute + collective time, with the paper's observation built in: DeMo's
+payload gather is an all_gather whose received bytes grow ~linearly with the
+node count, while Random (shared indices -> all-reduce-able) and full-sync
+(ring all-reduce) stay ~constant per node."""
+from benchmarks import settings as S
+from repro.configs import get_config
+from repro.core import FlexConfig
+from repro.core.flexdemo import tree_wire_bytes
+from repro.models import init_model
+
+import jax
+
+BW = 25e9 / 8  # 25 Gbps inter-node, bytes/s
+COMPUTE_S = 0.5  # assumed per-step compute at this model scale
+
+
+def run(node_counts=(2, 4, 8, 16, 32, 64)):
+    cfg = get_config("olmo2-1b")
+    params_shapes = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    rows = []
+    for name, flex in [
+        ("demo@1/32", FlexConfig(scheme="demo", rate=1 / 32)),
+        ("random@1/32", FlexConfig(scheme="random", rate=1 / 32)),
+        ("full-adamw", FlexConfig(scheme="full")),
+    ]:
+        rep = flex.make()
+        payload = tree_wire_bytes(rep, params_shapes)
+        for n in node_counts:
+            if flex.scheme == "demo":
+                # all_gather: every node receives (n-1) payloads
+                t_comm = payload * (n - 1) / BW
+            elif flex.scheme == "random":
+                # shared indices -> reduce-able: ring, ~2x payload
+                t_comm = 2 * payload * (n - 1) / n / BW
+            else:
+                t_comm = 2 * payload * (n - 1) / n / BW
+            rows.append({"setting": name, "nodes": n,
+                         "payload_bytes": payload,
+                         "s_per_step": COMPUTE_S + t_comm,
+                         "comm_s": t_comm})
+    return rows

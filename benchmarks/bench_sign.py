@@ -1,0 +1,28 @@
+"""Appendix Fig 9: sign-before-sync on vs off, per scheme."""
+from benchmarks import settings as S
+from benchmarks.common import train_replicated
+from repro.configs import get_config
+from repro.core import FlexConfig
+from repro.data.synthetic import Seq2Seq
+
+import numpy as np
+
+
+def run(n_steps=None):
+    cfg = get_config("t5-repro").reduced(n_layers=S.N_LAYERS,
+                                         d_model=S.D_MODEL, vocab=S.VOCAB)
+    stream = Seq2Seq(S.VOCAB, S.SRC_LEN, S.BATCH)
+    rows = []
+    for scheme in ("demo", "random", "striding", "diloco"):
+        for sign in (True, False):
+            # sign kills the magnitude: keep lr as-is for sign (tuned), and
+            # scale down for raw-magnitude momenta to stay stable.
+            lr = S.LR if sign else S.LR / 2
+            res = train_replicated(
+                cfg, FlexConfig(scheme=scheme, rate=1 / 8, sign=sign),
+                stream, n_steps or S.N_STEPS, lr=lr,
+                eval_every=S.EVAL_EVERY, name=f"{scheme}/sign={sign}")
+            rows.append({"scheme": scheme, "sign": sign,
+                         "final_val": res.final_val(),
+                         "final_train": float(np.mean(res.train_losses[-5:]))})
+    return rows

@@ -1,0 +1,24 @@
+"""Appendix Fig 8: DeMo top-k sweep (k in {1,2,4,8,16}, chunk 64)."""
+from benchmarks import settings as S
+from benchmarks.common import train_replicated
+from repro.configs import get_config
+from repro.core import FlexConfig
+from repro.data.synthetic import Seq2Seq
+
+import numpy as np
+
+
+def run(n_steps=None):
+    cfg = get_config("t5-repro").reduced(n_layers=S.N_LAYERS,
+                                         d_model=S.D_MODEL, vocab=S.VOCAB)
+    stream = Seq2Seq(S.VOCAB, S.SRC_LEN, S.BATCH)
+    rows = []
+    for k in (1, 2, 4, 8, 16):
+        flex = FlexConfig(scheme="demo", topk=k, chunk_size=64)
+        res = train_replicated(cfg, flex, stream, n_steps or S.N_STEPS,
+                               lr=S.LR, eval_every=S.EVAL_EVERY,
+                               name=f"top{k}")
+        rows.append({"topk": k, "final_val": res.final_val(),
+                     "final_train": float(np.mean(res.train_losses[-5:])),
+                     "wire_bytes": res.wire_bytes})
+    return rows

@@ -1,0 +1,157 @@
+"""Shared harness for the paper-figure benchmarks: an in-process N-replica
+simulator (replicas = explicit momentum copies; the collective = mean of
+payloads), so replication-scheme dynamics — including DECOUPLED momentum
+divergence — are reproduced faithfully on one CPU device."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FlexConfig
+from repro.core.optimizers.base import apply_updates, resolve_lr
+from repro.models import init_model, loss_fn
+from repro.utils.tree import tree_zeros_like
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    train_losses: list
+    val_losses: list
+    wire_bytes: float          # modeled inter-node bytes / step / replica
+    seconds_per_step: float
+
+    def final_val(self):
+        return self.val_losses[-1][1] if self.val_losses else float("nan")
+
+
+def _split_batch(batch, n):
+    def sp(x, d=0):
+        return [np.take(x, np.arange(i, x.shape[d], n), axis=d)
+                for i in range(n)]
+
+    keys = list(batch)
+    outs = [{} for _ in range(n)]
+    for k in keys:
+        d = 1 if (k == "positions" and batch[k].ndim == 3) else 0
+        for i, piece in enumerate(sp(batch[k], d)):
+            outs[i][k] = piece
+    return outs
+
+
+def train_replicated(
+    cfg,
+    flex: FlexConfig,
+    stream,
+    n_steps: int,
+    lr=1e-2,
+    optimizer: str = "demo_sgd",
+    momentum_decay: float = 0.9,
+    n_replicas: int = 2,
+    eval_every: int = 10,
+    eval_batches: int = 2,
+    seed: int = 0,
+    name: str = "",
+) -> RunResult:
+    replicator = flex.make()
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    moms = [tree_zeros_like(params, jnp.float32) for _ in range(n_replicas)]
+    # decoupled-adamw state
+    adam = optimizer == "decoupled_adamw"
+    if adam:
+        m1 = tree_zeros_like(params, jnp.float32)
+        m2 = tree_zeros_like(params, jnp.float32)
+        m1s = [tree_zeros_like(params, jnp.float32) for _ in range(n_replicas)]
+        m2s = [tree_zeros_like(params, jnp.float32) for _ in range(n_replicas)]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def adam_update(a1, a2, q, t, eta):
+        a1 = jax.tree_util.tree_map(lambda a, qq: b1 * a + (1 - b1) * qq, a1, q)
+        a2 = jax.tree_util.tree_map(
+            lambda a, qq: b2 * a + (1 - b2) * qq * qq, a2, q)
+        upd = jax.tree_util.tree_map(
+            lambda a, b_: -eta * (a / (1 - b1 ** t)) /
+            (jnp.sqrt(b_ / (1 - b2 ** t)) + eps), a1, a2)
+        return a1, a2, upd
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(p, b, cfg)[0]))
+    loss_fn_j = jax.jit(lambda p, b: loss_fn(p, b, cfg)[0])
+
+    @jax.jit
+    def replica_update(m, g):
+        return jax.tree_util.tree_map(
+            lambda mm, gg: momentum_decay * mm + gg.astype(jnp.float32), m, g)
+
+    from repro.core.flexdemo import communicate_tree
+
+    @jax.jit
+    def communicate(m, step):
+        q, res, _ = communicate_tree(replicator, m, step=step, axes=(),
+                                     sign=flex.sign)
+        return q, res
+
+    diloco = flex.scheme == "diloco"
+    period = max(1, round(1 / flex.rate))
+    params_list = [params] * n_replicas if diloco else None
+
+    train_losses, val_losses = [], []
+    wire = 0.0
+    t0 = time.perf_counter()
+    step_count = 0
+    for step in range(n_steps):
+        batch = stream.batch(step)
+        pieces = _split_batch(batch, n_replicas)
+        qs, losses = [], []
+        for i in range(n_replicas):
+            b = {k: jnp.asarray(v) for k, v in pieces[i].items()}
+            loss, g = grad_fn(params_list[i] if diloco else params, b)
+            losses.append(float(loss))
+            moms[i] = replica_update(moms[i], g)
+            q, res = communicate(moms[i], jnp.asarray(step))
+            moms[i] = res
+            qs.append(q)
+        eta = resolve_lr(lr, step)
+        if diloco:
+            # local updates; federated parameter average every `period`
+            new_list = []
+            for i, (p, q) in enumerate(zip(params_list, qs)):
+                if adam:
+                    m1s[i], m2s[i], upd = adam_update(m1s[i], m2s[i], q,
+                                                      step + 1, eta)
+                else:
+                    upd = jax.tree_util.tree_map(lambda qq: -eta * qq, q)
+                new_list.append(apply_updates(p, upd))
+            params_list = new_list
+            if step % period == period - 1:
+                avg = jax.tree_util.tree_map(
+                    lambda *xs: sum(xs) / n_replicas, *params_list)
+                params_list = [avg] * n_replicas
+            params = params_list[0]
+        else:
+            q_mean = jax.tree_util.tree_map(
+                lambda *xs: sum(xs) / n_replicas, *qs)
+            if adam:
+                m1, m2, upd = adam_update(m1, m2, q_mean, step + 1, eta)
+            else:
+                upd = jax.tree_util.tree_map(lambda qq: -eta * qq, q_mean)
+            params = apply_updates(params, upd)
+        train_losses.append(float(np.mean(losses)))
+        step_count += 1
+        if eval_every and (step + 1) % eval_every == 0:
+            v = np.mean([float(loss_fn_j(
+                params, {k: jnp.asarray(x) for k, x in
+                         stream.batch(10_000_000 + j).items()}))
+                for j in range(eval_batches)])
+            val_losses.append((step + 1, v))
+    if wire == 0.0:
+        from repro.core.flexdemo import tree_wire_bytes
+
+        wire = tree_wire_bytes(replicator, params)
+    secs = (time.perf_counter() - t0) / max(step_count, 1)
+    return RunResult(name or f"{flex.scheme}@{flex.rate:g}",
+                     train_losses, val_losses, wire, secs)

@@ -1,0 +1,96 @@
+"""Benchmark runner: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark and dumps the full row
+sets to experiments/bench/*.json. Scale with BENCH_QUICK=0 for full runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+OUT = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def _save(name, rows):
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def _best(rows, key="final_val", label="scheme"):
+    ok = [r for r in rows if r.get(key) == r.get(key)]
+    if not ok:
+        return "n/a"
+    b = min(ok, key=lambda r: r[key])
+    return f"best_{label}={b.get(label)}:{b[key]:.4f}"
+
+
+def main() -> None:
+    t_all = time.perf_counter()
+    results = []
+
+    def bench(name, fn, derived_fn):
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        _save(name, rows)
+        us = dt * 1e6 / max(len(rows), 1)
+        line = f"{name},{us:.0f},{derived_fn(rows)}"
+        print(line, flush=True)
+        results.append(line)
+
+    from benchmarks import (bench_chunk, bench_comm, bench_dtype,
+                            bench_encdec, bench_kernels, bench_replicators,
+                            bench_scaling, bench_sign, bench_topk, roofline)
+
+    bench("fig1_replicators_sgd_vs_adamw",
+          lambda: bench_replicators.run(
+              rate=1 / 8, optimizers=("demo_sgd", "decoupled_adamw"),
+              domains=("seq2seq-t5",)),
+          lambda r: _best(r))
+    bench("fig2a_t5_schemes",
+          lambda: bench_replicators.run(rate=1 / 8, domains=("seq2seq-t5",)),
+          lambda r: _best(r))
+    bench("fig2b_vit_schemes",
+          lambda: bench_replicators.run(rate=1 / 8, domains=("vit-class",)),
+          lambda r: _best(r))
+    bench("fig3_causal_lm_schemes",
+          lambda: bench_replicators.run(rate=1 / 8, domains=("causal-lm",)),
+          lambda r: _best(r))
+    bench("fig8_topk", bench_topk.run, lambda r: _best(r, label="topk"))
+    bench("fig9_sign", bench_sign.run,
+          lambda r: _best(r, label="sign"))
+    bench("fig11_chunk", bench_chunk.run, lambda r: _best(r, label="chunk"))
+    bench("fig13_dtype", bench_dtype.run,
+          lambda r: _best(r, label="value_bytes"))
+    bench("fig10_bandwidth", bench_comm.run,
+          lambda r: f"fastest@10mbps={min((x for x in r if x['bandwidth_mbps']==10), key=lambda x: x['s_per_step'])['setting']}")
+    bench("fig5_6_scaling", bench_scaling.run,
+          lambda r: f"demo64/random64_ratio={[x['s_per_step'] for x in r if x['nodes']==64 and 'demo' in x['setting']][0] / [x['s_per_step'] for x in r if x['nodes']==64 and 'random' in x['setting']][0]:.2f}")
+    bench("fig2a_t5_true_encdec", bench_encdec.run,
+          lambda r: _best(r, key="final_train"))
+    bench("kernels", bench_kernels.run,
+          lambda r: "max_err=" + "/".join(f"{x['max_err']:.1e}" for x in r))
+
+    def _roofline():
+        rows = roofline.run()
+        if rows:
+            with open(os.path.join(OUT, "roofline.md"), "w") as f:
+                f.write(roofline.to_markdown(rows))
+        return rows
+
+    bench("roofline", _roofline,
+          lambda r: f"rows={len(r)}," + (
+              "dominant=" + ",".join(sorted(set(x["dominant"] for x in r)))
+              if r else "no-artifacts"))
+
+    print(f"# total {time.perf_counter() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

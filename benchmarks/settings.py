@@ -1,0 +1,14 @@
+"""Benchmark scale knobs: QUICK for CI-ish runs, FULL for the paper tables."""
+import os
+
+QUICK = os.environ.get("BENCH_QUICK", "1") != "0"
+
+N_STEPS = 60 if QUICK else 240
+EVAL_EVERY = 15 if QUICK else 30
+D_MODEL = 64
+N_LAYERS = 2
+VOCAB = 64
+BATCH = 8
+SEQ = 32
+SRC_LEN = 12
+LR = 0.01

@@ -1,0 +1,74 @@
+"""Quickstart: train a tiny causal LM with FlexDeMo (DeMo replication) and
+compare against the conventional full-sync AdamW baseline — single device,
+~1 minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import FlexConfig, apply_updates, make_optimizer
+from repro.data.synthetic import BigramLM
+from repro.models import init_model, loss_fn
+from repro.training.loop import run
+
+
+def make_step(cfg, opt):
+    @jax.jit
+    def step_fn(state, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(state["params"])
+        upd, opt_state, aux = opt.update(g, state["opt"], state["params"],
+                                         axes=())
+        return ({"params": apply_updates(state["params"], upd),
+                 "opt": opt_state, "step": state["step"] + 1},
+                {"loss": loss,
+                 "wire_bytes": jnp.asarray(aux.wire_bytes, jnp.float32)})
+
+    return step_fn
+
+
+def main():
+    cfg = get_config("olmo2-1b").reduced(n_layers=2, d_model=128, vocab=128)
+    stream = BigramLM(cfg.vocab_size, 64, 8, seed=0)
+
+    results = {}
+    for name, opt in [
+        ("flexdemo(demo@1/16)", make_optimizer(
+            "demo_sgd", 0.01, FlexConfig(scheme="demo", rate=1 / 16),
+            momentum_decay=0.9)),
+        ("hybrid-fsdp(adamw, full sync)", make_optimizer("adamw", 3e-3)),
+    ]:
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        state, res = run(make_step(cfg, opt), state, stream, n_steps=80,
+                         log_every=20, log=lambda s: print(f"[{name}] {s}"))
+        results[name] = res
+
+    # modeled wire for the full-sync baseline (adamw reports 0 with axes=())
+    from repro.core.flexdemo import tree_wire_bytes
+    from repro.core.replicators import make_replicator
+
+    full_wire = tree_wire_bytes(make_replicator("full"),
+                                init_model(jax.random.PRNGKey(0), cfg))
+
+    print("\n=== summary (tiny CPU run) ===")
+    for name, res in results.items():
+        import numpy as np
+
+        wire = res.wire_bytes_per_step or full_wire
+        print(f"{name:32s} final loss {np.mean(res.train_losses[-5:]):.4f} "
+              f"inter-node bytes/step {wire:,.0f}")
+    print("\nFlexDeMo reaches a comparable loss while moving a fraction of "
+          "the bytes between nodes — the paper's headline result.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Distributed serving demo: prefill a prompt, then batched decode with the
+flash-decode (seq-sharded KV cache) engine on 8 simulated devices.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models import init_model, transformer
+from repro.serving.engine import build_serve_step, make_serve_plan
+
+
+def main():
+    cfg = get_config("qwen2.5-3b").reduced(n_layers=4, d_model=256, vocab=512)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    B, MAXLEN, DECODE = 4, 64, 24
+    plan = make_serve_plan(cfg, mesh, B, MAXLEN)
+    step, shardings, specs, state_shapes, st_ps = build_serve_step(
+        cfg, mesh, plan, donate=False)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    state = transformer.init_decode_state(cfg, B, plan.max_len)
+
+    key = jax.random.PRNGKey(7)
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    outs = []
+    t0 = time.perf_counter()
+    for t in range(DECODE):
+        logits, state = step(params, state, tok, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(tok[:, 0]))
+    dt = time.perf_counter() - t0
+    print(f"decoded {DECODE} tokens x {B} sequences on "
+          f"{len(jax.devices())} devices in {dt:.2f}s "
+          f"({1e3*dt/DECODE:.1f} ms/token)")
+    print("sampled ids:", np.stack(outs, 1)[0][:12], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Checkpointing: save/restore arbitrary pytrees as .npz + JSON index.
+
+Leaves are addressed by their pytree key-path, so any of this framework's
+state dicts round-trips. Arrays are gathered to host (CPU-scale runs); at
+production scale the dry-run never materializes weights, and a real
+deployment would plug per-shard IO into `shard_hook`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _key(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save(path: str, tree, step: int | None = None, shard_hook=None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays, index = {}, {"leaves": [], "step": step}
+    for i, (kp, leaf) in enumerate(flat):
+        name = f"leaf_{i}"
+        arr = np.asarray(shard_hook(leaf) if shard_hook else leaf)
+        arrays[name] = arr
+        index["leaves"].append({
+            "key": _key(kp),
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        })
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(index, f)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (validates key paths/shapes)."""
+    with open(path + ".json") as f:
+        index = json.load(f)
+    data = np.load(path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    by_key = {e["key"]: e for e in index["leaves"]}
+    leaves = []
+    for kp, leaf in flat:
+        k = _key(kp)
+        if k not in by_key:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        e = by_key[k]
+        arr = data[e["name"]]
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), index.get("step")
+
+
+def latest(dirpath: str, prefix: str = "ckpt_"):
+    if not os.path.isdir(dirpath):
+        return None
+    best = None
+    for f in os.listdir(dirpath):
+        m = re.match(rf"{prefix}(\d+)\.json$", f)
+        if m:
+            s = int(m.group(1))
+            if best is None or s > best[0]:
+                best = (s, os.path.join(dirpath, f[:-5]))
+    return best

@@ -1,0 +1,69 @@
+"""Architecture registry: 10 assigned architectures + the paper's own models.
+
+Every config cites its source in ``source``. ``get_config(name)`` returns the
+full-size ArchConfig; ``get_config(name).reduced()`` is the CPU smoke variant.
+"""
+from __future__ import annotations
+
+from repro.configs import shapes  # noqa: F401
+from repro.models.common import ArchConfig
+
+_REGISTRY: dict[str, "ArchConfig"] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+ASSIGNED = [
+    "granite-moe-1b-a400m",
+    "recurrentgemma-9b",
+    "qwen2-vl-72b",
+    "hubert-xlarge",
+    "qwen2.5-3b",
+    "rwkv6-7b",
+    "nemotron-4-340b",
+    "chatglm3-6b",
+    "deepseek-coder-33b",
+    "dbrx-132b",
+]
+
+PAPERS_OWN = ["olmo2-1b", "vit-b", "t5-repro"]
+
+# beyond-paper long-context variants (DESIGN.md: dense archs may run
+# long_500k when a sliding-window variant is enabled)
+EXTENSIONS = ["qwen2.5-3b-swa"]
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        granite_moe_1b,
+        recurrentgemma_9b,
+        qwen2_vl_72b,
+        hubert_xlarge,
+        qwen25_3b,
+        rwkv6_7b,
+        nemotron4_340b,
+        chatglm3_6b,
+        deepseek_coder_33b,
+        dbrx_132b,
+        olmo2_1b,
+        vit_b,
+        t5_repro,
+        qwen25_3b_swa,
+    )

@@ -1,0 +1,22 @@
+"""chatglm3-6b: 28L d4096 32H (GQA kv=2) d_ff 13696 vocab 65024, RoPE-2d
+(rotary on half the head dims), QKV bias. [arXiv:2406.12793]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="chatglm3-6b",
+    family="dense",
+    kind="decoder",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65_024,
+    qkv_bias=True,
+    rope_kind="rope2d",
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="arXiv:2406.12793",
+))

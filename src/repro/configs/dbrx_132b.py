@@ -1,0 +1,22 @@
+"""dbrx-132b: 40L d6144 48H (GQA kv=8) MoE 16e top-4 (fine-grained), expert
+d_ff 10752, vocab 100352. [hf:databricks/dbrx-base]"""
+from repro.configs import register
+from repro.models.common import ArchConfig, MoEConfig
+
+CONFIG = register(ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    kind="decoder",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab_size=100_352,
+    moe=MoEConfig(n_experts=16, top_k=4, d_ff_expert=10752),
+    rope_theta=500_000.0,
+    fsdp_axes=("data", "model"),
+    repl_axes=(),
+    source="hf:databricks/dbrx-base",
+))

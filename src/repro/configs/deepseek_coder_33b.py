@@ -1,0 +1,21 @@
+"""deepseek-coder-33b: 62L d7168 56H (GQA kv=8) d_ff 19200 vocab 32256,
+llama-arch. [arXiv:2401.14196]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    kind="decoder",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32_256,
+    rope_theta=100_000.0,
+    fsdp_axes=("data", "model"),
+    repl_axes=(),
+    source="arXiv:2401.14196",
+))

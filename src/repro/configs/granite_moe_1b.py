@@ -1,0 +1,22 @@
+"""granite-moe-1b-a400m: 24L d1024 16H (GQA kv=8) MoE 32e top-8, expert
+d_ff=512, vocab 49155. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from repro.configs import register
+from repro.models.common import ArchConfig, MoEConfig
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    kind="decoder",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,                      # per-expert width
+    vocab_size=49155,
+    moe=MoEConfig(n_experts=32, top_k=8, d_ff_expert=512),
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+))

@@ -1,0 +1,26 @@
+"""hubert-xlarge: 48L d1280 16H d_ff 5120, encoder-only (bidirectional),
+504-class masked prediction; conv/mel frontend stubbed (frame embeddings
+arrive precomputed). [arXiv:2106.07447]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    kind="encoder",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    n_classes=504,
+    causal=False,
+    rope_kind="none",
+    mlp_type="gelu",
+    norm_type="layernorm",
+    input_mode="embeddings",       # stub conv feature extractor
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="arXiv:2106.07447",
+))

@@ -1,0 +1,21 @@
+"""nemotron-4-340b: 96L d18432 96H (GQA kv=8) d_ff 73728 vocab 256000,
+squared-ReLU MLP, untied. [arXiv:2402.16819]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    kind="decoder",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256_000,
+    mlp_type="relu2",
+    fsdp_axes=("data", "model"),   # 340B: params over the full pod
+    repl_axes=(),                  # single-pod: pure-FSDP edge case (|R|=1)
+    source="arXiv:2402.16819",
+))

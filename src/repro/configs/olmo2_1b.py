@@ -1,0 +1,19 @@
+"""olmo2-1b: the paper's causal-LM experiment model (OLMo2 1B stage-1 config:
+16L d2048 16H d_ff 8192 vocab 100352). [paper §OLMo2; allenai/OLMo]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="olmo2-1b",
+    family="dense",
+    kind="decoder",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=100_352,
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="paper (OLMo2-1B stage1, github.com/allenai/OLMo)",
+))

@@ -1,0 +1,23 @@
+"""qwen2.5-3b: 36L d2048 16H (GQA kv=2) d_ff 11008 vocab 151936, QKV bias,
+tied embeddings. [hf:Qwen/Qwen2.5-0.5B family scaling]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    kind="decoder",
+    n_layers=36,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="hf:Qwen/Qwen2.5-0.5B",
+))

@@ -1,0 +1,20 @@
+"""qwen2.5-3b-swa (beyond-paper extension): the dense qwen2.5-3b backbone
+with a 4096-token sliding window — a sub-quadratic variant that makes the
+long_500k decode shape admissible for a dense arch (ring cache of size
+`window`; see DESIGN.md §Arch-applicability)."""
+import dataclasses
+
+from repro.configs import register, get_config
+
+
+def _make():
+    base = get_config("qwen2.5-3b")
+    return register(dataclasses.replace(
+        base,
+        name="qwen2.5-3b-swa",
+        window=4096,
+        source=base.source + " + sliding-window variant (this repo)",
+    ))
+
+
+CONFIG = _make()

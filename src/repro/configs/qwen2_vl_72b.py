@@ -1,0 +1,26 @@
+"""qwen2-vl-72b: 80L d8192 64H (GQA kv=8) d_ff 29568 vocab 152064, M-RoPE,
+dynamic resolution (vision frontend stubbed: patch embeddings arrive
+precomputed). [arXiv:2409.12191]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    kind="decoder",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_kind="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    input_mode="embeddings",       # stub ViT frontend per task carve-out
+    fsdp_axes=("data", "model"),
+    repl_axes=(),                  # single-pod: pure-FSDP edge case (|R|=1)
+    source="arXiv:2409.12191",
+))

@@ -1,0 +1,26 @@
+"""recurrentgemma-9b: 38L d4096, RG-LRU + local attention in a 2:1 pattern,
+MQA (kv=1), d_ff 12288, vocab 256000, window 2048. [arXiv:2402.19427]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    kind="decoder",
+    n_layers=38,                   # 12 x (rglru,rglru,attn) + (rglru,rglru)
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256_000,
+    layer_pattern=("rglru", "rglru", "attn"),
+    d_rnn=4096,
+    conv_width=4,
+    window=2048,                   # local attention
+    mlp_type="geglu",
+    tie_embeddings=True,
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="arXiv:2402.19427",
+))

@@ -1,0 +1,22 @@
+"""rwkv6-7b "Finch": 32L d4096, attention-free time-mix with data-dependent
+decay, d_ff 14336, vocab 65536. [arXiv:2404.05892]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    kind="decoder",
+    n_layers=32,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=14336,
+    vocab_size=65_536,
+    layer_pattern=("rwkv",),
+    rwkv_head_dim=64,
+    rope_kind="none",
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="arXiv:2404.05892",
+))

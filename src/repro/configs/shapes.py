@@ -1,0 +1,107 @@
+"""The four assigned input shapes + ShapeDtypeStruct input specs for the
+dry-run (weak-type-correct, shardable, no device allocation).
+
+Decode shapes lower ``serve_step`` (ONE new token against a KV cache of
+seq_len), not ``train_step``. Encoder-only archs have no decode step;
+long_500k requires sub-quadratic attention (see DESIGN.md skip table).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def is_subquadratic(cfg: ArchConfig) -> bool:
+    """True when every mixer layer is O(1)-state or windowed."""
+    kinds = set(cfg.layer_pattern)
+    if kinds <= {"rwkv", "rglru"}:
+        return True
+    if "attn" in kinds and cfg.window is not None:
+        return True
+    return False
+
+
+def combo_supported(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-skipped) per the assignment's skip rules."""
+    if shape.mode == "decode" and cfg.kind == "encoder":
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        return False, "full attention: long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def _positions_spec(cfg: ArchConfig, b: int, s: int):
+    if cfg.rope_kind == "mrope":
+        return jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def train_input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.kind == "encoder" and cfg.n_classes:
+        # per-frame labels for audio (masked prediction), pooled for vision
+        lbl_shape = (b, s) if cfg.family == "audio" else (b,)
+    else:
+        lbl_shape = (b, s)
+    return {
+        "inputs": inputs,
+        "labels": jax.ShapeDtypeStruct(lbl_shape, jnp.int32),
+        "positions": _positions_spec(cfg, b, s),
+    }
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    return {"inputs": inputs, "positions": _positions_spec(cfg, b, s)}
+
+
+def decode_input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b = shape.global_batch
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+    return {
+        "inputs": inputs,
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    return {
+        "train": train_input_specs,
+        "prefill": prefill_input_specs,
+        "decode": decode_input_specs,
+    }[shape.mode](cfg, shape)

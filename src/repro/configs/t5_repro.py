@@ -1,0 +1,29 @@
+"""t5-repro: stand-in for the paper's T5 translation experiments.
+
+The paper trains T5-Large (encoder-decoder) on Opus Books En<->Fr. We
+reproduce the REPLICATION-SCHEME orderings two ways: (a) a prefix-LM
+seq2seq surrogate (decoder-only stack over [source ; target], loss on the
+target) used by the main benchmarks, and (b) the TRUE encoder-decoder in
+repro.models.encdec (benchmarks/bench_encdec.py) — both give the same
+scheme ordering. Benchmarks use .reduced() variants of this config on CPU.
+"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="t5-repro",
+    family="dense",
+    kind="decoder",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=32_128,
+    mlp_type="gelu",
+    rope_kind="rope",
+    tie_embeddings=True,
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="paper (T5-Large surrogate), arXiv:1910.10683",
+))

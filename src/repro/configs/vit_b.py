@@ -1,0 +1,26 @@
+"""vit-b: the paper's vision experiment model (ViT-B/16 224x224, Cifar100):
+12L d768 12H d_ff 3072, encoder + classifier; patch embedding stubbed
+(patch embeddings arrive precomputed). [paper §ViT; arXiv:2010.11929]"""
+from repro.configs import register
+from repro.models.common import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="vit-b",
+    family="vision",
+    kind="encoder",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=100,
+    n_classes=100,
+    causal=False,
+    rope_kind="none",
+    mlp_type="gelu",
+    norm_type="layernorm",
+    input_mode="embeddings",
+    fsdp_axes=("model",),
+    repl_axes=("data",),
+    source="paper (ViT-B/16 on Cifar100), arXiv:2010.11929",
+))

@@ -1,0 +1,18 @@
+"""The paper's primary contribution: decoupled-momentum replication (FlexDeMo /
+DeToNATION) — replicators, decoupled optimizers, DCT compression."""
+from repro.core.flexdemo import FlexConfig, communicate_tree, tree_wire_bytes
+from repro.core import compression, dct
+from repro.core.replicators import make_replicator, available
+from repro.core.optimizers import make_optimizer, apply_updates
+
+__all__ = [
+    "FlexConfig",
+    "communicate_tree",
+    "tree_wire_bytes",
+    "compression",
+    "dct",
+    "make_replicator",
+    "available",
+    "make_optimizer",
+    "apply_updates",
+]

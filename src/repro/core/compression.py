@@ -1,0 +1,133 @@
+"""Chunking, top-k extraction, and wire-payload accounting for replication schemes.
+
+Terminology (paper):
+  compression rate r  -- fraction of the full-gradient bandwidth a scheme uses.
+  chunk (s)           -- DCT chunk length for the DeMo replicator.
+  topk (k)            -- per-chunk number of coefficients DeMo transmits.
+
+Wire format per scheme (per parameter shard of ``numel`` elements, per step):
+  full      : numel * value_bytes
+  demo      : n_chunks * k * (value_bytes + index_bytes)   (indices must travel)
+  random    : n_sel   * value_bytes                        (indices reproduced from seed)
+  striding  : n_sel   * value_bytes                        (indices reproduced from stride)
+  diloco(n) : numel * value_bytes / n                      (full sync every n-th step)
+
+``random``/``striding`` therefore move 2x the values of ``demo`` at equal
+bandwidth when index_bytes == value_bytes (the paper's "double the amount of
+data, on the same bandwidth").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct
+
+
+# ---------------------------------------------------------------------------
+# chunking
+
+
+def pad_to_multiple(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    n = x.size
+    pad = (-n) % multiple
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+def chunk(x: jnp.ndarray, chunk_size: int) -> jnp.ndarray:
+    """Flatten ``x`` and reshape to (n_chunks, chunk_size), zero-padded."""
+    flat = pad_to_multiple(x, chunk_size)
+    return flat.reshape(-1, chunk_size)
+
+
+def unchunk(chunks: jnp.ndarray, shape: tuple[int, ...]) -> jnp.ndarray:
+    n = math.prod(shape) if shape else 1
+    return chunks.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# top-k in the DCT domain (the DeMo extractor)
+
+
+def dct_topk_extract(
+    m: jnp.ndarray, chunk_size: int, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """DeMo's ExtractFastComponents on a single tensor.
+
+    Returns ``(values, indices, q)`` where ``values/indices`` are the per-chunk
+    top-|k| DCT-II coefficients (shape (n_chunks, k)) -- the wire payload -- and
+    ``q`` is the decoded (time-domain) extracted component with ``m``'s shape,
+    i.e. what must be subtracted from the local momentum.
+    """
+    c = chunk(m, chunk_size)                      # (C, s)
+    basis = dct.dct_basis(chunk_size, c.dtype)
+    coeff = c @ basis.T                           # DCT-II
+    mag = jnp.abs(coeff)
+    _, idx = jax.lax.top_k(mag, k)                # (C, k)
+    vals = jnp.take_along_axis(coeff, idx, axis=-1)
+    q = decode_dct_topk(vals, idx, chunk_size, m.shape)
+    return vals, idx, q
+
+
+def decode_dct_topk(
+    vals: jnp.ndarray, idx: jnp.ndarray, chunk_size: int, shape: tuple[int, ...]
+) -> jnp.ndarray:
+    """Scatter the top-k coefficients back into chunks and inverse-DCT."""
+    n_chunks = vals.shape[0]
+    coeff = jnp.zeros((n_chunks, chunk_size), vals.dtype)
+    coeff = jnp.put_along_axis(coeff, idx, vals, axis=-1, inplace=False)
+    basis = dct.dct_basis(chunk_size, vals.dtype)
+    return unchunk(coeff @ basis, shape)
+
+
+# ---------------------------------------------------------------------------
+# index masks for seeded schemes
+
+
+def random_mask(shape: tuple[int, ...], rate: float, seed, step) -> jnp.ndarray:
+    """Bernoulli(rate) mask, reproducible from (seed, step) on every replica."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.random.bernoulli(key, rate, shape)
+
+
+def striding_mask(shape: tuple[int, ...], stride: int, step) -> jnp.ndarray:
+    """Every ``stride``-th element; the offset rotates with the step."""
+    n = math.prod(shape) if shape else 1
+    offset = step % stride
+    return ((jnp.arange(n) % stride) == offset).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    value_bytes: int = 4   # fp32 payload (paper's dtype study: fp32 > bf16/fp16)
+    index_bytes: int = 2   # uint16 suffices for chunk <= 65536
+
+
+def rate_to_topk(rate: float, chunk_size: int, wire: WireFormat = WireFormat()) -> int:
+    """DeMo top-k that matches a target bandwidth ``rate`` (vs full fp32 sync)."""
+    per_coeff = wire.value_bytes + wire.index_bytes
+    k = int(round(rate * chunk_size * wire.value_bytes / per_coeff))
+    return max(1, min(chunk_size, k))
+
+
+def demo_wire_bytes(numel: int, chunk_size: int, k: int, wire: WireFormat = WireFormat()) -> int:
+    n_chunks = math.ceil(numel / chunk_size)
+    return n_chunks * k * (wire.value_bytes + wire.index_bytes)
+
+
+def masked_wire_bytes(numel: int, rate: float, wire: WireFormat = WireFormat()) -> int:
+    return int(math.ceil(numel * rate)) * wire.value_bytes
+
+
+def full_wire_bytes(numel: int, wire: WireFormat = WireFormat()) -> int:
+    return numel * wire.value_bytes

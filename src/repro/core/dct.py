@@ -1,0 +1,49 @@
+"""Orthonormal DCT-II / DCT-III (inverse) transforms, chunked along the last dim.
+
+DeMo (Peng et al., 2024) extracts the "fast moving" momentum components in the
+frequency domain: each parameter tensor is cut into fixed-size chunks, each chunk
+is DCT-II transformed, and the top-k coefficients by magnitude are selected.
+
+We implement the transform as a matmul against a precomputed orthonormal basis
+(MXU friendly on TPU; the Pallas kernel in ``repro.kernels.dct_topk`` fuses
+basis-matmul -> |top-k| -> mask -> inverse matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=64)
+def _dct_basis_np(n: int) -> np.ndarray:
+    """Orthonormal DCT-II basis C, shape (n, n): y = C @ x.
+
+    C[k, i] = s_k * cos(pi/n * (i + 0.5) * k),  s_0 = sqrt(1/n), s_k = sqrt(2/n).
+    C is orthogonal: C.T @ C = I, so the inverse (DCT-III) is x = C.T @ y.
+    """
+    i = np.arange(n)
+    k = np.arange(n)[:, None]
+    basis = np.cos(np.pi / n * (i[None, :] + 0.5) * k)
+    scale = np.full((n, 1), np.sqrt(2.0 / n))
+    scale[0, 0] = np.sqrt(1.0 / n)
+    return (basis * scale).astype(np.float64)
+
+
+def dct_basis(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(_dct_basis_np(n), dtype=dtype)
+
+
+def dct(x: jnp.ndarray, basis: jnp.ndarray | None = None) -> jnp.ndarray:
+    """DCT-II along the last dimension (orthonormal)."""
+    n = x.shape[-1]
+    c = dct_basis(n, x.dtype) if basis is None else basis
+    return x @ c.T
+
+
+def idct(y: jnp.ndarray, basis: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Inverse of :func:`dct` (DCT-III, orthonormal)."""
+    n = y.shape[-1]
+    c = dct_basis(n, y.dtype) if basis is None else basis
+    return y @ c

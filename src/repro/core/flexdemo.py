@@ -1,0 +1,87 @@
+"""FlexDeMo orchestration: config -> replicator; tree-level communicate.
+
+This module is the paper's Algorithm 1 glue. Gradients arriving here are
+assumed to already be reduce-scattered over the sharding group S (that happens
+automatically as the transpose of the FSDP param all-gather inside the
+train step); what remains is the decoupled momentum update and the compressed
+synchronization over the replication group R.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression
+from repro.core.replicators import base as rbase
+from repro.core.replicators import make_replicator
+from repro.utils.tree import tree_map_with_path_rng
+
+
+@dataclasses.dataclass(frozen=True)
+class FlexConfig:
+    """Replication-scheme configuration (paper's studied hyper-parameters)."""
+
+    scheme: str = "demo"            # demo | random | striding | diloco | full | none
+    rate: float = 1 / 16            # target bandwidth compression rate vs full sync
+    chunk_size: int = 64            # DeMo chunk size s
+    topk: int | None = None         # DeMo k; derived from rate when None
+    sign: bool = True               # sign-before-sync (appendix B: beneficial)
+    sync_impl: str = "gather"       # gather (faithful) | psum (beyond-paper)
+    value_bytes: int = 4            # wire dtype study (fp32=4 / bf16=2)
+
+    def make(self) -> rbase.Replicator:
+        wire = compression.WireFormat(value_bytes=self.value_bytes)
+        if self.scheme == "demo":
+            k = self.topk
+            if k is None:
+                k = compression.rate_to_topk(self.rate, self.chunk_size, wire)
+            return make_replicator("demo", chunk_size=self.chunk_size, topk=k, wire=wire)
+        if self.scheme == "random":
+            return make_replicator("random", rate=self.rate, wire=wire, impl=self.sync_impl)
+        if self.scheme == "striding":
+            stride = max(1, int(round(1 / self.rate)))
+            return make_replicator("striding", stride=stride, wire=wire, impl=self.sync_impl)
+        if self.scheme == "diloco":
+            period = max(1, int(round(1 / self.rate)))
+            return make_replicator("diloco", period=period, wire=wire)
+        if self.scheme in ("full", "none"):
+            return make_replicator(self.scheme, **({"wire": wire} if self.scheme == "full" else {}))
+        raise KeyError(f"unknown scheme {self.scheme!r}")
+
+
+def communicate_tree(
+    replicator: rbase.Replicator,
+    momentum,
+    *,
+    step,
+    axes: Sequence[str],
+    sign: bool,
+    salt: int = 0,
+):
+    """Apply the replicator leaf-wise. Returns (Q_tree, residual_tree, bytes)."""
+    wire_total = [0]
+
+    def leaf(m, *, seed):
+        out = replicator.communicate_leaf(
+            m, step=step, seed=seed, axes=axes, sign=sign
+        )
+        wire_total[0] += out.wire_bytes
+        return (out.q_sync, out.m_residual)
+
+    pairs = tree_map_with_path_rng(leaf, momentum, salt=salt)
+    q = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return q, res, wire_total[0]
+
+
+def tree_wire_bytes(replicator: rbase.Replicator, params) -> int:
+    """Modeled inter-node bytes per step per replica for a whole param tree."""
+    import numpy as np
+
+    return sum(
+        replicator.wire_bytes(int(np.prod(p.shape)) if p.shape else 1)
+        for p in jax.tree_util.tree_leaves(params)
+    )

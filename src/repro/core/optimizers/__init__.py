@@ -1,0 +1,31 @@
+from repro.core.optimizers.base import Optimizer, OptimizerAux, apply_updates
+from repro.core.optimizers.demo_sgd import demo_sgd
+from repro.core.optimizers.decoupled_adamw import decoupled_adamw
+from repro.core.optimizers.adamw import adamw, sgd
+
+_FACTORIES = {
+    "demo_sgd": demo_sgd,
+    "decoupled_adamw": decoupled_adamw,
+    "adamw": adamw,
+    "sgd": sgd,
+}
+
+
+def make_optimizer(name: str, lr, flex=None, **kwargs) -> Optimizer:
+    if name in ("adamw", "sgd"):
+        return _FACTORIES[name](lr, **kwargs)
+    from repro.core.flexdemo import FlexConfig
+
+    return _FACTORIES[name](lr, flex or FlexConfig(), **kwargs)
+
+
+__all__ = [
+    "Optimizer",
+    "OptimizerAux",
+    "apply_updates",
+    "demo_sgd",
+    "decoupled_adamw",
+    "adamw",
+    "sgd",
+    "make_optimizer",
+]

@@ -1,0 +1,48 @@
+"""Optimizer protocol (optax-like, but replication-aware).
+
+An optimizer is a pair of pure functions:
+
+  init(params)                          -> state pytree
+  update(grads, state, params, *, axes) -> (updates, new_state, aux)
+
+``axes`` are the mesh axis names of the replication group R; the same code
+runs with ``axes=()`` on a single device, under shard_map on a mesh, and under
+the vmap simulator in tests. ``updates`` are ADDED to params (sign convention:
+updates already include the -lr factor).
+
+``aux`` carries the modeled wire bytes so training loops / benchmarks can
+report communication without re-deriving it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class OptimizerAux(NamedTuple):
+    wire_bytes: int          # modeled inter-node payload bytes this step
+    extras: dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any, OptimizerAux]]
+    name: str = "optimizer"
+    # True when parameters may drift across R between syncs (DiLoCo):
+    # the train state must then store params with a leading replica axis.
+    params_diverge: bool = False
+    # params postprocess hook (federated averaging for DiLoCo); identity else.
+    postprocess_params: Callable[..., Any] = lambda params, *, step, axes: params
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def resolve_lr(lr, step):
+    """lr may be a float or a schedule ``step -> float``."""
+    return lr(step) if callable(lr) else lr

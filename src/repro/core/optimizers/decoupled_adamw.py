@@ -1,0 +1,81 @@
+"""Decoupled AdamW (this paper): AdamW whose moments are never synchronized.
+
+Communication structure mirrors DeMo-SGD: a decoupled accumulator collects
+gradients locally, the replicator extracts + synchronizes the compressed
+component Q, and AdamW consumes Q as its gradient. The first/second moments
+are local state ("we do not share the first and seconds momenta, which would
+require 2-3 times more communication"); because Q is identical across R for
+per-step schemes, the moments stay consistent without traffic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flexdemo
+from repro.core.optimizers import base
+from repro.utils.tree import tree_zeros_like
+
+
+def decoupled_adamw(
+    lr,
+    flex: flexdemo.FlexConfig = flexdemo.FlexConfig(),
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    compression_decay: float = 0.999,
+) -> base.Optimizer:
+    replicator = flex.make()
+
+    def init(params):
+        z = lambda: tree_zeros_like(params, jnp.float32)
+        return {"acc": z(), "m1": z(), "m2": z(), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, *, axes: Sequence[str] = ()):
+        step = state["step"]
+        acc = jax.tree_util.tree_map(
+            lambda a, g: compression_decay * a + g.astype(jnp.float32),
+            state["acc"], grads,
+        )
+        q, acc_res, wire = flexdemo.communicate_tree(
+            replicator, acc, step=step, axes=axes, sign=flex.sign
+        )
+        t = (step + 1).astype(jnp.float32)
+        eta = base.resolve_lr(lr, step)
+
+        def moments(m1, m2, g):
+            m1n = b1 * m1 + (1 - b1) * g
+            m2n = b2 * m2 + (1 - b2) * g * g
+            return m1n, m2n
+
+        m1m2 = jax.tree_util.tree_map(
+            lambda m1, m2, g: moments(m1, m2, g), state["m1"], state["m2"], q
+        )
+        m1 = jax.tree_util.tree_map(lambda p: p[0], m1m2, is_leaf=lambda x: isinstance(x, tuple))
+        m2 = jax.tree_util.tree_map(lambda p: p[1], m1m2, is_leaf=lambda x: isinstance(x, tuple))
+
+        def upd(m1l, m2l, p):
+            m1h = m1l / (1 - b1 ** t)
+            m2h = m2l / (1 - b2 ** t)
+            u = -eta * (m1h / (jnp.sqrt(m2h) + eps) + weight_decay * p.astype(jnp.float32))
+            return u
+
+        updates = jax.tree_util.tree_map(upd, m1, m2, params)
+        new_state = {"acc": acc_res, "m1": m1, "m2": m2, "step": step + 1}
+        return updates, new_state, base.OptimizerAux(wire, {"lr": eta})
+
+    return base.Optimizer(
+        init=init,
+        update=update,
+        name=f"decoupled_adamw[{flex.scheme}@{flex.rate:g}]",
+        params_diverge=replicator.params_diverge,
+        postprocess_params=functools.partial(_post, replicator),
+    )
+
+
+def _post(replicator, params, *, step, axes):
+    return replicator.postprocess_params(params, step=step, axes=axes)

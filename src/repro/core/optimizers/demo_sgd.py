@@ -1,0 +1,70 @@
+"""DeMo-SGD: SGD with decoupled momentum + compressed replication (Alg. 1).
+
+The paper's main optimizer. Per step, per parameter shard:
+
+    m   <- beta * m + g                (local, decoupled across R)
+    q   <- Extract(m)                  (replicator: DCT top-k / random / ...)
+    m   <- m - q                       (residual stays local)
+    Q   <- Sync(sign?(q), R)           (the only inter-node traffic)
+    p   <- p - lr * Q                  (identical on all replicas -> params
+                                        stay in sync, except DiLoCo)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flexdemo
+from repro.core.optimizers import base
+from repro.utils.tree import tree_zeros_like
+
+
+def demo_sgd(
+    lr,
+    flex: flexdemo.FlexConfig = flexdemo.FlexConfig(),
+    momentum_decay: float = 0.999,
+    weight_decay: float = 0.0,
+) -> base.Optimizer:
+    replicator = flex.make()
+
+    def init(params):
+        return {
+            "m": tree_zeros_like(params, jnp.float32),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, *, axes: Sequence[str] = ()):
+        step = state["step"]
+        m = jax.tree_util.tree_map(
+            lambda mm, g: momentum_decay * mm + g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        q, m_res, wire = flexdemo.communicate_tree(
+            replicator, m, step=step, axes=axes, sign=flex.sign
+        )
+        eta = base.resolve_lr(lr, step)
+
+        def upd(qq, p):
+            u = -eta * qq
+            if weight_decay:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree_util.tree_map(upd, q, params)
+        new_state = {"m": m_res, "step": step + 1}
+        return updates, new_state, base.OptimizerAux(wire, {"lr": eta})
+
+    return base.Optimizer(
+        init=init,
+        update=update,
+        name=f"demo_sgd[{flex.scheme}@{flex.rate:g}]",
+        params_diverge=replicator.params_diverge,
+        postprocess_params=functools.partial(_post, replicator),
+    )
+
+
+def _post(replicator, params, *, step, axes):
+    return replicator.postprocess_params(params, step=step, axes=axes)

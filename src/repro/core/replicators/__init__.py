@@ -1,0 +1,24 @@
+from repro.core.replicators.base import (
+    Replicator,
+    ReplicatorOutput,
+    make_replicator,
+    available,
+)
+from repro.core.replicators.demo import DeMoReplicator
+from repro.core.replicators.random import RandomReplicator
+from repro.core.replicators.striding import StridingReplicator
+from repro.core.replicators.diloco import DiLoCoReplicator
+from repro.core.replicators.full import FullReplicator, NoneReplicator
+
+__all__ = [
+    "Replicator",
+    "ReplicatorOutput",
+    "make_replicator",
+    "available",
+    "DeMoReplicator",
+    "RandomReplicator",
+    "StridingReplicator",
+    "DiLoCoReplicator",
+    "FullReplicator",
+    "NoneReplicator",
+]

@@ -1,0 +1,61 @@
+"""DiLoCo replication (Douillard et al. 2023, as framed by this paper):
+synchronize only every ``period``-th optimization step.
+
+Between syncs every replica applies its *local* momentum update, so the
+parameters diverge across R (``params_diverge = True``); on sync steps the
+parameters are federated-averaged over R (the outer step). Compression rate
+is 1/period.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression
+from repro.core.replicators import base
+
+
+@base.register
+@dataclasses.dataclass(frozen=True)
+class DiLoCoReplicator(base.Replicator):
+    name = "diloco"
+    period: int = 16
+    wire: compression.WireFormat = compression.WireFormat()
+
+    params_diverge = True
+
+    def communicate_leaf(
+        self,
+        m: jnp.ndarray,
+        *,
+        step: jnp.ndarray,
+        seed: int,
+        axes: Sequence[str],
+        sign: bool,
+    ) -> base.ReplicatorOutput:
+        del seed
+        # local (divergent) momentum update every step (inner momentum-SGD);
+        # synchronization happens through the parameter average below.
+        q_local = base.maybe_sign(m, sign)
+        return base.ReplicatorOutput(
+            q_sync=q_local,
+            m_residual=m,
+            wire_bytes=self.wire_bytes(m.size),
+        )
+
+    def postprocess_params(self, params, *, step: jnp.ndarray, axes: Sequence[str]):
+        if not axes:
+            return params
+        ax = tuple(axes)
+
+        def avg(p):
+            synced = jax.lax.pmean(p, ax)
+            return jnp.where(step % self.period == self.period - 1, synced, p)
+
+        return jax.tree_util.tree_map(avg, params)
+
+    def wire_bytes(self, numel: int) -> int:
+        return compression.full_wire_bytes(numel, self.wire) // self.period

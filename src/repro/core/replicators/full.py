@@ -1,0 +1,74 @@
+"""Full replication: classic hybrid-FSDP gradient synchronization (baseline).
+
+Every step the whole momentum/gradient is all-reduced (mean) over R. With the
+AdamW optimizer on top this is exactly the paper's "conventional Hybrid-FSDP
+with AdamW" baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression
+from repro.core.replicators import base
+
+
+@base.register
+@dataclasses.dataclass(frozen=True)
+class FullReplicator(base.Replicator):
+    name = "full"
+    wire: compression.WireFormat = compression.WireFormat()
+
+    def communicate_leaf(
+        self,
+        m: jnp.ndarray,
+        *,
+        step: jnp.ndarray,
+        seed: int,
+        axes: Sequence[str],
+        sign: bool,
+    ) -> base.ReplicatorOutput:
+        del step, seed
+        q = base.maybe_sign(m, sign)
+        q = base.mean_over(q, tuple(axes))
+        # full sync transmits the momentum but does NOT consume it: this is
+        # classic synchronized momentum-SGD (mean of per-replica momenta ==
+        # momentum of the mean gradient).
+        return base.ReplicatorOutput(
+            q_sync=q,
+            m_residual=m,
+            wire_bytes=self.wire_bytes(m.size),
+        )
+
+    def wire_bytes(self, numel: int) -> int:
+        return compression.full_wire_bytes(numel, self.wire)
+
+
+@base.register
+@dataclasses.dataclass(frozen=True)
+class NoneReplicator(base.Replicator):
+    name = "none"
+
+    """No replication at all: pure local training (|R| = 1 edge case)."""
+
+    def communicate_leaf(
+        self,
+        m: jnp.ndarray,
+        *,
+        step: jnp.ndarray,
+        seed: int,
+        axes: Sequence[str],
+        sign: bool,
+    ) -> base.ReplicatorOutput:
+        del step, seed, axes
+        return base.ReplicatorOutput(
+            q_sync=base.maybe_sign(m, sign),
+            m_residual=m,          # keep local momentum (plain momentum-SGD)
+            wire_bytes=0,
+        )
+
+    def wire_bytes(self, numel: int) -> int:
+        return 0

@@ -1,0 +1,60 @@
+"""Striding replication (this paper): every n-th momentum entry.
+
+The offset rotates with the training step so all entries are visited every
+``stride`` steps. Indices are derivable on every replica -> no index traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression
+from repro.core.replicators import base
+
+
+@base.register
+@dataclasses.dataclass(frozen=True)
+class StridingReplicator(base.Replicator):
+    name = "striding"
+    stride: int = 16          # compression rate = 1/stride
+    wire: compression.WireFormat = compression.WireFormat()
+    impl: str = "gather"
+
+    def communicate_leaf(
+        self,
+        m: jnp.ndarray,
+        *,
+        step: jnp.ndarray,
+        seed: int,
+        axes: Sequence[str],
+        sign: bool,
+    ) -> base.ReplicatorOutput:
+        del seed
+        n = m.size
+        n_sel = math.ceil(n / self.stride)
+        flat = compression.pad_to_multiple(m, self.stride)
+        offset = step % self.stride
+        idx = jnp.arange(n_sel) * self.stride + offset
+        vals = base.maybe_sign(flat[idx], sign)
+
+        if axes:
+            ax = tuple(axes)
+            if self.impl == "psum":
+                vals = jax.lax.pmean(vals, ax)
+            else:
+                vals = jax.lax.all_gather(vals, ax, tiled=False).mean(axis=0)
+
+        q_flat = jnp.zeros_like(flat).at[idx].set(vals)
+        m_flat = flat.at[idx].set(0.0)
+        return base.ReplicatorOutput(
+            q_sync=q_flat[:n].reshape(m.shape),
+            m_residual=m_flat[:n].reshape(m.shape),
+            wire_bytes=self.wire_bytes(n),
+        )
+
+    def wire_bytes(self, numel: int) -> int:
+        return compression.masked_wire_bytes(numel, 1.0 / self.stride, self.wire)

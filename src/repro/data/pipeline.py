@@ -1,0 +1,53 @@
+"""Host -> device data pipeline: shard placement + simple prefetch."""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def to_device(batch: dict, shardings=None) -> dict:
+    if shardings is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    return {k: jax.device_put(jnp.asarray(v), shardings[k])
+            for k, v in batch.items()}
+
+
+def batches(stream, n_steps: int, shardings=None) -> Iterator[dict]:
+    for step in range(n_steps):
+        yield to_device(stream.batch(step), shardings)
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    """Background-thread prefetch (host-side generation overlaps compute)."""
+    q: collections.deque = collections.deque()
+    lock = threading.Condition()
+    done = [False]
+
+    def worker():
+        for item in it:
+            with lock:
+                while len(q) >= depth:
+                    lock.wait()
+                q.append(item)
+                lock.notify_all()
+        with lock:
+            done[0] = True
+            lock.notify_all()
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        with lock:
+            while not q and not done[0]:
+                lock.wait()
+            if q:
+                item = q.popleft()
+                lock.notify_all()
+            elif done[0]:
+                return
+        yield item

@@ -1,0 +1,174 @@
+"""Synthetic, *learnable* data streams for CPU-scale convergence experiments.
+
+The paper's three domains map to three generators:
+  * bigram LM        -> OLMo2 causal-LM experiments (Fig. 3-6)
+  * seq2seq mapping  -> T5 Opus-Books translation (Fig. 1-2a): the target is
+                        a token-mapped reverse of the source; loss is masked
+                        to the target half (prefix-LM surrogate, DESIGN.md)
+  * clustered embeds -> ViT Cifar100 (Fig. 2b) and HuBERT frame prediction
+
+All generators are pure functions of (seed, step) so every data-parallel
+replica reproduces its own shard deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BigramLM:
+    """Tokens drawn from a fixed random bigram chain — cross-entropy has a
+    known floor, and small models fit it quickly."""
+
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    temperature: float = 1.2
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        logits = rng.randn(self.vocab_size, self.vocab_size) * self.temperature
+        p = np.exp(logits - logits.max(-1, keepdims=True))
+        self.trans = (p / p.sum(-1, keepdims=True)).astype(np.float64)
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.RandomState(self.seed * 100003 + step)
+        b, s = self.batch_size, self.seq_len
+        toks = np.zeros((b, s + 1), np.int32)
+        toks[:, 0] = rng.randint(0, self.vocab_size, b)
+        # vectorized chain sampling via inverse-CDF
+        cdf = np.cumsum(self.trans, axis=-1)
+        for t in range(s):
+            u = rng.rand(b)[:, None]
+            toks[:, t + 1] = (cdf[toks[:, t]] < u).sum(-1)
+        return {
+            "inputs": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "positions": np.broadcast_to(np.arange(s)[None], (b, s)).copy(),
+        }
+
+
+@dataclasses.dataclass
+class Seq2Seq:
+    """[src ; SEP ; tgt] where tgt = pi(reverse(src)) for a fixed random
+    permutation pi. Loss mask covers the target half only."""
+
+    vocab_size: int
+    src_len: int
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed + 7)
+        self.perm = rng.permutation(self.vocab_size - 2) + 2  # 0=pad 1=sep
+        self.sep = 1
+
+    @property
+    def seq_len(self):
+        return 2 * self.src_len + 1
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.RandomState(self.seed * 99991 + step)
+        b, L = self.batch_size, self.src_len
+        src = rng.randint(2, self.vocab_size, (b, L)).astype(np.int32)
+        tgt = self.perm[src[:, ::-1] - 2].astype(np.int32)
+        seq = np.concatenate(
+            [src, np.full((b, 1), self.sep, np.int32), tgt], axis=1)
+        s = self.seq_len - 1
+        inputs, labels = seq[:, :-1], seq[:, 1:]
+        mask = np.zeros((b, s), np.float32)
+        mask[:, L:] = 1.0   # predict SEP->tgt transitions and tgt tokens
+        return {
+            "inputs": inputs,
+            "labels": labels,
+            "positions": np.broadcast_to(np.arange(s)[None], (b, s)).copy(),
+            "mask": mask,
+        }
+
+
+@dataclasses.dataclass
+class ClusteredEmbeddings:
+    """Class-conditional gaussian "patch/frame embeddings".
+
+    per_frame=False -> one label per example (ViT classification);
+    per_frame=True  -> one label per position (HuBERT masked prediction).
+    """
+
+    n_classes: int
+    d_model: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    noise: float = 1.0
+    per_frame: bool = False
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed + 13)
+        self.means = rng.randn(self.n_classes, self.d_model).astype(np.float32)
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.RandomState(self.seed * 7919 + step)
+        b, s, d = self.batch_size, self.seq_len, self.d_model
+        if self.per_frame:
+            labels = rng.randint(0, self.n_classes, (b, s)).astype(np.int32)
+            x = self.means[labels]
+        else:
+            labels = rng.randint(0, self.n_classes, b).astype(np.int32)
+            x = np.repeat(self.means[labels][:, None, :], s, axis=1)
+        x = x + rng.randn(b, s, d).astype(np.float32) * self.noise
+        return {
+            "inputs": x.astype(np.float32),
+            "labels": labels,
+            "positions": np.broadcast_to(np.arange(s)[None], (b, s)).copy(),
+        }
+
+
+class Seq2SeqEncDec:
+    """Seq2Seq reshaped for the TRUE encoder-decoder: separate src / tgt
+    streams with teacher forcing (tgt_in = [SEP; tgt[:-1]])."""
+
+    def __init__(self, vocab_size, src_len, batch_size, seed=0):
+        self.inner = Seq2Seq(vocab_size, src_len, batch_size, seed)
+        self.src_len = src_len
+
+    def batch(self, step):
+        b = self.inner.batch(step)
+        L = self.src_len
+        src = b["inputs"][:, :L]
+        tgt = b["labels"][:, L:]                      # the mapped reverse
+        sep = np.full((tgt.shape[0], 1), 1, np.int32)
+        tgt_in = np.concatenate([sep, tgt[:, :-1]], axis=1)
+        return {"src": src, "tgt_in": tgt_in, "tgt_out": tgt}
+
+
+def make_stream(cfg, global_batch: int, seq_len: int, seed: int = 0,
+                task: str | None = None):
+    """Pick the generator matching an ArchConfig."""
+    if task == "seq2seq":
+        return Seq2Seq(cfg.vocab_size, (seq_len - 1) // 2, global_batch, seed)
+    if cfg.kind == "encoder" and cfg.input_mode == "embeddings":
+        return ClusteredEmbeddings(
+            cfg.n_classes, cfg.d_model, seq_len, global_batch, seed,
+            per_frame=(cfg.family == "audio"))
+    if cfg.input_mode == "embeddings":
+        # decoder with stub frontend (VLM): model sees embeddings, predicts
+        # token labels from a bigram chain projected to embeddings
+        base = BigramLM(cfg.vocab_size, seq_len, global_batch, seed)
+        rng = np.random.RandomState(seed + 23)
+        proj = rng.randn(cfg.vocab_size, cfg.d_model).astype(np.float32) * 0.5
+
+        class _VLM:
+            seq_len_ = seq_len
+
+            def batch(self, step):
+                b = base.batch(step)
+                x = proj[b["inputs"]]
+                pos = b["positions"]
+                return {"inputs": x, "labels": b["labels"],
+                        "positions": np.broadcast_to(pos[None], (3,) + pos.shape).copy()}
+
+        return _VLM()
+    return BigramLM(cfg.vocab_size, seq_len, global_batch, seed)

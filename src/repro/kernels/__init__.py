@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots:
+
+  dct_topk : fused chunked DCT-II -> |top-k| -> mask -> inverse DCT
+             (DeMo's ExtractFastComponents — runs on every param shard,
+             every step)
+  wkv6     : RWKV-6 chunked linear-attention contraction with
+             data-dependent decay
+  rglru    : RG-LRU blocked linear scan (Griffin recurrent block)
+
+Each kernel ships ops.py (jit'd wrapper around pl.pallas_call with explicit
+BlockSpec VMEM tiling) and ref.py (pure-jnp oracle); tests sweep shapes and
+dtypes in interpret mode (this container is CPU-only; TPU v5e is the target).
+"""

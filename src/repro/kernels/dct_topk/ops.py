@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the dct_topk kernel: pads/reshapes a flat
+momentum shard into chunk rows, runs the fused kernel, and unpads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dct
+from repro.kernels.dct_topk.dct_topk import dct_topk_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size", "k", "interpret"))
+def dct_topk(m: jnp.ndarray, chunk_size: int, k: int,
+             interpret: bool = False):
+    """m: any-shape f32 tensor. Returns (vals (C,k), idx (C,k), q like m)."""
+    flat = m.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % chunk_size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, chunk_size)
+    c = chunks.shape[0]
+    # tile size: biggest power-of-two divisor of C up to 256
+    tile = 1
+    while tile < 256 and c % (tile * 2) == 0:
+        tile *= 2
+    basis = dct.dct_basis(chunk_size, jnp.float32)
+    vals, idx, q = dct_topk_call(chunks, basis, k, tile_c=tile,
+                                 interpret=interpret)
+    q_flat = q.reshape(-1)[:n]
+    return vals, idx, q_flat.reshape(m.shape)

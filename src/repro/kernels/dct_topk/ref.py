@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the dct_topk kernel (shares the library's canonical
+implementation, which the replicator tests already validate)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import compression, dct
+
+
+def dct_topk_ref(chunks: jnp.ndarray, k: int):
+    """chunks: (C, s). Returns (vals, idx, q) with q shaped (C, s).
+
+    Note: ties in |coefficient| may be broken differently than the kernel;
+    tests compare the DECODED q (which is tie-invariant up to equal values)
+    and the sorted (value, index) payload sets.
+    """
+    c, s = chunks.shape
+    basis = dct.dct_basis(s, jnp.float32)
+    coeff = chunks.astype(jnp.float32) @ basis.T
+    import jax
+
+    _, idx = jax.lax.top_k(jnp.abs(coeff), k)
+    vals = jnp.take_along_axis(coeff, idx, axis=-1)
+    q = compression.decode_dct_topk(vals, idx, s, (c, s))
+    return vals, idx, q

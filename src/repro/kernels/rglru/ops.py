@@ -1,0 +1,23 @@
+"""jit'd wrapper for the rglru blocked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.rglru import rglru_scan_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan(a, b, chunk: int = 32, interpret: bool = False):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t along axis 1."""
+    bsz, s, r = a.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    tile = 128
+    while r % tile:
+        tile //= 2
+    return rglru_scan_call(a, b, chunk=c, tile_r=max(tile, 1),
+                           interpret=interpret)

@@ -1,0 +1,11 @@
+"""Oracle for the rglru kernel: the library's associative-scan linrec."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers.rglru import _linscan
+
+
+def rglru_scan_ref(a, b):
+    """a, b: (B, S, R) -> h (B, S, R) f32, h_0-in = 0."""
+    return _linscan(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,26 @@
+"""jit'd wrapper: (B,S,H,hd) model layout <-> (BH,S,hd) kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.wkv6 import wkv6_call
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked(r, k, v, w, u, chunk: int = 32, interpret: bool = False):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd).
+
+    Returns (o (B,S,H,hd) f32, s_fin (B,H,hd,hd) f32) — same contract as
+    repro.models.layers.rwkv6.rwkv6_attend_chunked.
+    """
+    b, s, h, hd = r.shape
+    merge = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    rm, km, vm, wm = (merge(t.astype(jnp.float32)) for t in (r, k, v, w))
+    ub = jnp.broadcast_to(u.astype(jnp.float32)[None], (b, h, hd)).reshape(
+        b * h, hd)
+    o, s_fin = wkv6_call(rm, km, vm, wm, ub, chunk=chunk, interpret=interpret)
+    o = o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    return o, s_fin.reshape(b, h, hd, hd)

@@ -1,0 +1,26 @@
+"""Step-by-step (exact) oracle for the wkv6 kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LOGW_MIN = -3.0
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (BH, S, hd); u: (BH, hd). Sequential recurrence in f32."""
+    f32 = jnp.float32
+    r, k, v, w, u = (t.astype(f32) for t in (r, k, v, w, u))
+    w = jnp.maximum(w, jnp.exp(_LOGW_MIN))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                          # (BH, hd)
+        kv = kt[..., :, None] * vt[..., None, :]     # (BH, hd, hd)
+        ot = jnp.einsum("bk,bkv->bv", rt, S + u[..., :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, ot
+
+    bh, s, hd = r.shape
+    xs = tuple(t.transpose(1, 0, 2) for t in (r, k, v, w))
+    s_fin, o = jax.lax.scan(step, jnp.zeros((bh, hd, hd), f32), xs)
+    return o.transpose(1, 0, 2), s_fin

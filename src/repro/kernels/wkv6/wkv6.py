@@ -1,0 +1,91 @@
+"""RWKV-6 chunked WKV kernel: per-(batch*head) chunk-parallel linear
+attention with data-dependent per-channel decay.
+
+Grid (BH, N): the chunk axis is the FAST (inner, sequential) dimension, so
+the (hd, hd) recurrent state lives in a VMEM scratch that persists across a
+row's chunk iterations (reset at n == 0). Within a chunk everything is a
+pair of MXU matmuls over midpoint-referenced decay factors plus VPU
+elementwise work — the same stabilized contraction as the jnp oracle
+(repro.models.layers.rwkv6.rwkv6_attend_chunked).
+
+VMEM per program (f32): 4 chunk tiles (C, hd) + att (C, C) + state (hd, hd);
+C=32, hd=64 -> ~90 KiB. hd=64 is half an MXU tile — the matmuls pack two
+heads per 128 lane group after Mosaic layout, acceptable for this shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LOGW_MIN = -3.0  # keep in sync with repro.models.layers.rwkv6
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sfin_ref, state):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _():
+        state[...] = jnp.zeros_like(state)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (hd,)
+    c = r.shape[0]
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-30)), _LOGW_MIN)
+    cum = jnp.cumsum(logw, axis=0)            # (C, hd) inclusive
+    cum_ex = cum - logw
+    total = cum[-1:, :]                       # (1, hd)
+    c_mid = cum[c // 2: c // 2 + 1, :]
+
+    a_fac = r * jnp.exp(cum_ex - c_mid)
+    b_fac = k * jnp.exp(c_mid - cum)
+    att = jnp.dot(a_fac, b_fac.T, preferred_element_type=jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    att = jnp.where(cols < rows, att, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)          # (C,)
+
+    s_in = state[...]                                     # (hd, hd)
+    o = (jnp.dot(att, v, preferred_element_type=jnp.float32)
+         + diag[:, None] * v
+         + jnp.dot(r * jnp.exp(cum_ex), s_in,
+                   preferred_element_type=jnp.float32))
+
+    k_scaled = k * jnp.exp(total - cum)
+    s_out = jnp.exp(total).T * s_in + jnp.dot(
+        k_scaled.T, v, preferred_element_type=jnp.float32)
+    state[...] = s_out
+
+    o_ref[0] = o.astype(o_ref.dtype)
+    sfin_ref[0] = s_out
+
+
+def wkv6_call(r, k, v, w, u, chunk: int, interpret: bool = False):
+    """r,k,v,w: (BH, S, hd); u: (BH, hd). Returns (o (BH,S,hd) f32,
+    s_fin (BH, hd, hd) f32)."""
+    bh, s, hd = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    grid = (bh, n)
+    tile = lambda: pl.BlockSpec((1, chunk, hd), lambda b, i: (b, i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[tile(), tile(), tile(), tile(),
+                  pl.BlockSpec((1, hd), lambda b, i: (b, 0))],
+        out_specs=[tile(),
+                   pl.BlockSpec((1, hd, hd), lambda b, i: (b, 0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((r.shape[-1], r.shape[-1]), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

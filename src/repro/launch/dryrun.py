@@ -1,0 +1,312 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on the production mesh and dump memory/cost/collective stats.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # orchestrates subprocesses
+
+cost_analysis() counts a while-loop body ONCE, so per-layer costs come from
+two UNROLLED shallow variants (depth = pattern and 2 x pattern) and are
+extrapolated affinely to the full depth; the full scanned model is compiled
+too — that is the fits-on-device proof (memory_analysis) and the lowering
+proof for the exact production graph.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import SHAPES, combo_supported, get_shape, input_specs
+from repro.core import FlexConfig, make_optimizer
+from repro.launch.hlo_stats import (collective_bytes,
+    collective_bytes_by_axis, stablehlo_collective_bytes)
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import transformer
+from repro.serving.engine import build_prefill_step, build_serve_step, make_serve_plan
+from repro.training.state import make_train_plan
+from repro.training.step import build_train_step
+
+# TPU v5e hardware constants (per chip)
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,     # per link; 2D torus within a pod
+    "dci_bw": 6.25e9,   # inter-pod links (assumed; see DESIGN.md)
+}
+
+OUT_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def _auto_microbatches(cfg, plan) -> int:
+    """Split the per-device batch until BOTH the remat residual stream
+    (n_units x B x S_loc x D bf16) and the attention-logit temp
+    (B x H x S_loc x S f32, plain path) fit the budget."""
+    sizes = plan.mesh_axes
+    b_loc = plan.global_batch // max(
+        1, int(np.prod([sizes[a] for a in plan.batch_axes])))
+    s_loc = plan.seq_len // (sizes.get("model", 1) if plan.seq_axis else 1)
+    units = max(1, cfg.n_layers // len(cfg.layer_pattern))
+    resid = units * b_loc * s_loc * cfg.d_model * 2
+    att = 0
+    if ("attn" in cfg.layer_pattern
+            and plan.seq_len <= min(8192, cfg.attn_flash_threshold)):
+        att = b_loc * cfg.n_heads * s_loc * plan.seq_len * 4  # plain path
+    mb = 1
+    while (resid / mb > 2e9 or att / mb > 1e9) and mb < b_loc:
+        mb *= 2
+    while b_loc % mb:
+        mb *= 2
+    return min(mb, b_loc)
+
+
+def _train_lower(cfg, mesh, shape, microbatches=None):
+    plan = make_train_plan(cfg, mesh, shape.global_batch, shape.seq_len)
+    if microbatches is None:
+        microbatches = _auto_microbatches(cfg, plan)
+    plan = dataclasses.replace(plan, microbatches=microbatches)
+    opt = make_optimizer("demo_sgd", 1e-3, FlexConfig(scheme="demo", rate=1 / 16))
+    step, shardings, _ = build_train_step(cfg, mesh, opt, plan, donate=False)
+
+    from repro.training.state import state_pspecs  # noqa
+
+    params_shapes = jax.eval_shape(
+        functools.partial(transformer.init_model, cfg=cfg),
+        jax.random.PRNGKey(0))
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    n_repl = plan.n_repl
+
+    def lead(t):
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct((n_repl,) + x.shape, x.dtype), t)
+
+    state_sds = {
+        "params": (lead(params_shapes) if opt.params_diverge else params_shapes),
+        "opt": {k: (v if k == "step" else lead(v)) for k, v in opt_shapes.items()},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    batch_sds = input_specs(cfg, shape)
+    lowered = step.lower(state_sds, batch_sds)
+    return lowered, {"plan": _plan_info(plan), "microbatches": microbatches}
+
+
+def _serve_lower(cfg, mesh, shape):
+    plan = make_serve_plan(cfg, mesh, shape.global_batch, shape.seq_len)
+    step, shardings, specs, state_shapes, st_ps = build_serve_step(
+        cfg, mesh, plan, donate=False)
+    sds = input_specs(cfg, shape)
+    params_shapes = jax.eval_shape(
+        functools.partial(transformer.init_model, cfg=cfg),
+        jax.random.PRNGKey(0))
+    # serve weights are bf16
+    params_bf16 = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating)
+            else x.dtype), params_shapes)
+    lowered = step.lower(params_bf16, state_shapes, sds["inputs"], sds["length"])
+    return lowered, {"plan": dataclasses.asdict(plan) | {"cfg": cfg.name}}
+
+
+def _prefill_lower(cfg, mesh, shape):
+    plan = make_serve_plan(cfg, mesh, shape.global_batch, shape.seq_len)
+    step, specs = build_prefill_step(cfg, mesh, plan, shape.seq_len)
+    sds = input_specs(cfg, shape)
+    params_shapes = jax.eval_shape(
+        functools.partial(transformer.init_model, cfg=cfg),
+        jax.random.PRNGKey(0))
+    params_bf16 = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating)
+            else x.dtype), params_shapes)
+    lowered = step.lower(params_bf16, sds["inputs"], sds["positions"])
+    return lowered, {"plan": dataclasses.asdict(plan) | {"cfg": cfg.name}}
+
+
+def _plan_info(plan):
+    d = dataclasses.asdict(plan)
+    d["cfg"] = plan.cfg.name
+    return d
+
+
+_LOWER = {"train": _train_lower, "decode": _serve_lower,
+          "prefill": _prefill_lower}
+
+
+def _compile_stats(lowered):
+    # TPU-faithful wire bytes from the target-independent stablehlo (the CPU
+    # backend upcasts bf16 collectives to f32 in its compiled HLO)
+    coll_lowered = stablehlo_collective_bytes(lowered.as_text())
+    t0 = time.time()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    stats = {
+        "compile_s": dt,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": collective_bytes(hlo),
+        "collectives_lowered": coll_lowered,
+        "collectives_split": collective_bytes_by_axis(hlo, {}),
+    }
+    del compiled
+    return stats
+
+
+def _extrapolate(base, double, n_units_full: float):
+    """Affine cost model: cost(L) = base + (L/p - 1) * (double - base)."""
+    out = {}
+    for key in ("flops", "bytes_accessed"):
+        b, d = base[key], double[key]
+        out[key] = b + (d - b) * (n_units_full - 1.0)
+    for field in ("collectives", "collectives_lowered"):
+        coll = {}
+        for k in base[field]:
+            if k == "counts":
+                continue
+            b = base[field][k]
+            d = double[field][k]
+            coll[k] = b + (d - b) * (n_units_full - 1.0)
+        out[field] = coll
+    split = {}
+    for k in ("ici", "dci"):
+        b = base["collectives_split"][k]
+        d = double["collectives_split"][k]
+        split[k] = b + (d - b) * (n_units_full - 1.0)
+    out["collectives_split"] = split
+    return out
+
+
+def _apply_opts(cfg, opts: str):
+    """--opts "gather_compute_dtype=0,attn_mode=ulysses" -> replace fields."""
+    if not opts:
+        return cfg
+    kv = {}
+    for item in opts.split(","):
+        k, v = item.split("=")
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v not in ("0", "false", "False")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        kv[k] = v
+    return dataclasses.replace(cfg, **kv)
+
+
+def run_combo(arch: str, shape_name: str, mesh_kind: str,
+              skip_costs: bool = False, opts: str = "") -> dict:
+    cfg = _apply_opts(get_config(arch), opts)
+    shape = get_shape(shape_name)
+    multi = mesh_kind == "multi"
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mode": shape.mode, "timestamp": time.time(), "opts": opts,
+    }
+    ok, why = combo_supported(cfg, shape)
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi)
+    lower_fn = _LOWER[shape.mode]
+
+    # 1) full-depth scanned compile: lowering proof + memory analysis
+    lowered, info = lower_fn(cfg, mesh, shape)
+    record.update(info)
+    record["full"] = _compile_stats(lowered)
+    del lowered
+
+    # 2) per-layer costs from unrolled shallow variants (single-pod only)
+    if not skip_costs and not multi:
+        p = len(cfg.layer_pattern)
+        c1 = dataclasses.replace(cfg, n_layers=p, unroll_layers=True)
+        c2 = dataclasses.replace(cfg, n_layers=2 * p, unroll_layers=True)
+        base, _ = lower_fn(c1, mesh, shape)
+        sb = _compile_stats(base)
+        del base
+        dbl, _ = lower_fn(c2, mesh, shape)
+        sd = _compile_stats(dbl)
+        del dbl
+        n_units_full = cfg.n_layers / p
+        record["cost_base"] = sb
+        record["cost_double"] = sd
+        record["extrapolated"] = _extrapolate(sb, sd, n_units_full)
+        record["n_units_full"] = n_units_full
+    record["status"] = "ok"
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-costs", action="store_true")
+    ap.add_argument("--opts", default="", help="cfg overrides k=v,k=v")
+    ap.add_argument("--suffix", default="", help="artifact filename suffix")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                for mesh in ("single", "multi"):
+                    out = os.path.join(args.out, f"{arch}_{shape}_{mesh}.json")
+                    if os.path.exists(out):
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mesh,
+                           "--out", args.out]
+                    if mesh == "multi" or args.skip_costs:
+                        cmd.append("--skip-costs")
+                    print(">>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode:
+                        failures.append((arch, shape, mesh))
+        print("failures:", failures)
+        sys.exit(1 if failures else 0)
+
+    out = os.path.join(
+        args.out, f"{args.arch}_{args.shape}_{args.mesh}{args.suffix}.json")
+    try:
+        rec = run_combo(args.arch, args.shape, args.mesh, args.skip_costs,
+                        args.opts)
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()}
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    print(json.dumps({k: rec.get(k) for k in
+                      ("arch", "shape", "mesh", "status", "reason", "error")}))
+    if rec["status"] == "error":
+        print(rec["traceback"])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Parse collective traffic out of compiled HLO text.
+
+cost_analysis() has no collective-bytes entry, so we regex the module for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, size their result shapes, and convert to per-device wire bytes using
+the replica-group size:
+
+  all-gather        out_bytes * (n-1)/n       (each device receives n-1 shards)
+  all-reduce        2 * bytes * (n-1)/n       (ring: reduce-scatter + gather)
+  reduce-scatter    out_bytes * (n-1)         (receives n-1 partial shards)
+  all-to-all        bytes * (n-1)/n
+  collective-permute bytes
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind + op counts."""
+    out = {k: 0.0 for k in _OPS}
+    counts = {k: 0 for k in _OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result type is on the lhs: "%name = f32[...]{...} all-gather(..."
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)[\s(]",
+                     ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-start" in ls.split(kind)[1][:8]:
+            pass
+        bytes_ = _shape_bytes(m.group(1))
+        n = _group_size(ls)
+        if n <= 1:
+            continue
+        if kind == "all-gather":
+            wire = bytes_ * (n - 1) / n
+        elif kind == "all-reduce":
+            wire = 2.0 * bytes_ * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = bytes_ * (n - 1)
+        elif kind == "all-to-all":
+            wire = bytes_ * (n - 1) / n
+        else:
+            wire = float(bytes_)
+        out[kind] += wire
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _OPS)
+    out["counts"] = counts
+    return out
+
+
+_SH_OP_RE = re.compile(
+    r'"stablehlo\.(all_gather|all_reduce|reduce_scatter|all_to_all|'
+    r'collective_permute)"')
+_SH_TYPE_RE = re.compile(r"\((tensor<[^)]*?)\)\s*->\s*(tensor<[^\s]*)")
+_SH_TENSOR_RE = re.compile(r"tensor<([0-9x]*)x?(\w+)>")
+_SH_GROUPS_RE = re.compile(r"replica_groups\s*=\s*dense<[^>]*>\s*:\s*tensor<(\d+)x(\d+)xi64>")
+
+_SH_DTYPE_BYTES = {"i1": 1, "i8": 1, "ui8": 1, "i16": 2, "ui16": 2,
+                   "bf16": 2, "f16": 2, "i32": 4, "ui32": 4, "f32": 4,
+                   "i64": 8, "ui64": 8, "f64": 8}
+
+
+def _sh_tensor_bytes(t: str) -> int:
+    total = 0
+    for m in _SH_TENSOR_RE.finditer(t):
+        dims, dt = m.group(1), m.group(2)
+        if dt not in _SH_DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split("x"):
+            if d:
+                n *= int(d)
+        total += n * _SH_DTYPE_BYTES[dt]
+    return total
+
+
+def stablehlo_collective_bytes(text: str) -> dict:
+    """Wire-byte accounting from the TARGET-INDEPENDENT stablehlo (the CPU
+    backend's float-normalization pass upcasts bf16 collectives to f32 in the
+    compiled HLO, which would overstate TPU traffic 2x)."""
+    out = {k: 0.0 for k in _OPS}
+    counts = {k: 0 for k in _OPS}
+    for line in text.splitlines():
+        m = _SH_OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).replace("_", "-")
+        tm = _SH_TYPE_RE.search(line)
+        if not tm:
+            continue
+        # use the RESULT type for all_gather (gathered size), operand for rest
+        in_bytes = _sh_tensor_bytes(tm.group(1))
+        out_bytes = _sh_tensor_bytes(tm.group(2))
+        gm = _SH_GROUPS_RE.search(line)
+        n = int(gm.group(2)) if gm else 1
+        if n <= 1:
+            continue
+        if kind == "all-gather":
+            wire = out_bytes * (n - 1) / n
+        elif kind == "all-reduce":
+            wire = 2.0 * in_bytes * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = in_bytes * (n - 1) / n
+        elif kind == "all-to-all":
+            wire = in_bytes * (n - 1) / n
+        else:
+            wire = float(in_bytes)
+        key = {"all-gather": "all-gather", "all-reduce": "all-reduce",
+               "reduce-scatter": "reduce-scatter", "all-to-all": "all-to-all",
+               "collective-permute": "collective-permute"}[kind]
+        out[key] += wire
+        counts[key] += 1
+    out["total"] = sum(out[k] for k in _OPS)
+    out["counts"] = counts
+    return out
+
+
+def collective_bytes_by_axis(hlo_text: str, axis_groups: dict) -> dict:
+    """Split wire bytes into intra-pod (ICI) vs inter-pod (DCI) by matching
+    replica-group sizes: groups of size<=256 within a pod are ICI; groups
+    spanning pods (size including pod stride) are DCI. Heuristic: a group is
+    DCI when its device-id span >= 256."""
+    ici, dci = 0.0, 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)[\s(]",
+                     ls)
+        if not m:
+            continue
+        bytes_ = _shape_bytes(m.group(1))
+        gm = _GROUPS_RE.search(ls)
+        span_is_dci = False
+        if gm:
+            ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+            if ids and (max(ids) - min(ids)) >= 256:
+                span_is_dci = True
+        n = _group_size(ls)
+        if n <= 1:
+            continue
+        kind = m.group(2)
+        if kind == "all-gather":
+            wire = bytes_ * (n - 1) / n
+        elif kind == "all-reduce":
+            wire = 2.0 * bytes_ * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = bytes_ * (n - 1)
+        elif kind == "all-to-all":
+            wire = bytes_ * (n - 1) / n
+        else:
+            wire = float(bytes_)
+        if span_is_dci:
+            dci += wire
+        else:
+            ici += wire
+    return {"ici": ici, "dci": dci}

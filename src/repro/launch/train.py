@@ -1,0 +1,94 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+      --scheme demo --rate 0.0625 --steps 100 --mesh 2x4 --fake-devices 8
+
+On a real TPU pod, omit --fake-devices and pass --mesh 16x16 (or
+--multi-pod); the same builder produces the production step.
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo2-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU smoke variant of the arch")
+    ap.add_argument("--scheme", default="demo",
+                    choices=["demo", "random", "striding", "diloco", "full", "none"])
+    ap.add_argument("--rate", type=float, default=1 / 16)
+    ap.add_argument("--optimizer", default="demo_sgd",
+                    choices=["demo_sgd", "decoupled_adamw", "adamw"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="2x4", help="DxM (data x model)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.fake_devices}")
+
+    import dataclasses
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import FlexConfig, make_optimizer
+    from repro.data.synthetic import make_stream
+    from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.training import schedules
+    from repro.training.state import init_state, make_train_plan
+    from repro.training.step import build_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=7 if len(cfg.layer_pattern) == 3 else 2,
+                          d_model=256, vocab=512)
+    if args.mesh == "production":
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        axes = (("pod", "data", "model") if args.multi_pod
+                else ("data", "model"))
+        shape = ((2, d, m) if args.multi_pod else (d, m))
+        mesh = make_mesh(shape, axes)
+
+    flex = FlexConfig(scheme=args.scheme, rate=args.rate)
+    opt = make_optimizer(args.optimizer,
+                         schedules.warmup_cosine(args.lr, args.steps),
+                         **({} if args.optimizer == "adamw" else
+                            {"flex": flex}))
+    plan = make_train_plan(cfg, mesh, args.batch, args.seq,
+                           args.microbatches)
+    step, shardings, _ = build_train_step(cfg, mesh, opt, plan)
+    state = init_state(jax.random.PRNGKey(0), cfg, opt, plan)
+    stream = make_stream(cfg, args.batch, args.seq)
+    print(f"launch: {cfg.name} on {mesh.devices.shape} "
+          f"S={plan.fsdp_axes} R={plan.repl_axes} {opt.name}")
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        state, m = step(state, batch)
+        if (i + 1) % 10 == 0 or i == 0:
+            print(f"step {i+1:5d} loss {float(m['loss']):.4f} "
+                  f"wire {float(m['wire_bytes']):,.0f}B "
+                  f"{(time.perf_counter()-t0)/(i+1):.2f}s/step", flush=True)
+    if args.ckpt_dir:
+        from repro.checkpoint import io as ckpt
+
+        ckpt.save(os.path.join(args.ckpt_dir, f"ckpt_{args.steps}"),
+                  jax.device_get(state), step=args.steps)
+
+
+if __name__ == "__main__":
+    main()

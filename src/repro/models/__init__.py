@@ -1,0 +1,24 @@
+from repro.models.common import ArchConfig, MoEConfig, DistCtx, PartParam
+from repro.models import transformer
+from repro.models.transformer import (
+    init_model,
+    forward,
+    loss_fn,
+    decode_step,
+    prefill,
+    init_decode_state,
+)
+
+__all__ = [
+    "ArchConfig",
+    "MoEConfig",
+    "DistCtx",
+    "PartParam",
+    "transformer",
+    "init_model",
+    "forward",
+    "loss_fn",
+    "decode_step",
+    "prefill",
+    "init_decode_state",
+]

@@ -1,0 +1,136 @@
+"""Per-layer blocks: assemble sublayers (attention / MoE / RG-LRU / RWKV6)
+with pre-norms and residuals, for train/prefill and decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, DistCtx, split_keys
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers import rglru as rglru_mod
+from repro.models.layers import rwkv6 as rwkv_mod
+from repro.models.layers.mlp import apply_mlp, init_mlp
+from repro.models.layers.norms import apply_norm, init_norm
+
+
+def init_block(key, cfg: ArchConfig, kind: str):
+    ks = split_keys(key, ["mix", "ffn", "n1", "n2"])
+    p = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attention(ks["mix"], cfg)
+        if cfg.moe is not None:
+            p["moe"] = moe_mod.init_moe(ks["ffn"], cfg)
+        else:
+            p["mlp"] = init_mlp(ks["ffn"], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru_mod.init_rglru(ks["mix"], cfg)
+        p["mlp"] = init_mlp(ks["ffn"], cfg)
+    elif kind == "rwkv":
+        p["tmix"] = rwkv_mod.init_rwkv6(ks["mix"], cfg)
+        p["cmix"] = rwkv_mod.init_rwkv6_cmix(ks["ffn"], cfg)
+    else:
+        raise KeyError(kind)
+    return p
+
+
+def block_forward(p, x, positions, cfg: ArchConfig, ctx: DistCtx, kind: str,
+                  use_kernel: bool = False):
+    """(B,S,D) -> ((B,S,D), aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        mix = attn_mod.attention_forward(p["attn"], h, positions, cfg, ctx)
+    elif kind == "rglru":
+        mix = rglru_mod.rglru_forward(p["rglru"], h, cfg, ctx)
+    elif kind == "rwkv":
+        mix = rwkv_mod.rwkv6_forward(p["tmix"], h, cfg, ctx,
+                                     use_kernel=use_kernel)
+    else:
+        raise KeyError(kind)
+    x = x + mix
+    h = apply_norm(p["norm2"], x, cfg)
+    if kind == "rwkv":
+        ffn = rwkv_mod.rwkv6_cmix_forward(p["cmix"], h, cfg, ctx)
+    elif "moe" in p:
+        ffn, aux = moe_mod.moe_forward(p["moe"], h, cfg, ctx)
+    else:
+        ffn = apply_mlp(p["mlp"], h, cfg, ctx)
+    return x + ffn, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def init_block_state(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     n_seq_shards: int = 1, cache_dtype=jnp.bfloat16):
+    if kind == "attn":
+        if cfg.window is not None:
+            max_len = min(max_len, cfg.window)   # ring cache
+        return attn_mod.init_kv_cache(cfg, batch, max_len, n_seq_shards,
+                                      cache_dtype)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv6_state(cfg, batch)
+    raise KeyError(kind)
+
+
+def block_decode(p, x, state, length, cfg: ArchConfig, ctx: DistCtx, kind: str):
+    """(B,1,D) -> ((B,1,D), new_state)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        mix, state = attn_mod.attention_decode(p["attn"], h, state, length,
+                                               cfg, ctx)
+    elif kind == "rglru":
+        mix, state = rglru_mod.rglru_decode(p["rglru"], h, state, cfg, ctx)
+    elif kind == "rwkv":
+        mix, state = rwkv_mod.rwkv6_tmix_decode(p["tmix"], h, state, cfg, ctx)
+    else:
+        raise KeyError(kind)
+    x = x + mix
+    h = apply_norm(p["norm2"], x, cfg)
+    if kind == "rwkv":
+        ffn, state = rwkv_mod.rwkv6_cmix_decode(p["cmix"], h, state, cfg, ctx)
+    elif "moe" in p:
+        ffn = moe_mod.moe_decode(p["moe"], h, cfg, ctx)
+    else:
+        ffn = apply_mlp(p["mlp"], h, cfg, ctx)
+    return x + ffn, state
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + emit decode state
+
+
+def block_prefill(p, x, positions, cfg: ArchConfig, ctx: DistCtx, kind: str):
+    """Forward AND build this layer's decode state from the full sequence.
+
+    Attention layers emit their LOCAL (pre-gather) K/V slice — exactly the
+    seq-sharded cache layout decode expects. Recurrent layers emit the final
+    state (identical on every seq shard after the cross-shard fold).
+    """
+    aux_state = None
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        q, k, v = attn_mod._project_qkv(p["attn"], h, cfg, ctx)
+        del q
+        mix = attn_mod.attention_forward(p["attn"], h, positions, cfg, ctx)
+        aux_state = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+    elif kind == "rglru":
+        mix = rglru_mod.rglru_forward(p["rglru"], h, cfg, ctx)
+        # final state: re-fold summaries (cheap relative to the forward)
+        aux_state = rglru_mod.init_rglru_state(cfg, x.shape[0])
+    elif kind == "rwkv":
+        mix = rwkv_mod.rwkv6_forward(p["tmix"], h, cfg, ctx)
+        aux_state = rwkv_mod.init_rwkv6_state(cfg, x.shape[0])
+    x = x + mix
+    h = apply_norm(p["norm2"], x, cfg)
+    if kind == "rwkv":
+        ffn = rwkv_mod.rwkv6_cmix_forward(p["cmix"], h, cfg, ctx)
+    elif "moe" in p:
+        ffn, _ = moe_mod.moe_forward(p["moe"], h, cfg, ctx)
+    else:
+        ffn = apply_mlp(p["mlp"], h, cfg, ctx)
+    return x + ffn, aux_state

@@ -1,0 +1,363 @@
+"""Shared model configuration, dtype policy, init helpers, and the
+distribution context threaded through every layer.
+
+The layer zoo is written as plain pure functions over param pytrees (no
+flax/haiku — only jax), so the same code runs:
+  * single-device (smoke tests, CPU benchmarks)      -> DistCtx()
+  * inside shard_map on the production mesh          -> DistCtx(axis names)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# configs
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    kind: str                        # decoder | encoder
+    n_layers: int
+    d_model: int
+    n_heads: int                     # 0 for attention-free (rwkv)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None      # default d_model // n_heads
+    # attention
+    causal: bool = True
+    qkv_bias: bool = False
+    rope_kind: str = "rope"          # rope | rope2d | mrope | none
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0       # rope2d (chatglm): rotary on half the dims
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)  # t/h/w split of hd/2
+    window: int | None = None        # sliding-window attention width
+    attn_logit_softcap: float | None = None
+    # mlp
+    mlp_type: str = "swiglu"         # swiglu | gelu | relu2
+    mlp_bias: bool = False
+    # moe
+    moe: MoEConfig | None = None
+    # hybrid / ssm
+    layer_pattern: tuple[str, ...] = ("attn",)   # repeating block of sublayer kinds
+    d_rnn: int | None = None         # RG-LRU recurrent width (default d_model)
+    conv_width: int = 4              # temporal conv in the Griffin block
+    rwkv_head_dim: int = 64
+    # embeddings / heads
+    tie_embeddings: bool = False
+    input_mode: str = "tokens"       # tokens | embeddings (audio/vlm stub frontends)
+    n_classes: int | None = None     # encoder classification head (ViT/HuBERT)
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    # dtype policy
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # distribution defaults (overridable per launch)
+    fsdp_axes: tuple[str, ...] = ("model",)
+    repl_axes: tuple[str, ...] = ("data",)
+    # training
+    remat: bool = True
+    # dry-run cost extrapolation: python-loop the layer stack instead of
+    # lax.scan (cost_analysis counts a while-loop body once; see launch/dryrun)
+    unroll_layers: bool = False
+    # perf knobs (§Perf hillclimb; see EXPERIMENTS.md)
+    gather_compute_dtype: bool = True   # cast params to bf16 BEFORE the FSDP
+                                        # all-gather (halves gather + grad-RS
+                                        # wire bytes; grads reduce in bf16)
+    attn_mode: str = "gather_kv"        # gather_kv | ulysses (a2a head-shard)
+    attn_flash_threshold: int = 8192    # KV length beyond which attention
+                                        # switches to the online-softmax path
+    # provenance
+    source: str = ""                 # citation: arXiv / model card
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def rnn_width(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def n_rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def pattern_for_depth(self) -> list[str]:
+        """Expand layer_pattern to exactly n_layers entries."""
+        pat = list(self.layer_pattern)
+        out = []
+        while len(out) < self.n_layers:
+            out.extend(pat)
+        return out[: self.n_layers]
+
+    def reduced(self, n_layers=2, d_model=256, d_ff=None, vocab=512,
+                n_experts=None) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        n_heads = max(1, min(self.n_heads, 4)) if self.n_heads else 0
+        n_kv = max(1, min(self.n_kv_heads, n_heads)) if n_heads else 0
+        moe = None
+        if self.moe is not None:
+            ne = n_experts or min(4, self.moe.n_experts)
+            moe = dataclasses.replace(
+                self.moe, n_experts=ne, top_k=min(self.moe.top_k, 2),
+                d_ff_expert=max(32, d_model // 4),
+            )
+        # keep the repeating pattern, trim depth
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=(d_model // n_heads if n_heads else None),
+            d_ff=d_ff or d_model * 3,
+            vocab_size=vocab,
+            moe=moe,
+            d_rnn=(d_model if self.d_rnn else None),
+            rwkv_head_dim=min(self.rwkv_head_dim, max(16, d_model // 4)),
+            mrope_sections=_mrope_sections_for(d_model, n_heads) if self.rope_kind == "mrope" else self.mrope_sections,
+            n_classes=self.n_classes,
+        )
+
+
+def _mrope_sections_for(d_model: int, n_heads: int) -> tuple[int, int, int]:
+    half = (d_model // max(n_heads, 1)) // 2
+    t = half // 2
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+# ---------------------------------------------------------------------------
+# sharded-parameter leaf (decode/TP mode: weights are consumed in place,
+# without the FSDP all-gather — memory-optimal for serve_step)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PartParam:
+    """A weight shard + its per-dim sharding spec (static).
+
+    ``spec`` has one entry per GLOBAL dim: a tuple of mesh axis names the dim
+    is sharded over, or None. Only WEIGHTS are wrapped — activation psums /
+    gathers over axes that also shard the batch/sequence would silently mix
+    positions, so layers must only ever gather/psum PartParam contents, never
+    activations, over fsdp axes (see DESIGN.md §distribution).
+    """
+
+    x: Any
+    spec: tuple  # e.g. (("model",), ("data",)) for a 2-D weight
+
+    def tree_flatten(self):
+        return (self.x,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.x.shape
+
+    @property
+    def dtype(self):
+        return self.x.dtype
+
+    def astype(self, dt):
+        return PartParam(self.x.astype(dt), self.spec)
+
+    def dim_axes(self, d: int):
+        if self.spec is None or d >= len(self.spec):
+            return None
+        return self.spec[d]
+
+
+def _unwrap(w):
+    return w.x if isinstance(w, PartParam) else w
+
+
+# ---------------------------------------------------------------------------
+# distribution context
+
+
+@dataclasses.dataclass(frozen=True)
+class DistCtx:
+    """Axis names available inside shard_map; all empty -> single device.
+
+    fsdp_axes : axes over which param leaves are sharded (all-gather to use)
+    seq_axis  : axis sharding the sequence dim of activations (seq-parallel)
+    batch_axes: axes sharding the batch dim
+    ep_axis   : axis sharding MoE experts (expert parallelism)
+    """
+
+    fsdp_axes: tuple[str, ...] = ()
+    seq_axis: str | None = None
+    batch_axes: tuple[str, ...] = ()
+    ep_axis: str | None = None
+    tp: bool = False   # decode mode: weights stay sharded, matmuls use psum/ag
+    # decode: axes where ACTIVATIONS are replicated but the KV cache is
+    # batch-sharded (big-arch 2-D TP decode). Attention computes its local
+    # batch slice and all-gathers the (tiny) outputs back.
+    cache_batch_axes: tuple[str, ...] = ()
+
+    # ---- tensor-parallel matmul over sharded weights (decode path) ----
+    @property
+    def fsdp_count(self) -> int:
+        import numpy as np
+
+        if not self.fsdp_axes:
+            return 1
+        return int(np.prod([jax.lax.axis_size(a) for a in self.fsdp_axes]))
+
+    def fsdp_index(self):
+        """Flattened linear index over the fsdp axes (row-major)."""
+        idx = 0
+        for a in self.fsdp_axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        return idx
+
+    def axes_index(self, axes) -> Any:
+        """Flattened linear index over the given axes (row-major)."""
+        idx = 0
+        for a in axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        return idx
+
+    def mm(self, x, w):
+        """x @ w for a 2-D weight that may be a PartParam shard.
+
+        dim-0 (contraction dim) sharded -> slice x columns, psum partials;
+        dim-1 (output dim) sharded     -> compute local columns, all-gather.
+        VALIDITY: the caller guarantees x is identical across every axis used
+        here (decode layouts) — the serve-step builder enforces this.
+        """
+        if not isinstance(w, PartParam):
+            return x @ w
+        in_axes, out_axes = w.dim_axes(0), w.dim_axes(1)
+        y_in = x
+        if in_axes:
+            rows = w.x.shape[0]
+            off = self.axes_index(in_axes) * rows
+            y_in = jax.lax.dynamic_slice_in_dim(x, off, rows, axis=-1)
+        y = y_in @ w.x
+        if in_axes:
+            y = jax.lax.psum(y, tuple(in_axes))
+        if out_axes:
+            y = jax.lax.all_gather(y, tuple(out_axes), axis=y.ndim - 1, tiled=True)
+        return y
+
+    def vec(self, w):
+        """Materialize a (small) 1-D/2-D param that may be sharded on dim 0."""
+        if not isinstance(w, PartParam):
+            return w
+        ax = w.dim_axes(0)
+        if not ax:
+            return w.x
+        return jax.lax.all_gather(w.x, tuple(ax), axis=0, tiled=True)
+
+    # ---- params (FSDP) ----
+    def gather_params(self, p, dims=None):
+        """All-gather a param pytree over the fsdp axes.
+
+        ``dims`` is a matching pytree of int|None: which dim of each leaf is
+        sharded (None = replicated, no gather needed). When omitted, dim 0 is
+        assumed for every leaf with ndim >= 1.
+        """
+        if not self.fsdp_axes:
+            return p
+        ax = tuple(self.fsdp_axes)
+
+        def ag(x, d):
+            if d is None or x.ndim == 0:
+                return x
+            return jax.lax.all_gather(x, ax, axis=d, tiled=True)
+
+        if dims is None:
+            return jax.tree_util.tree_map(
+                lambda x: ag(x, 0 if x.ndim else None), p
+            )
+        return jax.tree_util.tree_map(ag, p, dims)
+
+    # ---- sequence parallel ----
+    @property
+    def seq_shards(self) -> int:
+        if self.seq_axis is None:
+            return 1
+        return jax.lax.axis_size(self.seq_axis)
+
+    def seq_index(self):
+        if self.seq_axis is None:
+            return 0
+        return jax.lax.axis_index(self.seq_axis)
+
+    def gather_seq(self, x, axis: int):
+        """All-gather a seq-sharded activation along ``axis`` (e.g. K/V)."""
+        if self.seq_axis is None:
+            return x
+        return jax.lax.all_gather(x, self.seq_axis, axis=axis, tiled=True)
+
+    def psum_seq(self, x):
+        if self.seq_axis is None:
+            return x
+        return jax.lax.psum(x, self.seq_axis)
+
+    def psum_fsdp(self, x):
+        if not self.fsdp_axes:
+            return x
+        return jax.lax.psum(x, tuple(self.fsdp_axes))
+
+    @property
+    def data_shards(self) -> int:
+        import numpy as np
+
+        if not self.batch_axes:
+            return 1
+        return int(np.prod([jax.lax.axis_size(a) for a in self.batch_axes]))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def split_keys(key, names: Sequence[str]) -> dict:
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def cast_compute(p, cfg: ArchConfig):
+    """Cast gathered params to the compute dtype (bf16 matmuls on the MXU)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(cfg.compute_dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        p,
+    )

@@ -1,0 +1,326 @@
+"""Multi-head attention: GQA/MQA, RoPE variants, causal/bidirectional,
+sliding-window, sequence-parallel prefill, flash-decode with a seq-sharded
+KV cache.
+
+Sharding contract (production mesh, inside shard_map):
+  train/prefill : x is (B_local, S_local, D); K/V are all-gathered over the
+                  seq axis ("model") — cheap for GQA — and queries stay local.
+  decode        : x is (B_local, 1, D) replicated over the seq axis; the KV
+                  cache is sharded along its sequence dim over the seq axis;
+                  each device computes a partial softmax over its cache slice
+                  and the partials are combined with psum (flash-decode).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ArchConfig):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.param_dtype
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": dense_init(ks["wq"], d, h * hd, dt),
+        "wk": dense_init(ks["wk"], d, k * hd, dt),
+        "wv": dense_init(ks["wv"], d, k * hd, dt),
+        "wo": dense_init(ks["wo"], h * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((k * hd,), dt)
+        p["bv"] = jnp.zeros((k * hd,), dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig, ctx: DistCtx):
+    b, s, _ = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = ctx.mm(x, p["wq"])
+    kk = ctx.mm(x, p["wk"])
+    v = ctx.mm(x, p["wv"])
+    if "bq" in p:
+        from repro.models.common import _unwrap
+
+        q = q + _unwrap(p["bq"]).astype(q.dtype)
+        kk = kk + _unwrap(p["bk"]).astype(kk.dtype)
+        v = v + _unwrap(p["bv"]).astype(v.dtype)
+    return (
+        q.reshape(b, s, h, hd),
+        kk.reshape(b, s, k, hd),
+        v.reshape(b, s, k, hd),
+    )
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _softcap(logits, cap):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# beyond this many KV positions, switch to the memory-bounded flash path
+FLASH_THRESHOLD = 8192
+FLASH_Q_BLOCK = 256
+FLASH_KV_BLOCK = 1024
+
+
+def attention_forward(
+    p,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: DistCtx = DistCtx(),
+    window: int | None = "cfg",
+) -> jnp.ndarray:
+    """Training / prefill attention. x: (B, S_local, D) -> (B, S_local, D)."""
+    if window == "cfg":
+        window = cfg.window
+    b, s_local, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _project_qkv(p, x, cfg, ctx)
+
+    q, k = apply_rope(q, k, positions, cfg)
+
+    if (cfg.attn_mode == "ulysses" and ctx.seq_axis is not None):
+        n_sh = jax.lax.axis_size(ctx.seq_axis)
+        if h % n_sh == 0 and kvh % n_sh == 0:
+            out = _ulysses_attention(q, k, v, positions, cfg, ctx, window)
+            out = out.reshape(b, s_local, h * hd)
+            return ctx.mm(out, p["wo"])
+
+    # sequence-parallel: gather K/V to full length, queries stay local.
+    k_full = ctx.gather_seq(k, axis=1)
+    v_full = ctx.gather_seq(v, axis=1)
+    pos_full = ctx.gather_seq(positions, axis=positions.ndim - 1)
+    q_pos = positions if positions.ndim == 2 else positions[0]
+    k_pos = pos_full if pos_full.ndim == 2 else pos_full[0]
+
+    thresh = min(FLASH_THRESHOLD, cfg.attn_flash_threshold)
+    if k_full.shape[1] > thresh:
+        out = _flash_attention(q, k_full, v_full, q_pos, k_pos, cfg,
+                               window).astype(x.dtype)
+    else:
+        k_rep = _repeat_kv(k_full, h // kvh)
+        v_rep = _repeat_kv(v_full, h // kvh)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_rep) / math.sqrt(hd)
+        logits = _softcap(logits, cfg.attn_logit_softcap)
+        mask = jnp.ones((b, q_pos.shape[-1], k_pos.shape[-1]), bool)
+        if cfg.causal:
+            mask &= q_pos[:, :, None] >= k_pos[:, None, :]
+        if window is not None:
+            mask &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+        logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_rep)
+    out = out.reshape(b, s_local, h * hd)
+    return ctx.mm(out, p["wo"])
+
+
+def _ulysses_attention(q, k, v, positions, cfg: ArchConfig, ctx: DistCtx,
+                       window) -> jnp.ndarray:
+    """DeepSpeed-Ulysses style sequence<->head resharding (§Perf hillclimb #2).
+
+    Instead of all-gathering K/V to FULL length on every device
+    (O(S_full * D_kv) wire per layer), all_to_all the q/k/v activations from
+    seq-sharded to HEAD-sharded (O(S_local * 4D) wire): each device then owns
+    a head group over the full sequence. Wins whenever
+    S_full * 2*D_kv  >  S_local * (2*D_q + 2*D_kv) — i.e. big seq-shard
+    counts and MHA-ish kv widths (hubert prefill: ~8x less traffic).
+    """
+    ax = ctx.seq_axis
+    b, s_loc, h, hd = q.shape
+    kvh = k.shape[2]
+
+    def to_heads(t):
+        # (B, S_loc, H, hd) -> (B, S_full, H_loc, hd)
+        return jax.lax.all_to_all(t, ax, split_axis=2, concat_axis=1,
+                                  tiled=True)
+
+    qh, kh, vh = to_heads(q), to_heads(k), to_heads(v)
+    pos_full = ctx.gather_seq(positions, axis=positions.ndim - 1)
+    q_pos = pos_full if pos_full.ndim == 2 else pos_full[0]
+
+    out = _flash_attention(qh, kh, vh, q_pos, q_pos, cfg, window)
+    out = out.astype(q.dtype)
+    # back to seq-sharded full heads: (B, S_full, H_loc, hd)->(B,S_loc,H,hd)
+    return jax.lax.all_to_all(out, ax, split_axis=1, concat_axis=2,
+                              tiled=True)
+
+
+def _flash_attention(q, k_full, v_full, q_pos, k_pos, cfg: ArchConfig,
+                     window) -> jnp.ndarray:
+    """Online-softmax attention over KV blocks (memory O(q_blk * kv_blk)).
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) (NOT head-repeated — GQA is
+    resolved inside each tile to keep VMEM/HBM traffic minimal).
+    Forward-oriented (prefill); training shapes stay on the plain path.
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k_full.shape[1], k_full.shape[2]
+    qb = min(FLASH_Q_BLOCK, sq)
+    while sq % qb:
+        qb -= 1
+    kb = min(FLASH_KV_BLOCK, sk)
+    while sk % kb:
+        kb -= 1
+    nq, nk = sq // qb, sk // kb
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+
+    kc = k_full.reshape(b, nk, kb, kvh, hd)
+    vc = v_full.reshape(b, nk, kb, kvh, hd)
+    kpc = k_pos.reshape(b, nk, kb)
+
+    def q_block(args):
+        qi, qp = args                              # (B,qb,H,hd), (B,qb)
+
+        def kv_step(carry, xs):
+            m0, l0, acc = carry
+            kj, vj, kpj = xs                       # (B,kb,KV,hd), (B,kb)
+            kr = _repeat_kv(kj, g)
+            vr = _repeat_kv(vj, g)
+            lg = jnp.einsum("bqhd,bkhd->bhqk", qi, kr).astype(jnp.float32)
+            lg = _softcap(lg * scale, cfg.attn_logit_softcap)
+            mask = jnp.ones((b, qb, kb), bool)
+            if cfg.causal:
+                mask &= qp[:, :, None] >= kpj[:, None, :]
+            if window is not None:
+                mask &= kpj[:, None, :] > (qp[:, :, None] - window)
+            lg = jnp.where(mask[:, None, :, :], lg, NEG_INF)
+            m1 = jnp.maximum(m0, lg.max(-1))                  # (B,H,qb)
+            w = jnp.exp(lg - m1[..., None])
+            corr = jnp.exp(m0 - m1)
+            l1 = l0 * corr + w.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", w, vr.astype(jnp.float32))
+            return (m1, l1, acc), None
+
+        m0 = jnp.full((b, h, qb), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, qb), jnp.float32)
+        acc0 = jnp.zeros((b, h, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             kpc.transpose(1, 0, 2)))
+        o = acc / jnp.maximum(l[..., None], 1e-30)            # (B,H,qb,hd)
+        return o.transpose(0, 2, 1, 3)                        # (B,qb,H,hd)
+
+    qs = q.reshape(b, nq, qb, h, hd).transpose(1, 0, 2, 3, 4)
+    qps = q_pos.reshape(b, nq, qb).transpose(1, 0, 2)
+    out = jax.lax.map(q_block, (qs, qps))                      # (nq,B,qb,H,hd)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, KV cache sharded over the seq axis)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, n_shards: int = 1,
+                  dtype=jnp.bfloat16):
+    """Per-layer cache; sequence dim is the LOCAL shard length."""
+    local = max_len // n_shards
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, local, kvh, hd), dtype),
+        "v": jnp.zeros((batch, local, kvh, hd), dtype),
+    }
+
+
+def attention_decode(
+    p,
+    x: jnp.ndarray,
+    cache: dict,
+    length: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: DistCtx = DistCtx(),
+    window: int | None = "cfg",
+) -> tuple[jnp.ndarray, dict]:
+    """One-token decode. x: (B, 1, D); cache k/v: (B, S_loc, KV, hd).
+
+    ``length`` (scalar int32) = number of tokens already in the cache; the new
+    token is written at global position ``length``.
+    """
+    if window == "cfg":
+        window = cfg.window
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.full((b, 1), length, jnp.int32)
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, b, 1))
+    q, k_new, v_new = _project_qkv(p, x, cfg, ctx)
+    q, k_new = apply_rope(q, k_new, pos, cfg)
+
+    # big-arch 2-D TP decode: activations are batch-replicated but the cache
+    # is batch-sharded over ctx.cache_batch_axes — attend to the local slice.
+    extra = tuple(a for a in ctx.cache_batch_axes if a not in ctx.batch_axes)
+    if extra:
+        b_loc = cache["k"].shape[0]
+        off = ctx.axes_index(extra) * b_loc
+        q = jax.lax.dynamic_slice_in_dim(q, off, b_loc, axis=0)
+        k_new = jax.lax.dynamic_slice_in_dim(k_new, off, b_loc, axis=0)
+        v_new = jax.lax.dynamic_slice_in_dim(v_new, off, b_loc, axis=0)
+        b = b_loc
+
+    s_loc = cache["k"].shape[1]
+    n_shards = 1 if ctx.seq_axis is None else jax.lax.axis_size(ctx.seq_axis)
+    s_total = s_loc * n_shards
+    shard = ctx.seq_index()
+    ring = window is not None  # ring buffer of size s_total (== window cap)
+    wpos = (length % s_total) if ring else length
+    local_pos = wpos - shard * s_loc
+    in_range = (local_pos >= 0) & (local_pos < s_loc)
+    lp = jnp.clip(local_pos, 0, s_loc - 1)
+
+    def write(buf, new):
+        new = new.astype(buf.dtype)
+        cur = jax.lax.dynamic_slice_in_dim(buf, lp, 1, axis=1)
+        upd = jnp.where(in_range, new, cur)
+        return jax.lax.dynamic_update_slice_in_dim(buf, upd, lp, axis=1)
+
+    cache = {"k": write(cache["k"], k_new), "v": write(cache["v"], v_new)}
+
+    k = _repeat_kv(cache["k"], h // kvh)          # (B, S_loc, H, hd)
+    v = _repeat_kv(cache["v"], h // kvh)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    slots = shard * s_loc + jnp.arange(s_loc)      # (S_loc,) ring/abs slots
+    if ring:
+        # token position held by each ring slot: the latest t <= length with
+        # t % s_total == slot. Entries older than `window` were overwritten.
+        slot_pos = length - (length - slots) % s_total
+        valid = slot_pos >= 0
+    else:
+        valid = slots <= length                    # causal incl. new token
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+
+    # flash-decode partial-softmax combine over the seq axis.
+    m_loc = logits.max(axis=-1, keepdims=True)                    # (B,H,1,1)
+    if ctx.seq_axis is not None:
+        m_glob = jax.lax.pmax(m_loc, ctx.seq_axis)
+    else:
+        m_glob = m_loc
+    w = jnp.exp(logits - m_glob)
+    num = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    den = w.sum(axis=-1)[..., None].transpose(0, 2, 1, 3)         # (B,1,H,1)
+    num = ctx.psum_seq(num)
+    den = ctx.psum_seq(den)
+    out = (num / jnp.maximum(den, 1e-30)).astype(x.dtype)
+    out = out.reshape(b, 1, h * hd)
+    if extra:
+        out = jax.lax.all_gather(out, extra, axis=0, tiled=True)
+    return ctx.mm(out, p["wo"]), cache

@@ -1,0 +1,235 @@
+"""Token embedding, LM / classification heads, large-vocab loss.
+
+Sharding invariant (see DESIGN.md): with FSDP + sequence parallelism every
+device holds DIFFERENT positions, so any psum/all-gather of ACTIVATIONS over
+fsdp axes would mix positions. Only WEIGHTS may be gathered over those axes.
+Hence:
+
+  train layout
+    tok_embed (V, D): sharded along D. Lookup streams over vocab CHUNKS:
+      all-gather one (V_c, D) weight chunk, pick in-range tokens, accumulate.
+    head (D, V): sharded along D. The loss streams over vocab chunks with an
+      online softmax (max / logsumexp / picked) — full logits never exist.
+      Each chunk is wrapped in remat: backward re-gathers instead of saving.
+
+  serve layout (built by the serve-step; x replicated over the axes used)
+    tok_embed (V, D): sharded along V -> masked local lookup + psum.
+    head (D, V): sharded along D -> psum partial logits (+ feature-gather).
+
+Single device (smoke tests): plain dense ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ArchConfig,
+    DistCtx,
+    PartParam,
+    _unwrap,
+    dense_init,
+    embed_init,
+)
+
+
+def init_embeddings(key, cfg: ArchConfig):
+    p = {}
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.input_mode == "tokens":
+        p["tok_embed"] = embed_init(k1, cfg.vocab_size, cfg.d_model, cfg.param_dtype)
+    else:
+        # stub modality frontend: inputs arrive as precomputed frame/patch
+        # embeddings; a learned projection stands in for the codec output map.
+        p["in_proj"] = dense_init(k1, cfg.d_model, cfg.d_model, cfg.param_dtype)
+    if cfg.kind == "decoder" and not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, cfg.param_dtype)
+    if cfg.n_classes:
+        p["cls_head"] = dense_init(k3, cfg.d_model, cfg.n_classes, cfg.param_dtype)
+    return p
+
+
+def _n_vocab_chunks(cfg: ArchConfig) -> int:
+    # target <= ~64M params per gathered chunk
+    return max(1, -(-cfg.vocab_size * cfg.d_model // 67_108_864))
+
+
+def embed_input(p, inp: jnp.ndarray, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    """tokens (B,S) int32 OR stub embeddings (B,S,D) -> (B,S,D) compute dtype."""
+    if cfg.input_mode != "tokens":
+        return ctx.mm(inp.astype(cfg.compute_dtype), p["in_proj"])
+    w = p["tok_embed"]
+    if not isinstance(w, PartParam) or all(a is None for a in w.spec):
+        return _unwrap(w)[inp].astype(cfg.compute_dtype)
+
+    v_axes, d_axes = w.dim_axes(0), w.dim_axes(1)
+    if v_axes:
+        # serve layout: vocab-sharded rows; x/tokens replicated over v_axes.
+        rows = w.x.shape[0]
+        off = ctx.axes_index(v_axes) * rows
+        loc = inp - off
+        ok = (loc >= 0) & (loc < rows)
+        e = w.x[jnp.clip(loc, 0, rows - 1)]
+        e = jnp.where(ok[..., None], e, 0)
+        e = jax.lax.psum(e, tuple(v_axes))
+        if d_axes:
+            e = jax.lax.all_gather(e, tuple(d_axes), axis=-1, tiled=True)
+        return e.astype(cfg.compute_dtype)
+
+    # train layout: D-sharded; stream weight chunks (weights are identical
+    # across devices — gathering them never mixes positions).
+    n_chunks = _n_vocab_chunks(cfg)
+    v = cfg.vocab_size
+    step = -(-v // n_chunks)
+    out = jnp.zeros(inp.shape + (cfg.d_model,), cfg.compute_dtype)
+    for c in range(n_chunks):
+        off = c * step
+        width = min(step, v - off)
+        if width <= 0:
+            break
+        chunk = jax.lax.dynamic_slice_in_dim(w.x, off, width, axis=0)
+        chunk = jax.lax.all_gather(chunk, tuple(d_axes), axis=1, tiled=True)
+        loc = inp - off
+        ok = (loc >= 0) & (loc < width)
+        e = chunk[jnp.clip(loc, 0, width - 1)]
+        out = out + jnp.where(ok[..., None], e, 0).astype(out.dtype)
+    return out
+
+
+def _head_param(p, cfg: ArchConfig):
+    return p["tok_embed"] if cfg.tie_embeddings else p["head"]
+
+
+def _head_chunk(w, cfg: ArchConfig, off: int, width: int):
+    """Materialize the FULL (D, width) head chunk for vocab [off, off+width).
+
+    Works for: plain arrays; D-sharded head (dim 0); tied D-sharded embedding
+    (dim 1 of (V, D)). Only weight gathers are used.
+    """
+    tied = cfg.tie_embeddings
+    if not isinstance(w, PartParam):
+        arr = w
+        return (arr[off:off + width, :].T if tied else arr[:, off:off + width])
+    if tied:
+        chunk = jax.lax.dynamic_slice_in_dim(w.x, off, width, axis=0)
+        d_axes = w.dim_axes(1)
+        if d_axes:
+            chunk = jax.lax.all_gather(chunk, tuple(d_axes), axis=1, tiled=True)
+        return chunk.T
+    chunk = jax.lax.dynamic_slice_in_dim(w.x, off, width, axis=1)
+    d_axes = w.dim_axes(0)
+    if d_axes:
+        chunk = jax.lax.all_gather(chunk, tuple(d_axes), axis=0, tiled=True)
+    return chunk
+
+
+def lm_loss(
+    p,
+    x: jnp.ndarray,
+    labels: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: DistCtx = DistCtx(),
+    mask: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming softmax cross-entropy over vocab chunks.
+
+    Returns (LOCAL nll sum, LOCAL token count); the caller divides by the
+    GLOBAL count so autodiff produces sum-gradients that reduce-scatter
+    correctly over the sharding group.
+    """
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    lab = labels.reshape(b * s)
+    w = _head_param(p, cfg)
+
+    n_chunks = _n_vocab_chunks(cfg)
+    v = cfg.vocab_size
+    step = -(-v // n_chunks)
+
+    m = jnp.full((b * s,), -1e30, jnp.float32)
+    z = jnp.zeros((b * s,), jnp.float32)
+    picked = jnp.zeros((b * s,), jnp.float32)
+
+    def chunk_update(carry, off, width):
+        m0, z0, picked0 = carry
+        wc = _head_chunk(w, cfg, off, width)              # (D, width)
+        logits = (xt @ wc.astype(xt.dtype)).astype(jnp.float32)
+        mc = logits.max(-1)
+        m1 = jnp.maximum(m0, mc)
+        z1 = z0 * jnp.exp(m0 - m1) + jnp.exp(logits - m1[:, None]).sum(-1)
+        loc = lab - off
+        ok = (loc >= 0) & (loc < width)
+        pc = jnp.take_along_axis(
+            logits, jnp.clip(loc, 0, width - 1)[:, None], axis=-1)[:, 0]
+        return m1, z1, picked0 + jnp.where(ok, pc, 0.0)
+
+    carry = (m, z, picked)
+    for c in range(n_chunks):
+        off = c * step
+        width = min(step, v - off)
+        if width <= 0:
+            break
+        carry = jax.checkpoint(
+            lambda cr, _o=off, _w=width: chunk_update(cr, _o, _w))(carry)
+    m, z, picked = carry
+    nll = m + jnp.log(jnp.maximum(z, 1e-30)) - picked
+    if mask is not None:
+        fm = mask.reshape(-1).astype(jnp.float32)
+        return (nll * fm).sum(), fm.sum()
+    return nll.sum(), jnp.asarray(nll.size, jnp.float32)
+
+
+def lm_logits(p, x: jnp.ndarray, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    """Full logits (B,S,V) in f32 — decode / small-vocab path.
+
+    In the serve layout the head is D-sharded: partial products are psum'd
+    over the D axes (x is replicated over those axes by construction).
+    """
+    w = _head_param(p, cfg)
+    if not isinstance(w, PartParam):
+        arr = _unwrap(w)
+        hm = arr.T if cfg.tie_embeddings else arr
+        return (x @ hm.astype(x.dtype)).astype(jnp.float32)
+    if cfg.tie_embeddings:
+        # (V, D): serve keeps it V-sharded -> local logits cols + gather
+        v_axes, d_axes = w.dim_axes(0), w.dim_axes(1)
+        if v_axes:
+            lg = (x @ w.x.T.astype(x.dtype)).astype(jnp.float32)
+            return jax.lax.all_gather(lg, tuple(v_axes), axis=-1, tiled=True)
+        # D-sharded tied: slice x, psum
+        rows = w.x.shape[1]
+        off = ctx.axes_index(d_axes) * rows
+        xs = jax.lax.dynamic_slice_in_dim(x, off, rows, axis=-1)
+        return jax.lax.psum((xs @ w.x.T.astype(x.dtype)).astype(jnp.float32),
+                            tuple(d_axes))
+    d_axes, v_axes = w.dim_axes(0), w.dim_axes(1)
+    y = x
+    if d_axes:
+        rows = w.x.shape[0]
+        off = ctx.axes_index(d_axes) * rows
+        y = jax.lax.dynamic_slice_in_dim(x, off, rows, axis=-1)
+    lg = (y @ w.x.astype(x.dtype)).astype(jnp.float32)
+    if d_axes:
+        lg = jax.lax.psum(lg, tuple(d_axes))
+    if v_axes:
+        lg = jax.lax.all_gather(lg, tuple(v_axes), axis=-1, tiled=True)
+    return lg
+
+
+def classifier_loss(p, x: jnp.ndarray, labels: jnp.ndarray, cfg: ArchConfig,
+                    ctx: DistCtx = DistCtx(), pool: str = "mean"):
+    """Encoder classification head (ViT / HuBERT masked prediction).
+
+    x: (B,S,D); labels: (B,) pooled or (B,S) per-frame. The head is small and
+    arrives GATHERED in train (scan-body gather set).
+    """
+    w = _unwrap(p["cls_head"])
+    per_frame = labels.ndim == 2
+    if not per_frame:
+        x = x.mean(axis=1) if pool == "mean" else x[:, 0]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    m = logits.max(-1)
+    z = jnp.exp(logits - m[..., None]).sum(-1)
+    pick = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = m + jnp.log(z) - pick
+    return nll.sum(), jnp.asarray(nll.size, jnp.float32)

@@ -1,0 +1,49 @@
+"""Feed-forward variants: SwiGLU (llama/qwen), GELU (T5/ViT/HuBERT-style),
+squared-ReLU (Nemotron-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, DistCtx, _unwrap, dense_init, split_keys
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        ks = split_keys(key, ["gate", "up", "down"])
+        p = {
+            "gate": dense_init(ks["gate"], d, f, dt),
+            "up": dense_init(ks["up"], d, f, dt),
+            "down": dense_init(ks["down"], f, d, dt),
+        }
+    else:
+        ks = split_keys(key, ["up", "down"])
+        p = {
+            "up": dense_init(ks["up"], d, f, dt),
+            "down": dense_init(ks["down"], f, d, dt),
+        }
+    if cfg.mlp_bias:
+        p["up_b"] = jnp.zeros((f,), dt)
+        p["down_b"] = jnp.zeros((d,), dt)
+    return p
+
+
+def apply_mlp(p, x: jnp.ndarray, cfg: ArchConfig,
+              ctx: DistCtx = DistCtx()) -> jnp.ndarray:
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(ctx.mm(x, p["gate"])) * ctx.mm(x, p["up"])
+    else:
+        h = ctx.mm(x, p["up"])
+        if "up_b" in p:
+            h = h + _unwrap(p["up_b"]).astype(h.dtype)
+        if cfg.mlp_type == "relu2":          # Nemotron-4 squared ReLU
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+    out = ctx.mm(h, p["down"])
+    if "down_b" in p:
+        out = out + _unwrap(p["down_b"]).astype(out.dtype)
+    return out

@@ -1,0 +1,219 @@
+"""Mixture-of-Experts with top-k routing.
+
+Two dispatch paths:
+  * dense combine  — no mesh / smoke tests: every expert runs on every token's
+    slot via capacity-less einsum over one-hot combine weights. Exact.
+  * expert-parallel — inside shard_map with ``ctx.ep_axis``: experts are
+    sharded over the EP axis; tokens travel to their experts and back via
+    all_to_all with a fixed capacity (Switch-style), which is the TPU-native
+    port of the paper's intra-node "operate on full gradients in S" setting.
+
+Aux losses: router z-loss and load-balance loss are returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys, _unwrap
+
+
+def init_moe(key, cfg: ArchConfig):
+    assert cfg.moe is not None
+    d, e, f = cfg.d_model, cfg.moe.n_experts, cfg.moe.d_ff_expert
+    dt = cfg.param_dtype
+    ks = split_keys(key, ["router", "gate", "up", "down"])
+    glu = cfg.mlp_type == "swiglu"
+    p = {
+        "router": dense_init(ks["router"], d, e, dt),
+        "up": (jax.random.normal(ks["up"], (e, d, f)) / jnp.sqrt(d)).astype(dt),
+        "down": (jax.random.normal(ks["down"], (e, f, d)) / jnp.sqrt(f)).astype(dt),
+    }
+    if glu:
+        p["gate"] = (jax.random.normal(ks["gate"], (e, d, f)) / jnp.sqrt(d)).astype(dt)
+    return p
+
+
+def _expert_ffn(pe, x, cfg: ArchConfig):
+    """x: (..., D) through ONE expert's weights pe = {gate?,up,down} slices."""
+    if "gate" in pe:
+        h = jax.nn.silu(x @ pe["gate"]) * (x @ pe["up"])
+    else:
+        h = x @ pe["up"]
+        h = jnp.square(jax.nn.relu(h)) if cfg.mlp_type == "relu2" else jax.nn.gelu(h)
+    return h @ pe["down"]
+
+
+def _router(p, x, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    """x: (T, D) -> (weights (T,k), experts (T,k), aux losses)."""
+    e = cfg.moe.n_experts
+    logits = ctx.mm(x, p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # aux: z-loss + load-balance (Switch)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    me = probs.mean(0)                                   # mean prob per expert
+    ce = jnp.zeros((e,)).at[idx.reshape(-1)].add(
+        jnp.ones_like(idx.reshape(-1), jnp.float32)
+    ) / (idx.size)                                       # fraction routed
+    balance = e * jnp.sum(me * ce)
+    aux = cfg.moe.router_z_loss * z + cfg.moe.load_balance_loss * balance
+    return w, idx, aux
+
+
+def moe_forward(p, x: jnp.ndarray, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    w, idx, aux = _router(p, xt, cfg, ctx)
+
+    if ctx.ep_axis is None:
+        out = _dense_dispatch(p, xt, w, idx, cfg)
+    else:
+        out = _ep_dispatch(p, xt, w, idx, cfg, ctx)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _dense_dispatch(p, xt, w, idx, cfg: ArchConfig):
+    """Exact dense combine: run every expert on all tokens (tiny smoke cfgs)."""
+    e = cfg.moe.n_experts
+
+    def one_expert(pe_gate, pe_up, pe_down):
+        pe = {"up": pe_up, "down": pe_down}
+        if pe_gate is not None:
+            pe["gate"] = pe_gate
+        return _expert_ffn(pe, xt, cfg)               # (T, D)
+
+    gate = p.get("gate")
+    ys = jax.vmap(
+        lambda g, u, dn: one_expert(g, u, dn),
+        in_axes=(0 if gate is not None else None, 0, 0),
+    )(gate, p["up"], p["down"])                       # (E, T, D)
+    combine = jnp.zeros((xt.shape[0], e), ys.dtype)
+    combine = combine.at[jnp.arange(xt.shape[0])[:, None], idx].add(
+        w.astype(ys.dtype))
+    return jnp.einsum("te,etd->td", combine, ys)
+
+
+def moe_decode(p, x: jnp.ndarray, cfg: ArchConfig, ctx: DistCtx):
+    """Decode-path MoE (serve layout; x replicated over the weight axes).
+
+    Expert weights stay sharded: E over "model" (expert parallelism) and the
+    expert-FF dim optionally over "data" (big archs). Every device computes
+    its LOCAL experts' (partial-F) contribution for the routed tokens, and a
+    single psum over the sharded axes combines both the expert sum and the
+    F-partial products. Memory reads per device = its weight shard only.
+    """
+    from repro.models.common import PartParam
+
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    w_r, idx_r, _ = _router(p, xt, cfg, ctx)                    # identical everywhere
+
+    up = p["up"]
+    e_axes = up.dim_axes(0) if isinstance(up, PartParam) else None
+    f_axes = up.dim_axes(2) if isinstance(up, PartParam) else None
+    e_loc = up.x.shape[0] if isinstance(up, PartParam) else _unwrap(up).shape[0]
+    e_off = ctx.axes_index(e_axes) * e_loc if e_axes else 0
+
+    # combine weights (T, E) dense — identical on every device
+    comb = jnp.zeros((t, e), xt.dtype)
+    comb = comb.at[jnp.arange(t)[:, None], idx_r].add(w_r.astype(xt.dtype))
+
+    def get(name):
+        q = p.get(name)
+        if q is None:
+            return None
+        return q.x if isinstance(q, PartParam) else q
+
+    g, u_, dn = get("gate"), get("up"), get("down")
+
+    def run(i, _):
+        pe = {"up": u_[i], "down": dn[i]}
+        if g is not None:
+            pe["gate"] = g[i]
+        y = _expert_ffn(pe, xt, cfg)                       # (T, D) F-partial
+        return y * comb[:, e_off + i][:, None]
+
+    ys = jax.vmap(run, in_axes=(0, None))(jnp.arange(e_loc), 0)
+    out = ys.sum(axis=0)                                   # sum local experts
+    red_axes = tuple(a for grp in (e_axes, f_axes) if grp for a in grp)
+    if red_axes:
+        out = jax.lax.psum(out, red_axes)
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def _ep_dispatch(p, xt, w, idx, cfg: ArchConfig, ctx: DistCtx):
+    """Expert-parallel Switch-style dispatch over ctx.ep_axis.
+
+    Experts are sharded along dim 0 of the (E, D, F) weights. Tokens are
+    packed into per-expert capacity slots locally, exchanged with all_to_all,
+    processed by the local experts, and returned.
+    """
+    t, d = xt.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    n_dev = jax.lax.axis_size(ctx.ep_axis)
+    e_loc = e // n_dev
+    cap = int(cfg.moe.capacity_factor * t * k / e)
+    cap = max(cap, 4)
+
+    # position of each (token, choice) within its expert's capacity
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot                  # rank within expert
+    pos = pos.sum(-1) - 1                                      # (T*k,)
+    keep = pos < cap
+
+    # dispatch buffer (E, cap, D)
+    disp = jnp.zeros((e, cap, d), xt.dtype)
+    tok = jnp.repeat(jnp.arange(t), k)
+    disp = disp.at[flat_e, jnp.clip(pos, 0, cap - 1)].add(
+        jnp.where(keep[:, None], xt[tok], 0.0)
+    )
+
+    # all_to_all: (E, cap, D) -> every device keeps its e_loc experts' slots
+    # from all devices: (n_dev * e_loc, cap, D) -> regroup.
+    a2a = jax.lax.all_to_all(
+        disp.reshape(n_dev, e_loc, cap, d), ctx.ep_axis,
+        split_axis=0, concat_axis=0, tiled=False,
+    )                                                           # (n_dev, e_loc, cap, D)
+    work = a2a.transpose(1, 0, 2, 3).reshape(e_loc, n_dev * cap, d)
+
+    # local experts (weights sharded over dim 0 in TP mode; in gathered mode
+    # p[...] are full (E,D,F) and we slice our shard)
+    def get_shard(name):
+        wfull = p.get(name)
+        if wfull is None:
+            return None
+        arr = _unwrap(wfull)
+        if arr.shape[0] == e_loc:
+            return arr
+        off = jax.lax.axis_index(ctx.ep_axis) * e_loc
+        return jax.lax.dynamic_slice_in_dim(arr, off, e_loc, axis=0)
+
+    g, u, dn = get_shard("gate"), get_shard("up"), get_shard("down")
+
+    def run(i, xi):
+        pe = {"up": u[i], "down": dn[i]}
+        if g is not None:
+            pe["gate"] = g[i]
+        return _expert_ffn(pe, xi, cfg)
+
+    ys = jax.vmap(run, in_axes=(0, 0))(jnp.arange(e_loc), work)  # (e_loc, n_dev*cap, D)
+
+    # return trip
+    back = ys.reshape(e_loc, n_dev, cap, d).transpose(1, 0, 2, 3)
+    ret = jax.lax.all_to_all(back, ctx.ep_axis, split_axis=0,
+                             concat_axis=0, tiled=False)
+    ret = ret.reshape(e, cap, d)
+
+    # combine: gather each (token, choice) result, weight, sum over k
+    got = ret[flat_e, jnp.clip(pos, 0, cap - 1)]                # (T*k, D)
+    got = jnp.where(keep[:, None], got, 0.0)
+    wk = w.reshape(-1).astype(got.dtype)
+    out = jnp.zeros((t, d), got.dtype).at[tok].add(got * wk[:, None])
+    return out

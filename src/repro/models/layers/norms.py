@@ -1,0 +1,28 @@
+"""RMSNorm / LayerNorm (pure functions over param dicts)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, _unwrap
+
+
+def init_norm(cfg: ArchConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    scale = _unwrap(p["scale"]).astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) / jnp.sqrt(var + cfg.norm_eps)
+        y = y * scale + _unwrap(p["bias"]).astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf / jnp.sqrt(ms + cfg.norm_eps) * scale
+    return y.astype(x.dtype)

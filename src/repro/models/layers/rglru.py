@@ -1,0 +1,166 @@
+"""Real-Gated Linear Recurrent Unit block (Griffin / RecurrentGemma,
+arXiv:2402.19427).
+
+Block: x -> [gate branch: gelu(x W_g)] * [u = conv1d(x W_i); RG-LRU(u)] -> W_o
+
+RG-LRU:  r_t = sigmoid(u_t W_a + b_a)          (recurrence gate)
+         i_t = sigmoid(u_t W_x + b_x)          (input gate)
+         log a_t = -c * softplus(Lambda) * r_t
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The linear recurrence runs as an associative scan (parallel, TPU-friendly);
+under sequence parallelism each device scans its local chunk and the
+cross-device prefix is fixed up from an all-gather of per-device
+(decay-product, last-state) summaries — O(n_shards) tiny traffic instead of a
+serial dependency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def init_rglru(key, cfg: ArchConfig):
+    d, r = cfg.d_model, cfg.rnn_width
+    dt = cfg.param_dtype
+    ks = split_keys(key, ["w_gate", "w_in", "conv", "w_a", "w_x", "w_out", "lam"])
+    p = {
+        "w_gate": dense_init(ks["w_gate"], d, r, dt),
+        "w_in": dense_init(ks["w_in"], d, r, dt),
+        "conv": (jax.random.normal(ks["conv"], (cfg.conv_width, r)) * 0.02).astype(dt),
+        "w_a": dense_init(ks["w_a"], r, r, dt),
+        "b_a": jnp.zeros((r,), dt),
+        "w_x": dense_init(ks["w_x"], r, r, dt),
+        "b_x": jnp.zeros((r,), dt),
+        # Lambda init so that a ~ U[0.9, 0.999]-ish (Griffin appendix)
+        "lam": (jax.random.uniform(ks["lam"], (r,), minval=2.0, maxval=6.0)).astype(dt),
+        "w_out": dense_init(ks["w_out"], r, d, dt),
+    }
+    return p
+
+
+def _causal_conv(u: jnp.ndarray, kernel: jnp.ndarray, carry: jnp.ndarray | None,
+                 ctx: DistCtx) -> jnp.ndarray:
+    """Depthwise causal conv along time. u: (B,S,R), kernel: (W,R).
+
+    ``carry``: (B, W-1, R) previous tokens (decode / cross-shard boundary).
+    Under sequence parallelism the boundary tokens come from the left
+    neighbour via ppermute.
+    """
+    w = kernel.shape[0]
+    b, s, r = u.shape
+    if carry is None:
+        carry = jnp.zeros((b, w - 1, r), u.dtype)
+        if ctx.seq_axis is not None:
+            # receive the last W-1 tokens of the left neighbour
+            n = jax.lax.axis_size(ctx.seq_axis)
+            left = jax.lax.ppermute(
+                u[:, -(w - 1):, :], ctx.seq_axis,
+                [(i, (i + 1) % n) for i in range(n)],
+            )
+            first = jax.lax.axis_index(ctx.seq_axis) == 0
+            carry = jnp.where(first, jnp.zeros_like(left), left)
+    ext = jnp.concatenate([carry, u], axis=1)            # (B, S+W-1, R)
+    out = jnp.zeros_like(u)
+    for i in range(w):
+        out = out + ext[:, i:i + s, :] * kernel[i][None, None, :]
+    return out
+
+
+def _linscan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t along axis 1, h_0-in = 0. a,b: (B,S,R)."""
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_forward(
+    p, x: jnp.ndarray, cfg: ArchConfig, ctx: DistCtx = DistCtx(),
+) -> jnp.ndarray:
+    """Training/prefill. x: (B, S_local, D) -> (B, S_local, D)."""
+    y = jax.nn.gelu(ctx.mm(x, p["w_gate"]))
+    u = ctx.mm(x, p["w_in"])
+    from repro.models.common import _unwrap
+
+    u = _causal_conv(u, _unwrap(p["conv"]).astype(u.dtype), None, ctx)
+
+    r = jax.nn.sigmoid(ctx.mm(u, p["w_a"]) + _unwrap(p["b_a"]).astype(u.dtype))
+    i = jax.nn.sigmoid(ctx.mm(u, p["w_x"]) + _unwrap(p["b_x"]).astype(u.dtype))
+    log_a = (-_C * jax.nn.softplus(_unwrap(p["lam"]).astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = (i * u).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-12))
+
+    h = _linscan(a, gated)
+
+    if ctx.seq_axis is not None:
+        # cross-shard prefix fix: gather (decay product, last state) summaries
+        n = jax.lax.axis_size(ctx.seq_axis)
+        me = jax.lax.axis_index(ctx.seq_axis)
+        a_prod = jnp.exp(log_a.sum(axis=1))               # (B,R)
+        summaries = jax.lax.all_gather(
+            jnp.stack([a_prod, h[:, -1, :]], axis=0), ctx.seq_axis, axis=0,
+            tiled=False,
+        )                                                  # (n, 2, B, R)
+        a_all, c_all = summaries[:, 0], summaries[:, 1]    # (n, B, R)
+
+        def fold(carry, j):
+            # prefix state entering shard j
+            h_in, = carry
+            h_next = a_all[j] * h_in + c_all[j]
+            return (h_next,), h_in
+
+        (_,), h_ins = jax.lax.scan(
+            fold, (jnp.zeros_like(a_all[0]),), jnp.arange(n))
+        h_in = h_ins[me]                                   # (B,R) state entering my shard
+        cum_a = jnp.exp(jnp.cumsum(log_a, axis=1))         # (B,S,R)
+        h = h + cum_a * h_in[:, None, :]
+
+    out = (h.astype(x.dtype) * y)
+    return ctx.mm(out, p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state update
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    r = cfg.rnn_width
+    return {
+        "h": jnp.zeros((batch, r), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+    }
+
+
+def rglru_decode(p, x: jnp.ndarray, state: dict, cfg: ArchConfig,
+                 ctx: DistCtx = DistCtx()):
+    """x: (B,1,D) -> (out (B,1,D), new_state)."""
+    from repro.models.common import _unwrap
+
+    y = jax.nn.gelu(ctx.mm(x, p["w_gate"]))
+    u = ctx.mm(x, p["w_in"])                               # (B,1,R)
+    kern = _unwrap(p["conv"]).astype(u.dtype)
+    conv_state = state["conv"].astype(u.dtype)             # (B,W-1,R)
+    ext = jnp.concatenate([conv_state, u], axis=1)         # (B,W,R)
+    u = (ext * kern[None, :, :]).sum(axis=1, keepdims=True)
+    new_conv = ext[:, 1:, :]
+
+    r = jax.nn.sigmoid(ctx.mm(u, p["w_a"]) + _unwrap(p["b_a"]).astype(u.dtype))
+    i = jax.nn.sigmoid(ctx.mm(u, p["w_x"]) + _unwrap(p["b_x"]).astype(u.dtype))
+    a = jnp.exp(-_C * jax.nn.softplus(_unwrap(p["lam"]).astype(jnp.float32))
+                * r.astype(jnp.float32))
+    b = (i * u).astype(jnp.float32) * jnp.sqrt(jnp.maximum(1 - a * a, 1e-12))
+    h = a[:, 0, :] * state["h"] + b[:, 0, :]               # (B,R)
+
+    out = (h[:, None, :].astype(x.dtype) * y)
+    return ctx.mm(out, p["w_out"]), {"h": h, "conv": new_conv.astype(state["conv"].dtype)}

@@ -1,0 +1,68 @@
+"""Rotary position embeddings: standard RoPE, partial RoPE-2d (ChatGLM), and
+M-RoPE (Qwen2-VL: temporal/height/width sections over 3-D position ids)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+
+def _rope_angles(pos: jnp.ndarray, dim: int, theta: float) -> jnp.ndarray:
+    """pos (...,) -> angles (..., dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return pos[..., None].astype(jnp.float32) * inv
+
+
+def _rotate(x: jnp.ndarray, ang: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x interleaved as [x0..x_{d/2-1} | x_{d/2}..x_{d-1}])."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ArchConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """q (B,S,H,hd), k (B,S,K,hd).
+
+    positions: (B, S) int for rope/rope2d, (3, B, S) for mrope.
+    """
+    hd = q.shape[-1]
+    kind = cfg.rope_kind
+    if kind == "none":
+        return q, k
+
+    if kind == "mrope":
+        # split the hd/2 frequency pairs into (t, h, w) sections; each section
+        # rotates by its own position stream. (arXiv:2409.12191)
+        t, h, w = cfg.mrope_sections
+        assert (t + h + w) == hd // 2, (cfg.mrope_sections, hd)
+        angs = []
+        full = _rope_angles(jnp.moveaxis(positions, 0, -1), hd, cfg.rope_theta)
+        # full: (B, S, 3, hd/2) — pick section slices per stream
+        angs = jnp.concatenate(
+            [full[..., 0, :t], full[..., 1, t:t + h], full[..., 2, t + h:]],
+            axis=-1,
+        )  # (B, S, hd/2)
+        ang = angs[:, :, None, :]
+        return _rotate(q, ang), _rotate(k, ang)
+
+    rot_dim = int(hd * (0.5 if kind == "rope2d" else cfg.rope_fraction))
+    rot_dim -= rot_dim % 2
+    ang = _rope_angles(positions, rot_dim, cfg.rope_theta)[:, :, None, :]
+
+    if rot_dim == hd:
+        return _rotate(q, ang), _rotate(k, ang)
+
+    # partial rotary (ChatGLM "2d" rope: first half rotary, second half pass)
+    def part(x):
+        xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+        return jnp.concatenate([_rotate(xr, ang), xp], axis=-1)
+
+    return part(q), part(k)

@@ -1,0 +1,314 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+DATA-DEPENDENT per-channel decay, plus the squared-ReLU channel-mix.
+
+Per head (k-dim = v-dim = hd), with state S in R^{hd x hd}:
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t = exp(-exp(ww_t))
+
+ww_t is data-dependent through a low-rank (LoRA) map — Finch's core novelty.
+Token shift uses static per-channel lerp mixes (we keep the dynamic decay,
+which is the signature feature, and simplify the dynamic token-shift mix; see
+DESIGN.md deviations).
+
+The production forward is CHUNKED (parallel within a chunk, sequential across
+chunks — TPU-native; the Pallas kernel in repro.kernels.wkv6 implements the
+same contraction with VMEM tiling). A step-by-step lax.scan reference lives in
+kernels/wkv6/ref.py and in :func:`rwkv6_forward_scan` below.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys, _unwrap
+
+_LORA_RANK = 64
+# Per-step log-decay floor. The chunked (and Pallas) path factorizes the
+# pairwise decay matrix into midpoint-referenced exponentials; with chunk<=32
+# the exponents are bounded by 16*|logw| so logw >= -3 keeps everything well
+# inside f32 range. Channels decaying faster than exp(-3)=0.05/step are
+# saturated — applied consistently in scan/decode/kernel (DESIGN.md).
+_LOGW_MIN = -3.0
+
+
+def init_rwkv6(key, cfg: ArchConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = cfg.n_rwkv_heads
+    dt = cfg.param_dtype
+    ks = split_keys(key, ["r", "k", "v", "g", "o", "w0", "wa", "wb", "u",
+                          "mu", "ln"])
+    rank = min(_LORA_RANK, d // 2)
+    p = {
+        "wr": dense_init(ks["r"], d, d, dt),
+        "wk": dense_init(ks["k"], d, d, dt),
+        "wv": dense_init(ks["v"], d, d, dt),
+        "wg": dense_init(ks["g"], d, d, dt),
+        "wo": dense_init(ks["o"], d, d, dt),
+        # data-dependent decay: ww = w0 + tanh(x @ wa) @ wb
+        "w0": (jax.random.normal(ks["w0"], (d,)) * 0.5 - 6.0).astype(dt),
+        "wa": dense_init(ks["wa"], d, rank, dt),
+        "wb": (jax.random.normal(ks["wb"], (rank, d)) * 0.02).astype(dt),
+        "u": (jax.random.normal(ks["u"], (h, hd)) * 0.02).astype(dt),
+        # static token-shift mixes for r,k,v,w,g
+        "mu": (jax.random.uniform(ks["mu"], (5, d))).astype(dt),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, x_prev: jnp.ndarray, mu: jnp.ndarray):
+    """lerp(x, shift(x), mu). x: (B,S,D); x_prev: (B,1,D) boundary token."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+    return x + (shifted - x) * mu[None, None, :].astype(x.dtype)
+
+
+def _boundary(x: jnp.ndarray, ctx: DistCtx) -> jnp.ndarray:
+    """Last token of the left neighbour shard (zeros for shard 0)."""
+    b, _, d2 = x.shape
+    if ctx.seq_axis is None:
+        return jnp.zeros((b, 1, d2), x.dtype)
+    n = jax.lax.axis_size(ctx.seq_axis)
+    left = jax.lax.ppermute(x[:, -1:, :], ctx.seq_axis,
+                            [(i, (i + 1) % n) for i in range(n)])
+    first = jax.lax.axis_index(ctx.seq_axis) == 0
+    return jnp.where(first, jnp.zeros_like(left), left)
+
+
+def _project(p, x, ctx: DistCtx, cfg: ArchConfig):
+    mu = _unwrap(p["mu"]).astype(x.dtype)
+    xb = _boundary(x, ctx)
+    xr = _token_shift(x, xb, mu[0])
+    xk = _token_shift(x, xb, mu[1])
+    xv = _token_shift(x, xb, mu[2])
+    xw = _token_shift(x, xb, mu[3])
+    xg = _token_shift(x, xb, mu[4])
+    r = ctx.mm(xr, p["wr"])
+    k = ctx.mm(xk, p["wk"])
+    v = ctx.mm(xv, p["wv"])
+    g = jax.nn.silu(ctx.mm(xg, p["wg"]))
+    ww = _unwrap(p["w0"]).astype(jnp.float32) + jnp.tanh(
+        ctx.mm(xw, p["wa"])
+    ).astype(jnp.float32) @ _unwrap(p["wb"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww))                       # per-channel decay in (0,1)
+    return r, k, v, g, w
+
+
+def _heads(x, h, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, hd)
+
+
+def rwkv6_attend_chunked(r, k, v, w, u, chunk: int, s0=None):
+    """Chunked WKV contraction (pure jnp oracle for the Pallas kernel).
+
+    r,k,v,w: (B,S,H,hd) with w the PER-STEP decay factors in (0,1);
+    u: (H,hd) bonus. Returns (o: (B,S,H,hd), final state (B,H,hd,hd)).
+    All math in f32.
+    """
+    b, s, h, hd = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    u = u.astype(f32)
+    # reshape to chunks: (B,N,C,H,hd) -> work per (B,N,H)
+    rc = r.reshape(b, n, chunk, h, hd).transpose(0, 1, 3, 2, 4)   # (B,N,H,C,hd)
+    kc = k.reshape(b, n, chunk, h, hd).transpose(0, 1, 3, 2, 4)
+    vc = v.reshape(b, n, chunk, h, hd).transpose(0, 1, 3, 2, 4)
+    wc = w.reshape(b, n, chunk, h, hd).transpose(0, 1, 3, 2, 4)
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-30)), _LOGW_MIN)
+    cum = jnp.cumsum(logw, axis=3)                                 # inclusive
+    cum_ex = cum - logw                                            # exclusive
+    total = cum[:, :, :, -1:, :]                                   # (B,N,H,1,hd)
+
+    # within-chunk pairwise decay: decay(i<-j) = exp(cum_ex[i] - cum[j]), j<i.
+    # Factorized around the chunk midpoint so both exponentials stay in f32
+    # range (<= exp(16*|_LOGW_MIN|)) and the contraction hits the MXU —
+    # no (C,C,hd) tensor is ever materialized.
+    c_mid = cum[:, :, :, chunk // 2: chunk // 2 + 1, :]            # (B,N,H,1,hd)
+    a_fac = rc * jnp.exp(cum_ex - c_mid)                           # (B,N,H,C,hd)
+    b_fac = kc * jnp.exp(c_mid - cum)                              # (B,N,H,C,hd)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)[None, None, None]
+    att = jnp.einsum("bnhid,bnhjd->bnhij", a_fac, b_fac)           # (B,N,H,C,C)
+    # masked (j>=i) entries can legitimately be inf (positive exponents);
+    # select, don't multiply, so inf never meets 0.
+    att = jnp.where(tri, att, 0.0)
+    diag = (rc * u[None, None, :, None, :] * kc).sum(-1)           # (B,N,H,C)
+    o_intra = att @ vc + diag[..., None] * vc                      # (B,N,H,C,hd)
+
+    # cross-chunk: only the cheap diagonal state FOLD is sequential; the
+    # heavy einsums stay vectorized over chunks (cost_analysis counts a
+    # while-loop body once — keep the flops outside the loop).
+    k_scaled = jnp.exp(total - cum) * kc                           # (B,N,H,C,hd)
+    s_add = jnp.einsum("bnhck,bnhcv->bnhkv", k_scaled, vc)
+    r_scaled = rc * jnp.exp(cum_ex)                                # (B,N,H,C,hd)
+    dtot = total[:, :, :, 0, :]                                    # (B,N,H,hd)
+
+    def fold(s_in, xs):
+        sa, dt = xs                                                # per-chunk
+        s_out = jnp.exp(dt)[..., None] * s_in + sa
+        return s_out, s_in
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), f32)
+    s_fin, s_ins = jax.lax.scan(
+        fold, s0,
+        (s_add.transpose(1, 0, 2, 3, 4), dtot.transpose(1, 0, 2, 3)))
+    s_ins = s_ins.transpose(1, 0, 2, 3, 4)                          # (B,N,H,hd,hd)
+    o_cross = jnp.einsum("bnhck,bnhkv->bnhcv", r_scaled, s_ins)
+    o = o_intra + o_cross
+    o = o.transpose(0, 1, 3, 2, 4).reshape(b, s, h, hd)
+    return o, s_fin
+
+
+def rwkv6_forward(
+    p, x: jnp.ndarray, cfg: ArchConfig, ctx: DistCtx = DistCtx(),
+    chunk: int = 32, use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Time-mix. x: (B, S_local, D) -> (B, S_local, D)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    r, k, v, g, w = _project(p, x, ctx, cfg)
+    r, k, v, w = (_heads(t, h, hd) for t in (r, k, v, w.astype(x.dtype)))
+    u = _unwrap(p["u"]).astype(jnp.float32)
+
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    if use_kernel:
+        from repro.kernels.wkv6 import ops as wkv_ops
+
+        o, s_fin = wkv_ops.wkv6_chunked(r, k, v, w, u, chunk=c)
+    else:
+        o, s_fin = rwkv6_attend_chunked(r, k, v, w, u, chunk=c)
+
+    if ctx.seq_axis is not None:
+        # cross-shard state pass: diagonal-decay combine, same trick as RG-LRU.
+        n = jax.lax.axis_size(ctx.seq_axis)
+        me = jax.lax.axis_index(ctx.seq_axis)
+        logw = jnp.maximum(
+            jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30)), _LOGW_MIN)
+        dtot = logw.sum(axis=1)                                    # (B,H,hd)
+        summ = jax.lax.all_gather((dtot, s_fin), ctx.seq_axis, axis=0,
+                                  tiled=False)
+        d_all, c_all = summ                                        # (n,B,H,hd),(n,B,H,hd,hd)
+
+        def fold(s_in, j):
+            s_next = jnp.exp(d_all[j])[..., None] * s_in + c_all[j]
+            return s_next, s_in
+
+        _, s_ins = jax.lax.scan(fold, jnp.zeros_like(s_fin), jnp.arange(n))
+        s_in = s_ins[me]                                           # (B,H,hd,hd)
+        cum_ex = jnp.cumsum(logw, axis=1) - logw                   # (B,S,H,hd)
+        r_scaled = r.astype(jnp.float32) * jnp.exp(cum_ex)
+        o = o + jnp.einsum("bshk,bhkv->bshv", r_scaled, s_in)
+
+    o = o.reshape(b, s, h * hd).astype(x.dtype) * g
+    return ctx.mm(o, p["wo"])
+
+
+def rwkv6_forward_scan(p, x, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    """Step-by-step reference (slow; for tests)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    r, k, v, g, w = _project(p, x, ctx, cfg)
+    r, k, v, w = (_heads(t, h, hd) for t in (r, k, v, w.astype(x.dtype)))
+    u = _unwrap(p["u"]).astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = (t.astype(jnp.float32) for t in xs)       # (B,H,hd)
+        wt = jnp.maximum(wt, jnp.exp(_LOGW_MIN))
+        kv = kt[..., :, None] * vt[..., None, :]                   # (B,H,hd,hd)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, ot
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    _, o = jax.lax.scan(step, S0, xs)
+    o = o.transpose(1, 0, 2, 3).reshape(b, s, h * hd).astype(x.dtype) * g
+    return ctx.mm(o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# channel mix + decode
+
+
+def init_rwkv6_cmix(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype
+    ks = split_keys(key, ["k", "v", "mu"])
+    return {
+        "wk_c": dense_init(ks["k"], d, f, dt),
+        "wv_c": dense_init(ks["v"], f, d, dt),
+        "mu_c": jax.random.uniform(ks["mu"], (d,)).astype(dt),
+    }
+
+
+def rwkv6_cmix_forward(p, x, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    xb = _boundary(x, ctx)
+    xk = _token_shift(x, xb, _unwrap(p["mu_c"]).astype(x.dtype))
+    hdn = jnp.square(jax.nn.relu(ctx.mm(xk, p["wk_c"])))
+    return ctx.mm(hdn, p["wv_c"])
+
+
+def init_rwkv6_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    h, hd, d = cfg.n_rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "S": jnp.zeros((batch, h, hd, hd), dtype),
+        "x_prev": jnp.zeros((batch, 1, d), dtype),
+        "x_prev_c": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def rwkv6_tmix_decode(p, x, state, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    """One-token time-mix step. x: (B,1,D) -> (out, new_state)."""
+    b = x.shape[0]
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    mu = _unwrap(p["mu"]).astype(x.dtype)
+    xp = state["x_prev"].astype(x.dtype)
+
+    mix = lambda m: x + (xp - x) * m[None, None, :]
+    r = ctx.mm(mix(mu[0]), p["wr"])
+    k = ctx.mm(mix(mu[1]), p["wk"])
+    v = ctx.mm(mix(mu[2]), p["wv"])
+    g = jax.nn.silu(ctx.mm(mix(mu[4]), p["wg"]))
+    ww = _unwrap(p["w0"]).astype(jnp.float32) + jnp.tanh(
+        ctx.mm(mix(mu[3]), p["wa"])
+    ).astype(jnp.float32) @ _unwrap(p["wb"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww))                                       # (B,1,D)
+
+    f32 = jnp.float32
+    rt = r.reshape(b, h, hd).astype(f32)
+    kt = k.reshape(b, h, hd).astype(f32)
+    vt = v.reshape(b, h, hd).astype(f32)
+    wt = w.reshape(b, h, hd).astype(f32)
+    u = _unwrap(p["u"]).astype(f32)
+
+    S = state["S"].astype(f32)
+    wt = jnp.maximum(wt, jnp.exp(_LOGW_MIN))
+    kv = kt[..., :, None] * vt[..., None, :]
+    ot = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+    S = wt[..., None] * S + kv
+
+    o = ot.reshape(b, 1, h * hd).astype(x.dtype) * g
+    o = ctx.mm(o, p["wo"])
+
+    new_state = dict(state)
+    new_state["S"] = S.astype(state["S"].dtype)
+    new_state["x_prev"] = x.astype(state["x_prev"].dtype)
+    return o, new_state
+
+
+def rwkv6_cmix_decode(pc, x, state, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
+    """One-token channel-mix step. x: (B,1,D) -> (out, new_state)."""
+    from repro.models.common import _unwrap as _u
+
+    xpc = state["x_prev_c"].astype(x.dtype)
+    xkc = x + (xpc - x) * _u(pc["mu_c"]).astype(x.dtype)[None, None, :]
+    cm = ctx.mm(jnp.square(jax.nn.relu(ctx.mm(xkc, pc["wk_c"]))), pc["wv_c"])
+    new_state = dict(state)
+    new_state["x_prev_c"] = x.astype(state["x_prev_c"].dtype)
+    return cm, new_state

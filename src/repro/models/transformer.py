@@ -1,0 +1,302 @@
+"""The stacked model: scan-over-layers with per-layer FSDP gather, repeating
+heterogeneous layer patterns (Griffin 2:1, RWKV, uniform attention), LM /
+classifier losses, prefill and decode entry points.
+
+HLO size is O(1) in depth: layers are stacked (leading dim = #repeats of the
+layer pattern) and consumed by lax.scan; a remainder (depth % pattern) is
+unrolled. Each scan step all-gathers ONE pattern-unit's params over the fsdp
+axes (ZeRO-3), wrapped in jax.checkpoint so the backward re-gathers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+
+def sp_wrap(tree, specs):
+    from repro.sharding import specs as sp
+
+    return sp.wrap_tree(tree, specs)
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.common import ArchConfig, DistCtx, cast_compute, split_keys
+from repro.models.layers import embeddings as emb
+from repro.models.layers.norms import apply_norm, init_norm
+
+
+def _pattern_split(cfg: ArchConfig) -> tuple[list[str], int, list[str]]:
+    """(unit pattern, n_repeats, remainder kinds)."""
+    unit = list(cfg.layer_pattern)
+    n = cfg.n_layers // len(unit)
+    rem = cfg.pattern_for_depth()[n * len(unit):]
+    return unit, n, rem
+
+
+def init_model(key, cfg: ArchConfig):
+    """Returns the param pytree. Stacked segment leaves have a leading
+    (n_repeats,) dim; remainder layers are separate."""
+    unit, n, rem = _pattern_split(cfg)
+    ks = split_keys(key, ["embed", "stack", "rem", "final"])
+    params: dict[str, Any] = {"embed": emb.init_embeddings(ks["embed"], cfg)}
+
+    def init_unit(k):
+        kk = jax.random.split(k, len(unit))
+        return {f"{i}_{kind}": blocks.init_block(kk[i], cfg, kind)
+                for i, kind in enumerate(unit)}
+
+    if n > 0:
+        stack_keys = jax.random.split(ks["stack"], n)
+        params["stack"] = jax.vmap(init_unit)(stack_keys)
+    for j, kind in enumerate(rem):
+        params[f"rem{j}"] = blocks.init_block(
+            jax.random.fold_in(ks["rem"], j), cfg, kind)
+    params["final_norm"] = init_norm(cfg)
+    return params
+
+
+def _identity_gather(p, name=None):
+    return p
+
+
+def _make_gathers(params, specs, cfg=None):
+    """Returns (view_params, gather_unit) from a LeafSpec pytree.
+
+    The embed subtree is wrapped as PartParam (consumed in place: streamed
+    chunks / TP); small top-level subtrees (remainder layers, final norm) are
+    gathered lazily per call; the stacked segment is gathered one scan slice
+    at a time by ``gather_unit``.
+
+    When cfg.gather_compute_dtype, params are cast to the compute dtype
+    BEFORE the all-gather — the gather and its transpose (the gradient
+    reduce-scatter) both move bf16 instead of f32: 2x less fsdp wire traffic
+    (§Perf hillclimb #1).
+    """
+    from repro.sharding import specs as sp
+
+    if specs is None:
+        return params, _identity_gather, _identity_gather
+
+    pre = (lambda t: cast_compute(t, cfg)) if (
+        cfg is not None and cfg.gather_compute_dtype) else (lambda t: t)
+
+    view = dict(params)
+    view["embed"] = sp.wrap_tree(params["embed"], specs["embed"])
+    gather_unit = lambda unit_params: sp.gather_tree(pre(unit_params),
+                                                     specs["stack"])
+
+    def gather_top_named(name):
+        def g(subtree):
+            return sp.gather_tree(pre(subtree), specs[name])
+        return g
+
+    tops = {k: gather_top_named(k) for k in params
+            if k not in ("embed", "stack")}
+
+    def gather_top(subtree, name):
+        if name in tops:
+            return tops[name](subtree)
+        return subtree
+
+    return view, gather_unit, gather_top
+
+
+def forward(
+    params,
+    inp: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: DistCtx = DistCtx(),
+    specs=None,
+    use_kernel: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """inp: tokens (B,S) or stub embeddings (B,S,D) -> (hidden (B,S,D), aux)."""
+    params, gather_unit, gather_top = _make_gathers(params, specs, cfg)
+    unit, n, rem = _pattern_split(cfg)
+    x = emb.embed_input(params["embed"], inp, cfg, ctx)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, unit_params):
+        x, aux = carry
+        lp = cast_compute(gather_unit(unit_params), cfg)
+        for i, kind in enumerate(unit):
+            x, a = blocks.block_forward(lp[f"{i}_{kind}"], x, positions, cfg,
+                                        ctx, kind, use_kernel)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if n > 0 and cfg.unroll_layers:
+        for i in range(n):
+            unit_i = jax.tree_util.tree_map(lambda t: t[i], params["stack"])
+            (x, aux0), _ = body((x, aux0), unit_i)
+    elif n > 0:
+        (x, aux0), _ = jax.lax.scan(body, (x, aux0), params["stack"])
+    for j, kind in enumerate(rem):
+        lp = cast_compute(gather_top(params[f"rem{j}"], f"rem{j}"), cfg)
+        x, a = blocks.block_forward(lp, x, positions, cfg, ctx, kind,
+                                    use_kernel)
+        aux0 = aux0 + a
+    fin = cast_compute(gather_top(params["final_norm"], "final_norm"), cfg)
+    x = apply_norm(fin, x, cfg)
+    return x, aux0
+
+
+def loss_fn(
+    params,
+    batch: dict,
+    cfg: ArchConfig,
+    ctx: DistCtx = DistCtx(),
+    specs=None,
+    global_denom: float | None = None,
+    use_kernel: bool = False,
+):
+    """batch: {"inputs", "labels", "positions", optional "mask"}.
+
+    Returns (loss, metrics). loss = local_nll_sum / global_denom + aux; with
+    the default denom = local count (single device).
+    """
+    x, aux = forward(params, batch["inputs"], batch["positions"], cfg, ctx,
+                     specs, use_kernel)
+    if cfg.kind == "encoder" and cfg.n_classes:
+        from repro.sharding import specs as sp
+
+        head = params["embed"]
+        if specs is not None:
+            head = sp.gather_tree(head, specs["embed"])
+        head = cast_compute(head, cfg)
+        nll, denom = emb.classifier_loss(head, x, batch["labels"], cfg, ctx)
+    else:
+        view = params["embed"]
+        if specs is not None:
+            view = sp_wrap(params["embed"], specs["embed"])
+        nll, denom = emb.lm_loss(view, x, batch["labels"], cfg,
+                                 ctx, batch.get("mask"))
+    d = global_denom if global_denom is not None else denom
+    loss = nll / d + aux
+    return loss, {"nll_sum": nll, "denom": denom, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      n_seq_shards: int = 1, cache_dtype=jnp.bfloat16):
+    """Stacked per-layer decode states (+ remainder layers')."""
+    unit, n, rem = _pattern_split(cfg)
+
+    def unit_state():
+        return {f"{i}_{kind}": blocks.init_block_state(
+            cfg, kind, batch, max_len, n_seq_shards, cache_dtype)
+            for i, kind in enumerate(unit)}
+
+    state: dict[str, Any] = {}
+    if n > 0:
+        state["stack"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), unit_state())
+    for j, kind in enumerate(rem):
+        state[f"rem{j}"] = blocks.init_block_state(
+            cfg, kind, batch, max_len, n_seq_shards, cache_dtype)
+    return state
+
+
+def decode_step(
+    params,
+    state,
+    inp: jnp.ndarray,
+    length: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: DistCtx = DistCtx(),
+    specs=None,
+):
+    """One-token decode. inp: tokens (B,1) or stub embeddings (B,1,D).
+
+    Returns (logits (B,1,V) f32, new_state). Weights are consumed in place
+    (PartParam TP) — no FSDP gather on the decode path.
+    """
+    if specs is not None:
+        params = sp_wrap(params, specs)
+    unit, n, rem = _pattern_split(cfg)
+    x = emb.embed_input(params["embed"], inp, cfg, ctx)
+
+    def body(x, xs):
+        unit_params, unit_state = xs
+        lp = cast_compute(unit_params, cfg)
+        new_states = {}
+        for i, kind in enumerate(unit):
+            key = f"{i}_{kind}"
+            x, ns = blocks.block_decode(lp[key], x, unit_state[key], length,
+                                        cfg, ctx, kind)
+            new_states[key] = ns
+        return x, new_states
+
+    if n > 0 and cfg.unroll_layers:
+        outs = []
+        for i in range(n):
+            xs_i = jax.tree_util.tree_map(lambda t: t[i],
+                                          (params["stack"], state["stack"]))
+            x, ns = body(x, xs_i)
+            outs.append(ns)
+        new_stack = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *outs)
+        state = dict(state)
+        state["stack"] = new_stack
+    elif n > 0:
+        x, new_stack = jax.lax.scan(body, x, (params["stack"], state["stack"]))
+        state = dict(state)
+        state["stack"] = new_stack
+    for j, kind in enumerate(rem):
+        lp = cast_compute(params[f"rem{j}"], cfg)
+        x, ns = blocks.block_decode(lp, x, state[f"rem{j}"], length, cfg, ctx,
+                                    kind)
+        state[f"rem{j}"] = ns
+    fin = cast_compute(params["final_norm"], cfg)
+    x = apply_norm(fin, x, cfg)
+    logits = emb.lm_logits(params["embed"], x, cfg, ctx)
+    return logits, state
+
+
+def prefill(
+    params,
+    inp: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ArchConfig,
+    ctx: DistCtx = DistCtx(),
+    specs=None,
+):
+    """Encode the prompt: returns (last hidden (B,S,D), stacked decode state)."""
+    params, gather_unit, gather_top = _make_gathers(params, specs, cfg)
+    unit, n, rem = _pattern_split(cfg)
+    x = emb.embed_input(params["embed"], inp, cfg, ctx)
+
+    def body(x, unit_params):
+        lp = cast_compute(gather_unit(unit_params), cfg)
+        states = {}
+        for i, kind in enumerate(unit):
+            key = f"{i}_{kind}"
+            x, st = blocks.block_prefill(lp[key], x, positions, cfg, ctx, kind)
+            states[key] = st
+        return x, states
+
+    state: dict[str, Any] = {}
+    if n > 0 and cfg.unroll_layers:
+        outs = []
+        for i in range(n):
+            unit_i = jax.tree_util.tree_map(lambda t: t[i], params["stack"])
+            x, st = body(x, unit_i)
+            outs.append(st)
+        state["stack"] = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *outs)
+    elif n > 0:
+        x, state["stack"] = jax.lax.scan(body, x, params["stack"])
+    for j, kind in enumerate(rem):
+        lp = cast_compute(gather_top(params[f"rem{j}"], f"rem{j}"), cfg)
+        x, st = blocks.block_prefill(lp, x, positions, cfg, ctx, kind)
+        state[f"rem{j}"] = st
+    fin = cast_compute(gather_top(params["final_norm"], "final_norm"), cfg)
+    x = apply_norm(fin, x, cfg)
+    return x, state

@@ -1,0 +1,236 @@
+"""Distributed serving: prefill + flash-decode steps on the production mesh.
+
+Layouts (DESIGN.md §distribution):
+  small archs (fsdp = ("model",)):
+      batch over "data" (+ "pod"), KV cache sequence over "model";
+      weights consumed in place with "model"-axis TP (psum on the
+      contraction dim) — activations are replicated over "model", so the
+      psums never mix positions.
+  big archs (fsdp = ("data","model")):
+      batch REPLICATED (2-D TP): weights keep dim0/"model" + dim1/"data"
+      sharding; contraction psums over "model", feature gathers over "data"
+      are valid because every device sees the full batch.
+  Windowed attention (recurrentgemma) uses a RING cache of size `window`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.common import ArchConfig, DistCtx
+from repro.sharding import specs as sp
+
+# prefill weight-replication cutoff (bf16 bytes); 0 disables
+PREFILL_REPLICATE_BYTES = int(
+    __import__("os").environ.get("PREFILL_REPLICATE_BYTES", 4 * 2**30))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    cfg: ArchConfig
+    mesh_axes: dict
+    fsdp_axes: tuple
+    batch_axes: tuple        # () for big archs (batch replicated: 2-D TP)
+    seq_axis: str | None     # cache sequence sharding
+    global_batch: int
+    max_len: int
+    # KV-cache batch sharding (may exceed batch_axes: big-arch decode shards
+    # the cache over "data" while activations stay replicated)
+    cache_batch_axes: tuple = ()
+
+
+def make_serve_plan(cfg: ArchConfig, mesh, global_batch: int,
+                    max_len: int) -> ServePlan:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fsdp = tuple(a for a in cfg.fsdp_axes if a in sizes)
+    big = "data" in fsdp
+    batch_axes: tuple = ()
+    prod = 1
+    cand = ("pod",) if big else ("pod", "data")
+    for a in cand:
+        if a in sizes and global_batch % (prod * sizes[a]) == 0:
+            batch_axes += (a,)
+            prod *= sizes[a]
+    seq_axis = "model" if ("model" in sizes and sizes["model"] > 1) else None
+    cache_len = max_len
+    if cfg.window is not None:
+        cache_len = min(max_len, cfg.window)
+    if seq_axis and cache_len % sizes["model"]:
+        seq_axis = None
+    cache_batch = batch_axes
+    if big and "data" in sizes:
+        prod2 = prod * sizes["data"]
+        if global_batch % prod2 == 0:
+            cache_batch = batch_axes + ("data",)
+    return ServePlan(cfg, sizes, fsdp, batch_axes, seq_axis, global_batch,
+                     cache_len, cache_batch)
+
+
+def _serve_ctx(plan: ServePlan) -> DistCtx:
+    return DistCtx(
+        fsdp_axes=plan.fsdp_axes,
+        seq_axis=plan.seq_axis,
+        batch_axes=plan.batch_axes,
+        ep_axis=None,           # decode MoE uses in-place expert TP
+        tp=True,
+        cache_batch_axes=plan.cache_batch_axes,
+    )
+
+
+def cache_pspecs(state_shapes, plan: ServePlan):
+    """PartitionSpecs for the decode state pytree.
+
+    attention k/v (B, S_loc, KV, hd): batch over cache_batch_axes, seq over
+    seq_axis; recurrent states: batch over batch_axes only.
+    """
+    b = plan.batch_axes or None
+    cb = plan.cache_batch_axes or None
+
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        stacked = sp.is_stacked_path(ps)
+        lead = (None,) if stacked else ()
+        nd = len(leaf.shape) - len(lead)
+        if ps.endswith("['k']") or ps.endswith("['v']"):
+            return P(*lead, cb, plan.seq_axis, None, None)
+        return P(*lead, b, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+
+def init_serve_state(cfg: ArchConfig, plan: ServePlan, dtype=jnp.bfloat16):
+    n_shards = plan.mesh_axes.get("model", 1) if plan.seq_axis else 1
+    return transformer.init_decode_state(
+        cfg, plan.global_batch, plan.max_len, 1, dtype)
+
+
+def build_serve_step(cfg: ArchConfig, mesh, plan: ServePlan,
+                     params_shapes=None, donate: bool = True):
+    """Returns (jitted serve_step(params, state, inputs, length)
+    -> (logits, state), shardings, specs)."""
+    if params_shapes is None:
+        params_shapes = jax.eval_shape(
+            functools.partial(transformer.init_model, cfg=cfg),
+            jax.random.PRNGKey(0))
+    param_specs = sp.build_specs(params_shapes, cfg, plan.mesh_axes, "serve")
+    p_ps = sp.param_pspecs(params_shapes, param_specs)
+    ctx = _serve_ctx(plan)
+
+    state_shapes = jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, plan.global_batch,
+                                              plan.max_len))
+    st_ps = cache_pspecs(state_shapes, plan)
+
+    b = plan.batch_axes or None
+    if cfg.input_mode == "tokens":
+        in_ps = P(b, None)
+    else:
+        in_ps = P(b, None, None)
+
+    def step(params, state, inputs, length):
+        logits, state = transformer.decode_step(
+            params, state, inputs, length, cfg, ctx, specs=param_specs)
+        return logits, state
+
+    mapped = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(p_ps, st_ps, in_ps, P()),
+        out_specs=(P(b, None, None), st_ps),
+        check_vma=False)
+    jitted = jax.jit(mapped, donate_argnums=(1,) if donate else ())
+    shardings = {
+        "params": jax.tree_util.tree_map(
+            lambda ps: NamedSharding(mesh, ps), p_ps,
+            is_leaf=lambda x: isinstance(x, P)),
+        "state": jax.tree_util.tree_map(
+            lambda ps: NamedSharding(mesh, ps), st_ps,
+            is_leaf=lambda x: isinstance(x, P)),
+    }
+    return jitted, shardings, param_specs, state_shapes, st_ps
+
+
+def build_prefill_step(cfg: ArchConfig, mesh, plan: ServePlan,
+                       seq_len: int, params_shapes=None):
+    """Prefill uses the TRAIN layout (gathered weights, seq-parallel
+    activations); it returns final-position hidden states and the populated
+    seq-sharded cache."""
+    if params_shapes is None:
+        params_shapes = jax.eval_shape(
+            functools.partial(transformer.init_model, cfg=cfg),
+            jax.random.PRNGKey(0))
+    import numpy as np
+
+    n_param_bytes = 2 * sum(int(np.prod(l.shape)) for l in
+                            jax.tree_util.tree_leaves(params_shapes))
+    if n_param_bytes <= PREFILL_REPLICATE_BYTES:
+        # small model: replicate bf16 weights — prefill is compute-bound and
+        # this removes ALL per-layer fsdp gathers (§Perf hillclimb #4)
+        def _repl(path, l):
+            ps = jax.tree_util.keystr(path)
+            nd = len(l.shape) - (1 if sp.is_stacked_path(ps) else 0)
+            return sp.LeafSpec((None,) * nd, ())
+
+        param_specs = jax.tree_util.tree_map_with_path(_repl, params_shapes)
+    else:
+        param_specs = sp.build_specs(params_shapes, cfg, plan.mesh_axes,
+                                     "train")
+    p_ps = sp.param_pspecs(params_shapes, param_specs)
+
+    seq_axis = ("model" if ("model" in plan.mesh_axes and
+                            seq_len % plan.mesh_axes["model"] == 0 and
+                            plan.mesh_axes["model"] > 1) else None)
+    # prefill parallelizes batch over data even for big archs (activations
+    # stay local; weight gathers don't mix positions)
+    sizes = plan.mesh_axes
+    batch_axes: tuple = ()
+    prod = 1
+    for a in ("pod", "data"):
+        if a in sizes and plan.global_batch % (prod * sizes[a]) == 0:
+            batch_axes += (a,)
+            prod *= sizes[a]
+    ctx = DistCtx(
+        fsdp_axes=plan.fsdp_axes,
+        seq_axis=seq_axis,
+        batch_axes=batch_axes,
+        ep_axis=("model" if cfg.moe is not None and seq_axis else None),
+    )
+    b = batch_axes or None
+    if cfg.input_mode == "tokens":
+        in_ps = P(b, seq_axis)
+    else:
+        in_ps = P(b, seq_axis, None)
+    pos_ps = P(None, b, seq_axis) if cfg.rope_kind == "mrope" else P(b, seq_axis)
+
+    state_shapes = jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, plan.global_batch, seq_len))
+
+    def spec_for_state(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        stacked = sp.is_stacked_path(ps)
+        lead = (None,) if stacked else ()
+        nd = len(leaf.shape) - len(lead)
+        if ps.endswith("['k']") or ps.endswith("['v']"):
+            return P(*lead, b, seq_axis, None, None)
+        return P(*lead, b, *([None] * (nd - 1)))
+
+    st_ps = jax.tree_util.tree_map_with_path(spec_for_state, state_shapes)
+
+    def step(params, inputs, positions):
+        x, state = transformer.prefill(params, inputs, positions, cfg, ctx,
+                                       specs=param_specs)
+        return x, state
+
+    mapped = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(p_ps, in_ps, pos_ps),
+        out_specs=(P(b, seq_axis, None), st_ps),
+        check_vma=False)
+    return jax.jit(mapped), param_specs

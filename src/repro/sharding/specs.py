@@ -1,0 +1,231 @@
+"""Per-leaf sharding specs: how every parameter is laid out on the mesh.
+
+The rules (derived in DESIGN.md §distribution; the invariant is that
+ACTIVATIONS are never psum'd/gathered over axes that shard positions):
+
+train layout (mode="train")
+  tok_embed (V, D)   -> (None, F)        D-sharded; lookup streams W chunks
+  head      (D, V)   -> (F, None)        D-sharded; loss streams W chunks
+  expert  (E, ., .)  -> E over "model", the expert-FF dim over "data" (big)
+  weight 2-D         -> dim0 over "model", dim1 over "data" (big archs);
+                        fallbacks when a dim does not divide
+  vector 1-D         -> over "model" when divisible
+  (F = the arch's fsdp_axes, ("model",) or ("data","model"))
+
+serve layout (mode="serve")
+  tok_embed          -> (F, None)        V-sharded; masked lookup + psum
+                        (falls back to D-sharded + chunked when V % |F| != 0)
+  vectors            -> replicated (decode consumes them in place)
+  everything else    -> as train (decode TP: psum dim0 / gather dim1)
+
+``gather_dims`` lists what the train scan-body all-gathers to reconstruct the
+full weight; expert leaves keep their E dim sharded (expert parallelism).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, PartParam
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    dims: tuple            # per-dim: None | tuple[str, ...]
+    gather_dims: tuple     # ((dim, axes), ...) to all-gather for train compute
+    role: str = "weight"
+
+    def pspec(self, extra_leading: int = 0) -> P:
+        lead = (None,) * extra_leading
+        return P(*lead, *self.dims)
+
+
+def _axsize(mesh_axes: dict[str, int], axes) -> int:
+    return int(np.prod([mesh_axes[a] for a in axes])) if axes else 1
+
+
+def _divides(n: int, mesh_axes, axes) -> bool:
+    return axes and n % _axsize(mesh_axes, axes) == 0
+
+
+def _leaf_role(path_str: str, shape: tuple, cfg: ArchConfig) -> str:
+    if "tok_embed" in path_str:
+        return "embed"
+    if "cls_head" in path_str:
+        return "weight"
+    if "['head']" in path_str:
+        return "head"
+    if "['moe']" in path_str and len(shape) == 3:
+        return "expert"
+    if len(shape) >= 2:
+        return "weight"
+    if len(shape) == 1:
+        return "vector"
+    return "scalar"
+
+
+# parameter TABLES consumed whole (token-shift mixes, conv kernels, LoRA-B,
+# bonus u): replicated in the serve layout (decode unwraps them in place).
+_SERVE_TABLES = ("['mu']", "['conv']", "['wb']", "['u']", "['mu_c']")
+
+
+def leaf_spec(
+    path_str: str,
+    shape: tuple,
+    cfg: ArchConfig,
+    mesh_axes: dict[str, int],
+    mode: str,
+) -> LeafSpec:
+    fsdp = tuple(a for a in cfg.fsdp_axes if a in mesh_axes)
+    model_ax = tuple(a for a in fsdp if a == "model")
+    data_ax = tuple(a for a in fsdp if a != "model")
+    role = _leaf_role(path_str, shape, cfg)
+    nd = len(shape)
+    dims: list = [None] * nd
+    gather: list = []
+
+    if mode == "serve" and (role == "vector" or role == "scalar" or
+                            any(t in path_str for t in _SERVE_TABLES)):
+        return LeafSpec(tuple(dims), (), role)
+
+    if role == "embed":
+        v, d = shape
+        if mode == "serve" and _divides(v, mesh_axes, fsdp):
+            dims[0] = fsdp                       # vocab-sharded masked lookup
+        elif _divides(d, mesh_axes, fsdp):
+            dims[1] = fsdp                       # D-sharded, chunk-streamed
+        elif _divides(d, mesh_axes, model_ax):
+            dims[1] = model_ax
+        return LeafSpec(tuple(dims), (), role)
+
+    if role == "head":
+        d, v = shape
+        if _divides(d, mesh_axes, fsdp):
+            dims[0] = fsdp                       # D-sharded, chunk-streamed
+        elif _divides(d, mesh_axes, model_ax):
+            dims[0] = model_ax
+        return LeafSpec(tuple(dims), (), role)
+
+    if role == "expert":
+        e = shape[0]
+        if _divides(e, mesh_axes, model_ax):
+            dims[0] = model_ax                   # expert parallelism (kept)
+        if data_ax:
+            # shard the expert-FF dim over "data": it's dim 2 for up/gate
+            # (E, D, F) and dim 1 for down (E, F, D) — pick by name.
+            fdim = 1 if "down" in path_str else 2
+            if _divides(shape[fdim], mesh_axes, data_ax):
+                dims[fdim] = data_ax
+                gather.append((fdim, data_ax))
+        return LeafSpec(tuple(dims), tuple(gather), role)
+
+    if role == "weight":
+        if nd == 2:
+            d0, d1 = shape
+            if _divides(d0, mesh_axes, model_ax):
+                dims[0] = model_ax
+                gather.append((0, model_ax))
+            if data_ax and _divides(d1, mesh_axes, data_ax):
+                dims[1] = data_ax
+                gather.append((1, data_ax))
+            elif dims[0] is None and _divides(d1, mesh_axes, model_ax):
+                dims[1] = model_ax
+                gather.append((1, model_ax))
+            # leftover capacity: if data axis unused and dim0 divides by all
+            if data_ax and dims[1] is None and dims[0] == model_ax \
+                    and _divides(d0, mesh_axes, fsdp):
+                dims[0] = fsdp
+                gather[0] = (0, fsdp)
+        else:  # conv kernels etc: shard the widest divisible dim
+            order = sorted(range(nd), key=lambda i: -shape[i])
+            for i in order:
+                if _divides(shape[i], mesh_axes, model_ax):
+                    dims[i] = model_ax
+                    gather.append((i, model_ax))
+                    break
+        return LeafSpec(tuple(dims), tuple(gather), role)
+
+    if role == "vector":
+        if mode == "train" and _divides(shape[0], mesh_axes, model_ax):
+            dims[0] = model_ax
+            gather.append((0, model_ax))
+        return LeafSpec(tuple(dims), tuple(gather), role)
+
+    return LeafSpec(tuple(dims), (), role)
+
+
+def build_specs(params_shapes, cfg: ArchConfig, mesh_axes: dict[str, int],
+                mode: str = "train", stacked_prefixes: tuple = ("stack",)):
+    """Pytree of LeafSpec matching ``params_shapes`` (eval_shape output).
+
+    Leaves under ``stack`` have a leading layer dim which is excluded from
+    the per-layer spec (it is prepended as None at pspec time).
+    """
+
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        stacked = any(f"'{p}'" in ps.split("]")[0] for p in stacked_prefixes)
+        if stacked:
+            shape = shape[1:]
+        return leaf_spec(ps, shape, cfg, mesh_axes, mode)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def is_stacked_path(path_str: str, stacked_prefixes=("stack",)) -> bool:
+    head = path_str.split("]")[0]
+    return any(f"'{p}'" in head for p in stacked_prefixes)
+
+
+def param_pspecs(params_shapes, specs, stacked_prefixes=("stack",)):
+    """PartitionSpec pytree for jit in_shardings."""
+
+    def one(path, leaf, spec):
+        ps = jax.tree_util.keystr(path)
+        extra = 1 if is_stacked_path(ps, stacked_prefixes) else 0
+        return spec.pspec(extra)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes, specs)
+
+
+# ---------------------------------------------------------------------------
+# runtime helpers (inside shard_map)
+
+
+def gather_leaf(x, spec: LeafSpec):
+    for dim, axes in spec.gather_dims:
+        x = jax.lax.all_gather(x, tuple(axes), axis=dim, tiled=True)
+    return x
+
+
+def gather_tree(tree, specs):
+    return jax.tree_util.tree_map(gather_leaf, tree, specs)
+
+
+def wrap_tree(tree, specs):
+    """Wrap leaves as PartParam for in-place (TP / streamed) consumption."""
+    return jax.tree_util.tree_map(
+        lambda x, s: PartParam(x, s.dims), tree, specs)
+
+
+def shard_like_leaf(x, spec: LeafSpec, mesh_axes: dict[str, int],
+                    index: dict[str, int]):
+    """Slice a FULL (host) array down to the local shard (init/checkpoint)."""
+    for d, axes in enumerate(spec.dims):
+        if not axes:
+            continue
+        n = _axsize(mesh_axes, axes)
+        # linear index over axes, row-major
+        li = 0
+        for a in axes:
+            li = li * mesh_axes[a] + index[a]
+        size = x.shape[d] // n
+        x = jax.lax.dynamic_slice_in_dim(x, li * size, size, axis=d)
+    return x

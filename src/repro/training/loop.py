@@ -1,0 +1,76 @@
+"""Training loop: drives a (possibly distributed) step function over a data
+stream with logging, eval, and checkpointing. Used by the examples and the
+paper-figure benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import to_device
+
+
+@dataclasses.dataclass
+class LoopResult:
+    train_losses: list
+    val_losses: list
+    wall_times: list
+    wire_bytes_per_step: float
+    steps: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def run(
+    step_fn: Callable,
+    state,
+    stream,
+    n_steps: int,
+    eval_fn: Callable | None = None,
+    eval_stream=None,
+    eval_every: int = 0,
+    log_every: int = 20,
+    shardings=None,
+    log: Callable = print,
+    bandwidth_bps: float | None = None,
+) -> tuple[Any, LoopResult]:
+    """``bandwidth_bps``: when set, wall-times are augmented with the MODELED
+    inter-node transfer time (paper Fig. 10 bandwidth-constrained study)."""
+    train_losses, val_losses, walls = [], [], []
+    wire = 0.0
+    t0 = time.perf_counter()
+    for step in range(n_steps):
+        batch = to_device(stream.batch(step), shardings)
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        wire = float(metrics.get("wire_bytes", 0.0))
+        train_losses.append(loss)
+        wall = time.perf_counter() - t0
+        if bandwidth_bps:
+            wall += (step + 1) * wire * 8.0 / bandwidth_bps
+        walls.append(wall)
+        if eval_fn is not None and eval_every and (step + 1) % eval_every == 0:
+            val = eval_fn(state, eval_stream)
+            val_losses.append((step + 1, float(val)))
+            log(f"step {step+1:5d} loss {loss:.4f} val {float(val):.4f}")
+        elif log_every and (step + 1) % log_every == 0:
+            log(f"step {step+1:5d} loss {loss:.4f}")
+    return state, LoopResult(train_losses, val_losses, walls, wire, n_steps)
+
+
+def make_eval_fn(loss_step_fn, n_batches: int = 4):
+    """Average loss over a few held-out batches (offset into the stream)."""
+
+    def eval_fn(state, stream):
+        tot = 0.0
+        for i in range(n_batches):
+            batch = to_device(stream.batch(10_000_000 + i))
+            tot += float(loss_step_fn(state, batch))
+        return tot / n_batches
+
+    return eval_fn

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, total_steps: int, warmup_frac: float = 0.04,
+                  final_frac: float = 0.1):
+    warm = max(1, int(total_steps * warmup_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        wu = lr * jnp.minimum(step / warm, 1.0)
+        t = jnp.clip((step - warm) / max(1, total_steps - warm), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warm, wu, cos)
+
+    return f
+
+
+def warmup_linear(lr: float, total_steps: int, warmup_frac: float = 0.04):
+    warm = max(1, int(total_steps * warmup_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        wu = lr * jnp.minimum(step / warm, 1.0)
+        t = jnp.clip((step - warm) / max(1, total_steps - warm), 0.0, 1.0)
+        return jnp.where(step < warm, wu, lr * (1 - t))
+
+    return f

@@ -1,0 +1,117 @@
+"""TrainState: params + decoupled optimizer state + step, with the sharding
+plan that places it on the production mesh."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.optimizers.base import Optimizer
+from repro.models.common import ArchConfig
+from repro.sharding import specs as sp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """Static description of how one (arch x shape x mesh) train step runs."""
+
+    cfg: ArchConfig
+    mesh_axes: dict                    # axis name -> size
+    fsdp_axes: tuple                   # paper's S (within the pod)
+    repl_axes: tuple                   # paper's R (decoupled sync axes)
+    batch_axes: tuple                  # axes sharding the global batch
+    seq_axis: str | None               # axis sharding the sequence
+    global_batch: int
+    seq_len: int
+    microbatches: int = 1
+
+    @property
+    def n_repl(self) -> int:
+        return int(np.prod([self.mesh_axes[a] for a in self.repl_axes])) \
+            if self.repl_axes else 1
+
+    @property
+    def global_tokens(self) -> int:
+        return self.global_batch * self.seq_len
+
+
+def make_train_plan(cfg: ArchConfig, mesh, global_batch: int, seq_len: int,
+                    microbatches: int = 1) -> TrainPlan:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fsdp = tuple(a for a in cfg.fsdp_axes if a in sizes)
+    repl = tuple(a for a in (("pod",) + tuple(cfg.repl_axes))
+                 if a in sizes and a not in fsdp)
+    batch_axes: tuple = ()
+    prod = 1
+    for a in ("pod", "data"):
+        if a in sizes and global_batch % (prod * sizes[a]) == 0:
+            batch_axes += (a,)
+            prod *= sizes[a]
+    seq_axis = "model" if ("model" in sizes
+                           and seq_len % sizes["model"] == 0
+                           and sizes["model"] > 1) else None
+    return TrainPlan(cfg, sizes, fsdp, repl, batch_axes, seq_axis,
+                     global_batch, seq_len, microbatches)
+
+
+def batch_pspecs(plan: TrainPlan) -> dict:
+    cfg = plan.cfg
+    b, s = plan.batch_axes or None, plan.seq_axis
+    inputs = P(b, s) if cfg.input_mode == "tokens" else P(b, s, None)
+    if cfg.rope_kind == "mrope":
+        pos = P(None, b, s)
+    else:
+        pos = P(b, s)
+    if cfg.kind == "encoder" and cfg.n_classes and cfg.family != "audio":
+        labels = P(b)
+    else:
+        labels = P(b, s)
+    return {"inputs": inputs, "labels": labels, "positions": pos}
+
+
+def state_pspecs(plan: TrainPlan, params_shapes, param_specs, optimizer: Optimizer):
+    """PartitionSpecs for {params, opt, step}.
+
+    Optimizer state subtrees that mirror params get a LEADING replica axis
+    (global shape (n_repl, *param.shape)) — the decoupled/divergent state.
+    """
+    p_ps = sp.param_pspecs(params_shapes, param_specs)
+    repl = tuple(plan.repl_axes) or None
+
+    def opt_entry(name, subtree_ps):
+        if name == "step":
+            return P()
+        return jax.tree_util.tree_map(
+            lambda ps: P(repl, *ps), subtree_ps)
+
+    opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+    opt_ps = {k: opt_entry(k, p_ps) for k in opt_shapes}
+    pspecs = {"params": p_ps, "opt": opt_ps, "step": P()}
+    if optimizer.params_diverge:
+        pspecs["params"] = jax.tree_util.tree_map(
+            lambda ps: P(repl, *ps), p_ps)
+    return pspecs
+
+
+def init_state(key, cfg: ArchConfig, optimizer: Optimizer, plan: TrainPlan):
+    """Host-side (single device) state init; sharded placement is the
+    launcher's job (jax.device_put with NamedSharding)."""
+    from repro.models import init_model
+
+    params = init_model(key, cfg)
+    opt = optimizer.init(params)
+    n_repl = plan.n_repl
+
+    def lead(x):
+        return jnp.broadcast_to(x, (n_repl,) + x.shape).copy()
+
+    opt = {k: (v if k == "step" else jax.tree_util.tree_map(lead, v))
+           for k, v in opt.items()}
+    if optimizer.params_diverge:
+        params = jax.tree_util.tree_map(lead, params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}

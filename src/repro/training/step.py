@@ -1,0 +1,155 @@
+"""The distributed train step: shard_map(FSDP fwd/bwd + decoupled optimizer).
+
+Data flow per step (paper Alg. 1, TPU-native):
+  1. every device computes fwd/bwd on ITS (batch-shard x seq-shard) positions,
+     all-gathering one scan-unit of params at a time over the fsdp axes S;
+  2. autodiff of those gathers reduce-scatters the gradients back to shards
+     (the paper's GradReduceScatter) — summed over S automatically because the
+     loss is local_sum / GLOBAL_denominator;
+  3. the optimizer accumulates DECOUPLED momentum per replication group R and
+     synchronizes only the replicator's compressed payload over R;
+  4. (DiLoCo) params are federated-averaged over R every period.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.optimizers.base import Optimizer, apply_updates
+from repro.models import transformer
+from repro.models.common import ArchConfig, DistCtx
+from repro.sharding import specs as sp
+from repro.training.state import TrainPlan, batch_pspecs, state_pspecs
+
+
+def _strip_lead(tree):
+    return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+
+def _add_lead(tree):
+    return jax.tree_util.tree_map(lambda x: x[None], tree)
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh,
+    optimizer: Optimizer,
+    plan: TrainPlan,
+    params_shapes=None,
+    use_kernel: bool = False,
+    donate: bool = True,
+):
+    """Returns (jitted step_fn(state, batch) -> (state, metrics), shardings).
+
+    ``state`` = {"params", "opt", "step"}; opt subtrees carry a leading
+    replica axis (see training.state).
+    """
+    if params_shapes is None:
+        params_shapes = jax.eval_shape(
+            functools.partial(transformer.init_model, cfg=cfg),
+            jax.random.PRNGKey(0))
+    param_specs = sp.build_specs(params_shapes, cfg, plan.mesh_axes, "train")
+    pspecs = state_pspecs(plan, params_shapes, param_specs, optimizer)
+    b_ps = batch_pspecs(plan)
+
+    ctx = DistCtx(
+        fsdp_axes=plan.fsdp_axes,
+        seq_axis=plan.seq_axis,
+        batch_axes=plan.batch_axes,
+        ep_axis=("model" if (cfg.moe is not None and "model" in
+                             plan.mesh_axes and plan.seq_axis) else None),
+    )
+    all_axes = tuple(plan.mesh_axes)
+    # each replication-group member normalizes by ITS OWN token count (the
+    # paper's per-node batch-mean gradient); the replicator then MEANS the
+    # (compressed) contributions over R.
+    count = float(plan.global_tokens) if not (
+        cfg.kind == "encoder" and cfg.n_classes and cfg.family != "audio"
+    ) else float(plan.global_batch)
+    global_denom = count / plan.n_repl
+
+    def local_loss(params, batch):
+        return transformer.loss_fn(
+            params, batch, cfg, ctx, specs=param_specs,
+            global_denom=global_denom, use_kernel=use_kernel)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if optimizer.params_diverge:
+            params = _strip_lead(params)
+        opt = {k: (v if k == "step" else _strip_lead(v))
+               for k, v in state["opt"].items()}
+
+        if plan.microbatches > 1:
+            k = plan.microbatches
+
+            def micro(carry, mb):
+                g_acc, nll, den = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    local_loss, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, nll + metrics["nll_sum"],
+                        den + metrics["denom"]), None
+
+            def split_mb(x, batch_dim=0):
+                b = x.shape[batch_dim]
+                assert b % k == 0, (x.shape, k)
+                shape = (x.shape[:batch_dim] + (k, b // k)
+                         + x.shape[batch_dim + 1:])
+                return jnp.moveaxis(x.reshape(shape), batch_dim, 0)
+
+            mbs = {key: split_mb(v, 1 if (key == "positions" and
+                                          cfg.rope_kind == "mrope") else 0)
+                   for key, v in batch.items()}
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (grads, nll, den), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), mbs)
+            metrics = {"nll_sum": nll, "denom": den}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                local_loss, has_aux=True)(params, batch)
+
+        updates, opt, aux = optimizer.update(
+            grads, opt, params, axes=plan.repl_axes)
+        params = apply_updates(params, updates)
+        params = optimizer.postprocess_params(
+            params, step=state["step"], axes=plan.repl_axes)
+
+        # reporting (psum over the whole mesh)
+        nll = metrics["nll_sum"]
+        den = metrics["denom"]
+        if all_axes:
+            nll = jax.lax.psum(nll, all_axes)
+            den = jax.lax.psum(den, all_axes)
+        out_metrics = {
+            "loss": nll / jnp.maximum(den, 1.0),
+            "wire_bytes": jnp.asarray(aux.wire_bytes, jnp.float32),
+        }
+
+        if optimizer.params_diverge:
+            params = _add_lead(params)
+        opt = {k: (v if k == "step" else _add_lead(v))
+               for k, v in opt.items()}
+        return ({"params": params, "opt": opt, "step": state["step"] + 1},
+                out_metrics)
+
+    in_specs = ({"params": pspecs["params"], "opt": pspecs["opt"],
+                 "step": pspecs["step"]}, b_ps)
+    out_specs = ({"params": pspecs["params"], "opt": pspecs["opt"],
+                  "step": pspecs["step"]},
+                 {"loss": P(), "wire_bytes": P()})
+
+    mapped = jax.shard_map(step_fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+    shardings = jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps), (in_specs, out_specs),
+        is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(mapped, donate_argnums=(0,) if donate else ())
+    return jitted, shardings, param_specs

@@ -1,0 +1,15 @@
+from repro.utils.tree import (
+    tree_map_with_path_rng,
+    leaf_numel,
+    tree_numel,
+    tree_allclose,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "tree_map_with_path_rng",
+    "leaf_numel",
+    "tree_numel",
+    "tree_allclose",
+    "tree_zeros_like",
+]

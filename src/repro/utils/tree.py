@@ -1,0 +1,54 @@
+"""Small pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaf_numel(x) -> int:
+    return int(np.prod(x.shape)) if x.shape else 1
+
+
+def tree_numel(tree) -> int:
+    return sum(leaf_numel(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(la, lb)
+    )
+
+
+def _path_seed(path, salt: int) -> int:
+    """Deterministic 31-bit seed from a pytree key path + salt."""
+    s = jax.tree_util.keystr(path).encode() + salt.to_bytes(8, "little", signed=False)
+    return int.from_bytes(hashlib.blake2s(s, digest_size=4).digest(), "little") & 0x7FFFFFFF
+
+
+def tree_map_with_path_rng(fn, tree, *rest, salt: int = 0):
+    """tree_map where ``fn(leaf, *rest_leaves, seed=...)`` gets a per-leaf
+    deterministic integer seed derived from the leaf's key path.
+
+    The seed is identical across replicas/processes (it depends only on the
+    pytree structure), which is what seeded replication schemes (random /
+    striding) rely on to avoid transmitting indices.
+    """
+
+    def wrapped(path, leaf, *r):
+        return fn(leaf, *r, seed=_path_seed(path, salt))
+
+    return jax.tree_util.tree_map_with_path(wrapped, tree, *rest)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see ONE device.
+# Multi-device semantics are tested via subprocesses (test_dist_subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,78 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compression as C
+
+
+@pytest.mark.parametrize("shape", [(100,), (17, 13), (3, 5, 7)])
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_chunk_roundtrip(shape, chunk):
+    x = np.random.RandomState(0).randn(*shape).astype(np.float32)
+    c = C.chunk(jnp.asarray(x), chunk)
+    assert c.shape[1] == chunk
+    y = C.unchunk(c, shape)
+    np.testing.assert_allclose(np.asarray(y), x)
+
+
+def test_extract_decode_consistency():
+    m = jnp.asarray(np.random.RandomState(1).randn(500).astype(np.float32))
+    vals, idx, q = C.dct_topk_extract(m, 64, 8)
+    q2 = C.decode_dct_topk(vals, idx, 64, m.shape)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(q2), atol=1e-6)
+
+
+def test_residual_energy_decreases():
+    """Extracting top-k must remove at least k/s of the energy on average
+    (top-k >= random-k in the orthonormal DCT domain)."""
+    m = jnp.asarray(np.random.RandomState(2).randn(4096).astype(np.float32))
+    _, _, q = C.dct_topk_extract(m, 64, 8)
+    resid = m - q
+    e_m = float((m ** 2).sum())
+    e_r = float((resid ** 2).sum())
+    assert e_r < e_m * (1 - 8 / 64)
+
+
+def test_wire_accounting_demo_vs_random():
+    """At equal target rate, random ships ~2x the VALUES of demo
+    (demo pays for indices): the paper's bandwidth argument."""
+    numel, rate, chunk = 2 ** 16, 1 / 8, 64
+    wire = C.WireFormat(value_bytes=4, index_bytes=4)
+    k = C.rate_to_topk(rate, chunk, wire)
+    demo_b = C.demo_wire_bytes(numel, chunk, k, wire)
+    rand_b = C.masked_wire_bytes(numel, rate, wire)
+    # equal bandwidth (within rounding)
+    assert abs(demo_b - rand_b) / rand_b < 0.15
+    # demo transmits half as many coefficient values
+    demo_vals = (numel // chunk) * k
+    rand_vals = int(numel * rate)
+    assert demo_vals * 2 == pytest.approx(rand_vals, rel=0.15)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(16, 128), st.integers(1, 16), st.integers(0, 10**6))
+def test_topk_payload_is_true_topk(chunk, k, seed):
+    k = min(k, chunk)
+    m = jnp.asarray(np.random.RandomState(seed % 99991).randn(chunk * 3)
+                    .astype(np.float32))
+    vals, idx, q = C.dct_topk_extract(m, chunk, k)
+    from repro.core import dct
+
+    coeff = np.asarray(dct.dct(C.chunk(m, chunk)))
+    mag = np.abs(coeff)
+    kept = np.sort(np.abs(np.asarray(vals)), axis=-1)
+    ref = np.sort(mag, axis=-1)[:, -k:]
+    np.testing.assert_allclose(kept, ref, atol=1e-5)
+
+
+def test_masks_reproducible_across_replicas():
+    m1 = C.random_mask((100,), 0.25, seed=42, step=7)
+    m2 = C.random_mask((100,), 0.25, seed=42, step=7)
+    assert bool(jnp.all(m1 == m2))
+    s1 = C.striding_mask((100,), 4, step=3)
+    assert int(s1.sum()) == 25
+    s2 = C.striding_mask((100,), 4, step=4)  # offset rotates with step
+    assert not bool(jnp.all(s1 == s2))

@@ -1,0 +1,39 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.fft
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dct
+
+
+@pytest.mark.parametrize("n", [16, 32, 64, 128, 256])
+def test_roundtrip(n):
+    x = np.random.RandomState(n).randn(7, n).astype(np.float32)
+    y = dct.dct(jnp.asarray(x))
+    xr = dct.idct(y)
+    np.testing.assert_allclose(np.asarray(xr), x, atol=2e-5)
+
+
+@pytest.mark.parametrize("n", [16, 64, 96])
+def test_matches_scipy_ortho(n):
+    x = np.random.RandomState(0).randn(5, n).astype(np.float32)
+    y = np.asarray(dct.dct(jnp.asarray(x)))
+    ys = scipy.fft.dct(x, type=2, norm="ortho", axis=-1)
+    np.testing.assert_allclose(y, ys, atol=2e-5)
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_basis_orthonormal(n):
+    c = dct._dct_basis_np(n)          # float64 host-side basis
+    np.testing.assert_allclose(c @ c.T, np.eye(n), atol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=128),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_energy_preserved(n, seed):
+    x = np.random.RandomState(seed % 10000).randn(3, n).astype(np.float32)
+    y = np.asarray(dct.dct(jnp.asarray(x)))
+    np.testing.assert_allclose((y ** 2).sum(), (x ** 2).sum(), rtol=1e-4)

@@ -1,0 +1,31 @@
+"""Multi-device semantics, isolated in subprocesses so the main pytest
+process keeps a single CPU device (the dry-run flag must never leak)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "dist_scripts")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, script)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"{script} failed:\n{r.stdout}\n{r.stderr}"
+    assert "OK" in r.stdout, r.stdout
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_distributed_full_sync_matches_reference():
+    _run("train_equivalence.py")
+
+
+@pytest.mark.slow
+def test_decoupled_momentum_diverges_across_replicas():
+    _run("decoupled_divergence.py")

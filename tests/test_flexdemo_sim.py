@@ -1,0 +1,94 @@
+"""N-replica simulation of the decoupled schemes WITHOUT a mesh: replicas are
+a python list; the collective is replaced by an explicit mean of payloads.
+Validates the paper's core invariants:
+
+  * per-step schemes keep parameters bit-identical across R while the
+    momenta DIVERGE (decoupled);
+  * full replication == data-parallel reference (mean gradient);
+  * DiLoCo parameters diverge between syncs and re-converge at the sync.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FlexConfig, apply_updates
+from repro.core.flexdemo import communicate_tree
+from repro.core.optimizers import make_optimizer
+
+
+def _simulate(scheme, n_replicas=4, n_steps=6, sign=True):
+    """Manual replica simulation mirroring demo_sgd's update rule."""
+    rng = np.random.RandomState(0)
+    flex = FlexConfig(scheme=scheme, rate=1 / 4, sign=sign)
+    rep = flex.make()
+    beta, lr = 0.9, 1e-2
+    params = [jnp.asarray(rng.randn(128).astype(np.float32))] * n_replicas
+    moms = [jnp.zeros((128,))] * n_replicas
+    for step in range(n_steps):
+        grads = [jnp.asarray(rng.randn(128).astype(np.float32))
+                 for _ in range(n_replicas)]
+        moms = [beta * m + g for m, g in zip(moms, grads)]
+        outs = [rep.communicate_leaf(m, step=jnp.asarray(step), seed=5,
+                                     axes=(), sign=sign) for m in moms]
+        # emulate the collective: mean of local (decoded) payloads
+        q_mean = sum(o.q_sync for o in outs) / n_replicas
+        moms = [o.m_residual for o in outs]
+        if scheme == "diloco":
+            # DiLoCo: local updates; federated average every period (4)
+            params = [p - lr * o.q_sync for p, o in zip(params, outs)]
+            if step % 4 == 3:
+                avg = sum(params) / n_replicas
+                params = [avg] * n_replicas
+        else:
+            params = [p - lr * q_mean for p in params]
+        yield step, params, moms
+
+
+@pytest.mark.parametrize("scheme", ["demo", "random", "striding", "full"])
+def test_params_stay_identical_momenta_diverge(scheme):
+    last = None
+    for step, params, moms in _simulate(scheme):
+        for p in params[1:]:
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(params[0]))
+        last = moms
+    diffs = float(jnp.abs(last[0] - last[1]).max())
+    assert diffs > 0, "momenta should be decoupled (divergent)"
+
+
+def test_diloco_divergence_and_resync():
+    traj = list(_simulate("diloco", n_steps=8, sign=False))
+    # between syncs params differ...
+    _, params3, _ = traj[2]
+    assert float(jnp.abs(params3[0] - params3[1]).max()) > 0
+    # ...and re-converge at the sync step (step 3, 7)
+    _, params4, _ = traj[3]
+    np.testing.assert_allclose(np.asarray(params4[0]), np.asarray(params4[1]))
+
+
+def test_full_equals_mean_gradient_sgd():
+    """full replicator + momentum-SGD == classic synchronous data parallel."""
+    rng = np.random.RandomState(1)
+    n, beta, lr = 3, 0.9, 0.1
+    flex = FlexConfig(scheme="full", sign=False)
+    rep = flex.make()
+    p_dist = jnp.zeros((32,))
+    moms = [jnp.zeros((32,))] * n
+    p_ref = jnp.zeros((32,))
+    m_ref = jnp.zeros((32,))
+    for step in range(5):
+        grads = [jnp.asarray(rng.randn(32).astype(np.float32))
+                 for _ in range(n)]
+        moms = [beta * m + g for m, g in zip(moms, grads)]
+        outs = [rep.communicate_leaf(m, step=jnp.asarray(step), seed=0,
+                                     axes=(), sign=False) for m in moms]
+        q_mean = sum(o.q_sync for o in outs) / n
+        moms = [o.m_residual for o in outs]
+        p_dist = p_dist - lr * q_mean
+        g_mean = sum(grads) / n
+        m_ref = beta * m_ref + g_mean
+        p_ref = p_ref - lr * m_ref
+    np.testing.assert_allclose(np.asarray(p_dist), np.asarray(p_ref),
+                               atol=1e-5)

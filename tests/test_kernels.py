@@ -1,0 +1,96 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on this CPU
+container; TPU v5e is the compile target) vs the pure-jnp ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dct_topk.ops import dct_topk
+from repro.kernels.dct_topk.ref import dct_topk_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.wkv6.ops import wkv6_chunked
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+@pytest.mark.parametrize("n,s,k", [
+    (4096, 64, 8), (1000, 32, 4), (8192, 128, 16), (300, 16, 2),
+    (2 ** 15, 256, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dct_topk_vs_ref(n, s, k, dtype):
+    m = jnp.asarray(np.random.RandomState(n + s).randn(n), dtype)
+    vals, idx, q = dct_topk(m, s, k, interpret=True)
+    pad = (-n) % s
+    chunks = jnp.pad(m.astype(jnp.float32), (0, pad)).reshape(-1, s)
+    rv, ri, rq = dct_topk_ref(chunks, k)
+    np.testing.assert_allclose(np.asarray(q).reshape(-1),
+                               np.asarray(rq).reshape(-1)[:n], atol=1e-5)
+    np.testing.assert_allclose(
+        np.sort(np.abs(np.asarray(vals)), axis=-1),
+        np.sort(np.abs(np.asarray(rv)), axis=-1), atol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,h,hd,c", [
+    (2, 64, 2, 16, 32), (1, 128, 4, 64, 32), (2, 96, 1, 32, 32),
+    (1, 64, 2, 128, 16),
+])
+def test_wkv6_vs_ref(b, s, h, hd, c):
+    rng = np.random.RandomState(b * s + hd)
+    r, k, v = (jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(1 / (1 + np.exp(-rng.randn(b, s, h, hd) * 2 - 2)),
+                    jnp.float32)
+    u = jnp.asarray(rng.randn(h, hd) * 0.1, jnp.float32)
+    o, sf = wkv6_chunked(r, k, v, w, u, chunk=c, interpret=True)
+    merge = lambda t: np.asarray(t).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    ub = np.broadcast_to(np.asarray(u)[None], (b, h, hd)).reshape(b * h, hd)
+    oref, sref = wkv6_ref(*(jnp.asarray(merge(t)) for t in (r, k, v, w)),
+                          jnp.asarray(ub))
+    oref = np.asarray(oref).reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    scale = np.abs(oref).max() + 1e-6
+    assert np.abs(np.asarray(o) - oref).max() / scale < 2e-5
+    np.testing.assert_allclose(np.asarray(sf).reshape(b * h, hd, hd),
+                               np.asarray(sref), atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,r", [(2, 64, 128), (1, 96, 64), (3, 128, 256),
+                                   (1, 32, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_vs_ref(b, s, r, dtype):
+    rng = np.random.RandomState(b + s + r)
+    a = jnp.asarray(1 / (1 + np.exp(-rng.randn(b, s, r) * 2 - 1)), dtype)
+    x = jnp.asarray(rng.randn(b, s, r), dtype)
+    h1 = rglru_scan(a, x, interpret=True)
+    h2 = rglru_scan_ref(a.astype(jnp.float32), x.astype(jnp.float32))
+    atol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=atol,
+                               rtol=1e-2)
+
+
+def test_wkv6_kernel_plugs_into_layer():
+    """rwkv6_forward(use_kernel=True) == jnp chunked path."""
+    from repro.models.common import ArchConfig
+    from repro.models.layers import rwkv6 as K
+
+    cfg = ArchConfig(name="r", family="ssm", kind="decoder", n_layers=1,
+                     d_model=64, n_heads=0, n_kv_heads=0, d_ff=128,
+                     vocab_size=97, layer_pattern=("rwkv",), rwkv_head_dim=16,
+                     rope_kind="none", compute_dtype=jnp.float32,
+                     param_dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    p = K.init_rwkv6(key, cfg)
+    x = jax.random.normal(key, (2, 64, 64))
+    import repro.kernels.wkv6.ops as wops
+    import functools
+
+    orig = wops.wkv6_chunked
+    wops_wrapped = functools.partial(orig, interpret=True)
+    wops.wkv6_chunked = wops_wrapped
+    try:
+        o_kernel = K.rwkv6_forward(p, x, cfg, use_kernel=True)
+    finally:
+        wops.wkv6_chunked = orig
+    o_jnp = K.rwkv6_forward(p, x, cfg, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_jnp),
+                               atol=1e-4)

@@ -1,0 +1,188 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import ArchConfig, MoEConfig
+from repro.models.layers import attention as A
+from repro.models.layers import moe as M
+from repro.models.layers import rglru as R
+from repro.models.layers import rwkv6 as K
+from repro.models.layers.rope import apply_rope
+
+F32 = dict(compute_dtype=jnp.float32, param_dtype=jnp.float32)
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", kind="decoder", n_layers=1,
+                d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                **F32)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def test_rope_preserves_norm_and_relativity():
+    cfg = _cfg()
+    b, s, h, hd = 2, 8, 4, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    qr, kr = apply_rope(q, k, pos, cfg)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(qr), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=1e-5)
+    # relative property: scores depend only on position difference
+    qr2, kr2 = apply_rope(q, k, pos + 13, cfg)
+    s1 = np.einsum("bshd,bthd->bhst", np.asarray(qr), np.asarray(kr))
+    s2 = np.einsum("bshd,bthd->bhst", np.asarray(qr2), np.asarray(kr2))
+    np.testing.assert_allclose(s1, s2, atol=1e-4)
+
+
+def test_rope2d_rotates_only_half():
+    cfg = _cfg(rope_kind="rope2d")
+    b, s, h, hd = 1, 4, 2, 16
+    q = jnp.ones((b, s, h, hd))
+    k = jnp.ones((b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    qr, _ = apply_rope(q, k, pos, cfg)
+    np.testing.assert_allclose(np.asarray(qr[..., hd // 2:]), 1.0)
+    assert not np.allclose(np.asarray(qr[0, 1, 0, : hd // 2]), 1.0)
+
+
+def test_mrope_text_positions_match_rope():
+    """With t==h==w positions, M-RoPE must equal standard RoPE."""
+    cfg_m = _cfg(rope_kind="mrope", mrope_sections=(4, 2, 2))
+    cfg_r = _cfg()
+    b, s, h, hd = 1, 6, 2, 16
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3 = jnp.broadcast_to(pos[None], (3, b, s))
+    qm, km = apply_rope(q, k, pos3, cfg_m)
+    qr, kr = apply_rope(q, k, pos, cfg_r)
+    np.testing.assert_allclose(np.asarray(qm), np.asarray(qr), atol=1e-5)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def test_gqa_equals_mha_when_kv_repeated():
+    cfg_g = _cfg(n_heads=4, n_kv_heads=2)
+    key = jax.random.PRNGKey(1)
+    p = A.init_attention(key, cfg_g)
+    cfg_m = _cfg(n_heads=4, n_kv_heads=4)
+    p_m = dict(p)
+    p_m["wk"] = jnp.concatenate([p["wk"].reshape(64, 2, 16)] * 2, axis=1) \
+        .reshape(64, 64)
+    p_m["wv"] = jnp.concatenate([p["wv"].reshape(64, 2, 16)] * 2, axis=1) \
+        .reshape(64, 64)
+    x = jax.random.normal(key, (2, 8, 64))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    o_g = A.attention_forward(p, x, pos, cfg_g)
+    o_m = A.attention_forward(p_m, x, pos, cfg_m)
+    # repeat order: kv head i serves q heads [i*g, (i+1)*g) — the explicit
+    # duplication above interleaves differently, so compare via full MHA with
+    # jnp.repeat semantics instead:
+    p_m2 = dict(p)
+    p_m2["wk"] = jnp.repeat(p["wk"].reshape(64, 2, 16), 2, axis=1).reshape(64, 64)
+    p_m2["wv"] = jnp.repeat(p["wv"].reshape(64, 2, 16), 2, axis=1).reshape(64, 64)
+    o_m2 = A.attention_forward(p_m2, x, pos, cfg_m)
+    np.testing.assert_allclose(np.asarray(o_g), np.asarray(o_m2), atol=1e-5)
+
+
+def test_causality():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    p = A.init_attention(key, cfg)
+    x = jax.random.normal(key, (1, 10, 64))
+    pos = jnp.arange(10)[None]
+    o1 = A.attention_forward(p, x, pos, cfg)
+    x2 = x.at[:, 5:, :].set(0.0)  # mutate the future
+    o2 = A.attention_forward(p, x2, pos, cfg)
+    np.testing.assert_allclose(np.asarray(o1[:, :5]), np.asarray(o2[:, :5]),
+                               atol=1e-5)
+
+
+def test_sliding_window_limits_reach():
+    cfg = _cfg(window=4, n_kv_heads=4)
+    key = jax.random.PRNGKey(4)
+    p = A.init_attention(key, cfg)
+    x = jax.random.normal(key, (1, 12, 64))
+    pos = jnp.arange(12)[None]
+    o1 = A.attention_forward(p, x, pos, cfg)
+    x2 = x.at[:, 0:2, :].set(0.0)  # mutate tokens far in the past
+    o2 = A.attention_forward(p, x2, pos, cfg)
+    np.testing.assert_allclose(np.asarray(o1[:, 8:]), np.asarray(o2[:, 8:]),
+                               atol=1e-5)
+
+
+def test_flash_matches_plain(monkeypatch):
+    cfg = _cfg(n_kv_heads=2)
+    key = jax.random.PRNGKey(5)
+    p = A.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 256, 64))
+    pos = jnp.broadcast_to(jnp.arange(256)[None], (2, 256))
+    o_plain = A.attention_forward(p, x, pos, cfg)
+    monkeypatch.setattr(A, "FLASH_THRESHOLD", 16)
+    o_flash = A.attention_forward(p, x, pos, cfg)
+    np.testing.assert_allclose(np.asarray(o_plain), np.asarray(o_flash),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------- moe
+
+
+def test_moe_dense_dispatch_exact():
+    cfg = _cfg(family="moe",
+               moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32))
+    key = jax.random.PRNGKey(6)
+    p = M.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 8, 64))
+    out, aux = M.moe_forward(p, x, cfg)
+    # manual reference
+    xt = np.asarray(x).reshape(16, 64)
+    w, idx, _ = M._router(p, jnp.asarray(xt), cfg)
+    w, idx = np.asarray(w), np.asarray(idx)
+    ref = np.zeros((16, 64), np.float32)
+    for t in range(16):
+        for j in range(2):
+            e = idx[t, j]
+            pe = {"gate": np.asarray(p["gate"][e]), "up": np.asarray(p["up"][e]),
+                  "down": np.asarray(p["down"][e])}
+            h = (xt[t] @ pe["gate"])
+            h = h / (1 + np.exp(-h)) * (xt[t] @ pe["up"])
+            ref[t] += w[t, j] * (h @ pe["down"])
+    np.testing.assert_allclose(np.asarray(out).reshape(16, 64), ref,
+                               atol=2e-4)
+    assert float(aux) >= 0
+
+
+# ---------------------------------------------------------------- recurrent
+
+
+def test_rglru_linscan_matches_loop():
+    a = jnp.asarray(np.random.RandomState(0).rand(2, 16, 8), jnp.float32)
+    b = jnp.asarray(np.random.RandomState(1).randn(2, 16, 8), jnp.float32)
+    h = R._linscan(a, b)
+    ref = np.zeros((2, 16, 8), np.float32)
+    cur = np.zeros((2, 8), np.float32)
+    for t in range(16):
+        cur = np.asarray(a[:, t]) * cur + np.asarray(b[:, t])
+        ref[:, t] = cur
+    np.testing.assert_allclose(np.asarray(h), ref, atol=1e-5)
+
+
+def test_rwkv_chunked_matches_scan():
+    cfg = _cfg(n_heads=0, n_kv_heads=0, layer_pattern=("rwkv",),
+               rwkv_head_dim=16, rope_kind="none")
+    key = jax.random.PRNGKey(7)
+    p = K.init_rwkv6(key, cfg)
+    x = jax.random.normal(key, (2, 64, 64))
+    o1 = K.rwkv6_forward(p, x, cfg, chunk=32)
+    o2 = K.rwkv6_forward_scan(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)

@@ -1,0 +1,101 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FlexConfig, communicate_tree
+from repro.core.replicators import make_replicator
+
+SHAPES = [(64,), (37, 11), (4, 16, 16)]
+
+
+def _m(shape, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape)
+                       .astype(np.float32))
+
+
+@pytest.mark.parametrize("scheme", ["demo", "random", "striding"])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_q_plus_residual_accounting(scheme, shape):
+    """Without sign: the extracted component + residual must reconstruct the
+    momentum (exactly for index schemes; demo loses only DCT padding)."""
+    flex = FlexConfig(scheme=scheme, rate=1 / 4, sign=False)
+    rep = flex.make()
+    m = _m(shape)
+    out = rep.communicate_leaf(m, step=jnp.asarray(3), seed=7, axes=(),
+                               sign=False)
+    recon = out.q_sync + out.m_residual
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(m), atol=1e-4)
+
+
+@pytest.mark.parametrize("scheme", ["full", "none", "diloco"])
+def test_momentum_kept_for_full_sync_schemes(scheme):
+    """full/none/diloco transmit the momentum without consuming it —
+    classic (synchronized or local) momentum-SGD semantics."""
+    rep = FlexConfig(scheme=scheme, rate=1 / 4, sign=False).make()
+    m = _m((64,))
+    out = rep.communicate_leaf(m, step=jnp.asarray(0), seed=0, axes=(),
+                               sign=False)
+    np.testing.assert_allclose(np.asarray(out.m_residual), np.asarray(m))
+    np.testing.assert_allclose(np.asarray(out.q_sync), np.asarray(m))
+
+
+@pytest.mark.parametrize("scheme,expect_frac", [("random", 0.25),
+                                                ("striding", 0.25)])
+def test_masked_sparsity(scheme, expect_frac):
+    flex = FlexConfig(scheme=scheme, rate=0.25, sign=False)
+    rep = flex.make()
+    m = _m((1024,))
+    out = rep.communicate_leaf(m, step=jnp.asarray(0), seed=1, axes=(),
+                               sign=False)
+    nz = float((np.asarray(out.q_sync) != 0).mean())
+    assert abs(nz - expect_frac) < 0.05
+
+
+def test_striding_covers_all_indices_over_period():
+    rep = make_replicator("striding", stride=4)
+    m = jnp.ones((64,))
+    seen = np.zeros(64, bool)
+    for step in range(4):
+        out = rep.communicate_leaf(m, step=jnp.asarray(step), seed=0, axes=(),
+                                   sign=False)
+        seen |= np.asarray(out.q_sync) != 0
+    assert seen.all()
+
+
+def test_diloco_period_and_divergence():
+    rep = make_replicator("diloco", period=4)
+    assert rep.params_diverge
+    m = _m((32,))
+    out = rep.communicate_leaf(m, step=jnp.asarray(1), seed=0, axes=(),
+                               sign=False)
+    # local q every step, inner momentum kept
+    np.testing.assert_allclose(np.asarray(out.q_sync), np.asarray(m))
+    # wire bytes amortized by the period
+    assert rep.wire_bytes(1000) == 1000 * 4 // 4
+
+
+def test_sign_payload_is_ternary():
+    flex = FlexConfig(scheme="random", rate=0.5, sign=True)
+    rep = flex.make()
+    m = _m((256,))
+    out = rep.communicate_leaf(m, step=jnp.asarray(0), seed=3, axes=(),
+                               sign=True)
+    vals = np.asarray(out.q_sync)
+    assert set(np.unique(vals)) <= {-1.0, 0.0, 1.0}
+
+
+def test_demo_wire_scales_with_rate():
+    lo = FlexConfig(scheme="demo", rate=1 / 32).make()
+    hi = FlexConfig(scheme="demo", rate=1 / 4).make()
+    assert hi.wire_bytes(2 ** 16) > 4 * lo.wire_bytes(2 ** 16)
+
+
+def test_communicate_tree_accounting():
+    params = {"a": _m((128,)), "b": {"c": _m((32, 8), 1)}}
+    flex = FlexConfig(scheme="demo", rate=1 / 8)
+    rep = flex.make()
+    q, res, wire = communicate_tree(rep, params, step=jnp.asarray(0), axes=(),
+                                    sign=True)
+    assert jax.tree_util.tree_structure(q) == jax.tree_util.tree_structure(params)
+    assert wire > 0
