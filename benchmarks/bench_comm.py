@@ -18,6 +18,10 @@ def run(n_steps=8):
     stream = Seq2Seq(S.VOCAB, S.SRC_LEN, S.BATCH)
     settings = [
         ("demo@1/16", FlexConfig(scheme="demo", rate=1 / 16)),
+        # same scheme, per-leaf extraction: isolates the packed-layout
+        # speedup in the compute part of s_per_step (wire bytes identical)
+        ("demo@1/16-perleaf", FlexConfig(scheme="demo", rate=1 / 16,
+                                         extract_impl="per_leaf")),
         ("demo@1/32", FlexConfig(scheme="demo", rate=1 / 32)),
         ("random@1/16", FlexConfig(scheme="random", rate=1 / 16)),
         ("random@1/32", FlexConfig(scheme="random", rate=1 / 32)),

@@ -6,7 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.dct_topk.ops import dct_topk
+from repro.core import compression
+from repro.kernels.dct_topk.ops import (dct_topk, dct_topk_packed,
+                                        decode_topk_gathered)
 from repro.kernels.dct_topk.ref import dct_topk_ref
 from repro.kernels.rglru.ops import rglru_scan
 from repro.kernels.rglru.ref import rglru_scan_ref
@@ -34,6 +36,31 @@ def run():
     rows.append({"kernel": "dct_topk", "n": 2 ** 16,
                  "interpret_s": t_k, "ref_s": t_r,
                  "max_err": float(jnp.abs(v1 - v2).max())})
+
+    # packed tree-level extract (one launch for a whole chunk matrix)
+    chunks = m.reshape(-1, 64)
+    t_k = _time(lambda x: dct_topk_packed(x, 8, interpret=True), chunks)
+    t_r = _time(lambda x: compression.packed_dct_topk(x, 8, impl="packed"),
+                chunks)
+    q1 = dct_topk_packed(chunks, 8, interpret=True)[2]
+    q2 = compression.packed_dct_topk(chunks, 8, impl="packed")[2]
+    rows.append({"kernel": "dct_topk_packed", "n": 2 ** 16,
+                 "interpret_s": t_k, "ref_s": t_r,
+                 "max_err": float(jnp.abs(q1 - q2).max())})
+
+    # fused gather-decode (scatter-add + averaged iDCT in one launch)
+    n_rep, c, k = 4, 256, 8
+    g_vals = jnp.asarray(rng.randn(n_rep, c, k), jnp.float32)
+    g_idx = jnp.asarray(rng.randint(0, 64, (n_rep, c, k)), jnp.int32)
+    t_k = _time(lambda v, i: decode_topk_gathered(v, i, 64, interpret=True),
+                g_vals, g_idx)
+    t_r = _time(lambda v, i: compression.decode_gathered_ref(v, i, 64),
+                g_vals, g_idx)
+    d1 = decode_topk_gathered(g_vals, g_idx, 64, interpret=True)
+    d2 = compression.decode_gathered_ref(g_vals, g_idx, 64)
+    rows.append({"kernel": "decode_topk_gathered", "n": n_rep * c * k,
+                 "interpret_s": t_k, "ref_s": t_r,
+                 "max_err": float(jnp.abs(d1 - d2).max())})
 
     b, s, h, hd = 1, 128, 2, 64
     r, k, v = (jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)

@@ -2,9 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV per benchmark and dumps the full row
 sets to experiments/bench/*.json. Scale with BENCH_QUICK=0 for full runs.
+``--only SUBSTR`` runs just the matching entries (e.g. ``--only packed``).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -31,10 +33,17 @@ def _best(rows, key="final_val", label="scheme"):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="run only benchmarks whose name contains SUBSTR")
+    args = ap.parse_args()
+
     t_all = time.perf_counter()
     results = []
 
     def bench(name, fn, derived_fn):
+        if args.only and args.only not in name:
+            return
         t0 = time.perf_counter()
         rows = fn()
         dt = time.perf_counter() - t0
@@ -45,8 +54,9 @@ def main() -> None:
         results.append(line)
 
     from benchmarks import (bench_chunk, bench_comm, bench_dtype,
-                            bench_encdec, bench_kernels, bench_replicators,
-                            bench_scaling, bench_sign, bench_topk, roofline)
+                            bench_encdec, bench_kernels, bench_packed,
+                            bench_replicators, bench_scaling, bench_sign,
+                            bench_topk, roofline)
 
     bench("fig1_replicators_sgd_vs_adamw",
           lambda: bench_replicators.run(
@@ -76,6 +86,11 @@ def main() -> None:
           lambda r: _best(r, key="final_train"))
     bench("kernels", bench_kernels.run,
           lambda r: "max_err=" + "/".join(f"{x['max_err']:.1e}" for x in r))
+    bench("packed_extraction", bench_packed.run,
+          lambda r: (f"extract_calls={r[0]['extract_calls']}->"
+                     f"{r[1]['extract_calls']},"
+                     f"speedup={r[0]['wall_us'] / r[1]['wall_us']:.2f}x,"
+                     f"max_err={max(x['max_err_vs_per_leaf'] for x in r):.1e}"))
 
     def _roofline():
         rows = roofline.run()

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Single verification entrypoint for builders and CI:
+#   1. the tier-1 pytest suite (ROADMAP "Tier-1 verify" command),
+#   2. the quick kernel microbench (Pallas-interpret vs jnp oracles),
+#   3. the packed-vs-per-leaf extraction comparison (must stay bit-compatible).
+# Usage: scripts/verify.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+
+python - <<'EOF'
+import sys
+sys.path.insert(0, ".")
+from benchmarks import bench_kernels, bench_packed
+
+for row in bench_kernels.run():
+    print(f"kernel {row['kernel']:>22}: max_err={row['max_err']:.2e}")
+    assert row["max_err"] < 1e-3, row
+rows = bench_packed.run()
+for row in rows:
+    print(f"packed {row['variant']:>16}: extract_calls={row['extract_calls']}"
+          f" err={row['max_err_vs_per_leaf']:.2e}")
+    assert row["max_err_vs_per_leaf"] < 1e-4, row
+assert rows[1]["extract_calls"] == 1 and rows[0]["extract_calls"] > 1
+print("verify: OK")
+EOF

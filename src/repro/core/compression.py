@@ -15,6 +15,27 @@ Wire format per scheme (per parameter shard of ``numel`` elements, per step):
 ``random``/``striding`` therefore move 2x the values of ``demo`` at equal
 bandwidth when index_bytes == value_bytes (the paper's "double the amount of
 data, on the same bandwidth").
+
+DeMo wire format, precisely: per chunk row, ``k`` fp32 coefficient VALUES
+(optionally sign-compressed to {-1, 0, +1} before the collective) plus ``k``
+integer INDICES into the length-``s`` DCT basis (uint16 on the wire; int32 in
+device memory). Indices differ per replica, so they must travel. The packed
+tree-level path (``repro.core.packing``) concatenates every leaf's chunk rows
+into one ``(C_total, s)`` matrix with static offsets; the payload for the
+whole tree is then a single ``(C_total, k)`` pair of values/indices, shipped
+with ONE fixed-shape ``all_gather`` instead of one per leaf. Zero-padded
+layout rows extract to zero values (indices arbitrary-but-valid) and decode
+to zero, so they are wire-inert and dropped on unpack.
+
+Extractor implementations (``FlexConfig.extract_impl``):
+  per_leaf          -- dense jnp reference, one extraction per pytree leaf
+                       (the seed behaviour; baseline for the benchmarks).
+  packed            -- dense jnp reference over the packed (C_total, s)
+                       matrix: one extraction + one collective per TREE.
+  pallas            -- packed layout + the fused Pallas extract/decode
+                       kernels (TPU compile target).
+  pallas_interpret  -- same kernels in interpreter mode (CPU CI).
+  auto (default)    -- "pallas" on TPU backends, "packed" elsewhere.
 """
 from __future__ import annotations
 
@@ -84,6 +105,62 @@ def decode_dct_topk(
     coeff = jnp.put_along_axis(coeff, idx, vals, axis=-1, inplace=False)
     basis = dct.dct_basis(chunk_size, vals.dtype)
     return unchunk(coeff @ basis, shape)
+
+
+# ---------------------------------------------------------------------------
+# packed (tree-level) extraction: one call for a whole chunk-row matrix
+
+EXTRACT_IMPLS = ("per_leaf", "packed", "pallas", "pallas_interpret", "auto")
+
+
+def resolve_extract_impl(impl: str) -> str:
+    """Resolve ``auto`` against the runtime backend; validate the rest."""
+    if impl not in EXTRACT_IMPLS:
+        raise ValueError(f"unknown extract_impl {impl!r}; have {EXTRACT_IMPLS}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "packed"
+    return impl
+
+
+def packed_dct_topk(
+    chunks: jnp.ndarray, k: int, impl: str = "packed"
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top-k DCT extraction over pre-packed chunk rows, one call per tree.
+
+    chunks: (C, s). Returns (vals (C,k), idx (C,k) i32, q_rows (C,s)) where
+    ``q_rows`` is the decoded extracted component in chunk-row layout.
+    Row-wise identical to running :func:`dct_topk_extract` on each leaf.
+    """
+    impl = resolve_extract_impl(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.dct_topk.ops import dct_topk_packed
+
+        return dct_topk_packed(chunks, k, interpret=impl == "pallas_interpret")
+    s = chunks.shape[-1]
+    basis = dct.dct_basis(s, jnp.float32)
+    coeff = chunks.astype(jnp.float32) @ basis.T
+    _, idx = jax.lax.top_k(jnp.abs(coeff), k)
+    vals = jnp.take_along_axis(coeff, idx, axis=-1)
+    return vals, idx.astype(jnp.int32), decode_dct_topk(vals, idx, s,
+                                                        chunks.shape)
+
+
+def decode_gathered_ref(
+    g_vals: jnp.ndarray, g_idx: jnp.ndarray, chunk_size: int
+) -> jnp.ndarray:
+    """Reference decode of gathered payloads (R, C, k) -> mean q rows (C, s).
+
+    Scatter-adds every replica's coefficients (duplicates accumulate), then
+    averages and inverse-transforms; the jnp oracle for the fused Pallas
+    decode kernel in ``repro.kernels.dct_topk.decode``.
+    """
+    n_rep, c, _ = g_vals.shape
+    coeff = jnp.zeros((c, chunk_size), jnp.float32)
+    rows = jnp.broadcast_to(jnp.arange(c)[None, :, None], g_idx.shape)
+    coeff = coeff.at[rows.reshape(-1), g_idx.reshape(-1)].add(
+        g_vals.reshape(-1).astype(jnp.float32))
+    coeff = coeff / n_rep
+    return coeff @ dct.dct_basis(chunk_size, jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,10 @@ class FlexConfig:
     sign: bool = True               # sign-before-sync (appendix B: beneficial)
     sync_impl: str = "gather"       # gather (faithful) | psum (beyond-paper)
     value_bytes: int = 4            # wire dtype study (fp32=4 / bf16=2)
+    # DeMo extractor strategy — see compression.EXTRACT_IMPLS:
+    #   per_leaf | packed | pallas | pallas_interpret | auto
+    # "auto" = packed tree-level extraction; fused Pallas kernels on TPU.
+    extract_impl: str = "auto"
 
     def make(self) -> rbase.Replicator:
         wire = compression.WireFormat(value_bytes=self.value_bytes)
@@ -38,7 +42,8 @@ class FlexConfig:
             k = self.topk
             if k is None:
                 k = compression.rate_to_topk(self.rate, self.chunk_size, wire)
-            return make_replicator("demo", chunk_size=self.chunk_size, topk=k, wire=wire)
+            return make_replicator("demo", chunk_size=self.chunk_size, topk=k,
+                                   wire=wire, extract_impl=self.extract_impl)
         if self.scheme == "random":
             return make_replicator("random", rate=self.rate, wire=wire, impl=self.sync_impl)
         if self.scheme == "striding":
@@ -61,7 +66,21 @@ def communicate_tree(
     sign: bool,
     salt: int = 0,
 ):
-    """Apply the replicator leaf-wise. Returns (Q_tree, residual_tree, bytes)."""
+    """Synchronize a whole momentum tree. Returns (Q_tree, residual_tree, bytes).
+
+    Replicators that implement a tree-level ``communicate_tree`` method (DeMo
+    with a packed ``extract_impl``) process the ENTIRE tree in one fused
+    extraction + one collective + one decode; everything else falls back to
+    the leaf-wise map below (one extraction and one collective per leaf).
+    ``wire_bytes`` is a static python int either way (shapes only), so it is
+    safe to read outside jit and is identical across both paths.
+    """
+    tree_fn = getattr(replicator, "communicate_tree", None)
+    if tree_fn is not None and (
+        getattr(replicator, "extract_impl", "per_leaf") != "per_leaf"
+    ):
+        return tree_fn(momentum, step=step, axes=axes, sign=sign)
+
     wire_total = [0]
 
     def leaf(m, *, seed):

@@ -37,6 +37,11 @@ class Optimizer:
     params_diverge: bool = False
     # params postprocess hook (federated averaging for DiLoCo); identity else.
     postprocess_params: Callable[..., Any] = lambda params, *, step, axes: params
+    # optional rebuild hook: with_use_kernel(True) returns a variant of this
+    # optimizer whose hot paths route through the fused Pallas kernels
+    # (build_train_step calls it when its ``use_kernel`` flag is set, so model
+    # kernels and the DeMo extractor toggle together). None = no kernel path.
+    with_use_kernel: Callable[[bool], "Optimizer"] | None = None
 
 
 def apply_updates(params, updates):

@@ -11,13 +11,14 @@ The paper's main optimizer. Per step, per parameter shard:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import flexdemo
+from repro.core import compression, flexdemo
 from repro.core.optimizers import base
 from repro.utils.tree import tree_zeros_like
 
@@ -57,12 +58,27 @@ def demo_sgd(
         new_state = {"m": m_res, "step": step + 1}
         return updates, new_state, base.OptimizerAux(wire, {"lr": eta})
 
+    def with_use_kernel(enable: bool) -> base.Optimizer:
+        """Rebuild with the DeMo extractor routed through the fused Pallas
+        kernels (compiled on TPU, interpreter elsewhere). Explicit
+        ``extract_impl`` choices other than "auto" are left untouched."""
+        if not enable or flex.scheme != "demo" or flex.extract_impl != "auto":
+            return demo_sgd(lr, flex, momentum_decay, weight_decay)
+        impl = ("pallas" if jax.default_backend() == "tpu"
+                else "pallas_interpret")
+        assert impl in compression.EXTRACT_IMPLS
+        return demo_sgd(lr, dataclasses.replace(flex, extract_impl=impl),
+                        momentum_decay, weight_decay)
+
+    impl_tag = ("" if flex.scheme != "demo" or flex.extract_impl == "auto"
+                else f":{flex.extract_impl}")
     return base.Optimizer(
         init=init,
         update=update,
-        name=f"demo_sgd[{flex.scheme}@{flex.rate:g}]",
+        name=f"demo_sgd[{flex.scheme}@{flex.rate:g}{impl_tag}]",
         params_diverge=replicator.params_diverge,
         postprocess_params=functools.partial(_post, replicator),
+        with_use_kernel=with_use_kernel,
     )
 
 

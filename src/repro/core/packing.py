@@ -1,0 +1,120 @@
+"""Packed tree-level chunk layout for the DeMo extractor.
+
+The per-leaf DeMo hot path runs one DCT + top-k + inverse per pytree leaf:
+N leaves -> N basis matmuls, N sorts, N gathers, N inverses, and (on a mesh)
+N all-gathers. This module flattens the WHOLE momentum tree into a single
+``(C_total, s)`` chunk matrix with *static* per-leaf row offsets, so the
+extractor (reference jnp or the fused Pallas kernel) and the collective run
+exactly once per step for the entire tree.
+
+Layout contract (bit-compatible with per-leaf chunking):
+  * each leaf is flattened, zero-padded to a multiple of the chunk size ``s``
+    EXACTLY like :func:`repro.core.compression.chunk`, and contributes
+    ``ceil(numel / s)`` consecutive rows starting at ``row_start``;
+  * the concatenated matrix is zero-padded with trailing rows so the row
+    count hits a Pallas-friendly multiple (``n_rows_padded``); trailing rows
+    extract to all-zero payloads and are dropped by :func:`unpack_tree`;
+  * the plan depends only on the pytree structure and leaf shapes, so it is
+    identical on every replica and static under ``jit`` / ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Static placement of one pytree leaf inside the packed chunk matrix."""
+
+    key: str                  # pytree key path (debugging / logging only)
+    shape: tuple[int, ...]
+    numel: int
+    row_start: int            # first chunk row owned by this leaf
+    n_rows: int               # ceil(numel / chunk_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    chunk_size: int
+    slots: tuple[LeafSlot, ...]
+    treedef: Any
+    n_rows: int               # valid (leaf-owned) rows
+    n_rows_padded: int        # rows after Pallas tile padding
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.slots)
+
+
+def _pad_rows(n_rows: int) -> int:
+    """Round the row count up so the Pallas grid tiles cleanly.
+
+    >= 128 rows: round to a multiple of 128 (the kernel tiles 128/256 rows
+    per program); below that, round to the next power of two so the tile
+    divisor search in the kernel wrapper still finds a large tile.
+    """
+    if n_rows >= 128:
+        return ((n_rows + 127) // 128) * 128
+    p = 1
+    while p < n_rows:
+        p *= 2
+    return p
+
+
+def plan_tree(tree, chunk_size: int) -> PackedLayout:
+    """Build the static packed layout for ``tree`` (shapes only, no data)."""
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    slots = []
+    row = 0
+    for path, leaf in paths_and_leaves:
+        numel = math.prod(leaf.shape) if leaf.shape else 1
+        n_rows = max(1, math.ceil(numel / chunk_size))
+        slots.append(LeafSlot(key=jax.tree_util.keystr(path),
+                              shape=tuple(leaf.shape), numel=numel,
+                              row_start=row, n_rows=n_rows))
+        row += n_rows
+    if not slots:
+        raise ValueError("plan_tree: empty pytree")
+    return PackedLayout(chunk_size=chunk_size, slots=tuple(slots),
+                        treedef=treedef, n_rows=row,
+                        n_rows_padded=_pad_rows(row))
+
+
+def pack_tree(tree, layout: PackedLayout) -> jnp.ndarray:
+    """Flatten every leaf into its slot; returns f32 ``(n_rows_padded, s)``."""
+    s = layout.chunk_size
+    leaves = jax.tree_util.tree_leaves(tree)
+    assert len(leaves) == len(layout.slots), (len(leaves), len(layout.slots))
+    rows = []
+    for leaf, slot in zip(leaves, layout.slots):
+        flat = leaf.reshape(-1).astype(jnp.float32)
+        pad = slot.n_rows * s - slot.numel
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        rows.append(flat.reshape(slot.n_rows, s))
+    mat = jnp.concatenate(rows, axis=0)
+    tail = layout.n_rows_padded - layout.n_rows
+    if tail:
+        mat = jnp.pad(mat, ((0, tail), (0, 0)))
+    return mat
+
+
+def unpack_tree(mat: jnp.ndarray, layout: PackedLayout):
+    """Inverse of :func:`pack_tree` for any per-row-layout ``(C, s)`` matrix."""
+    leaves = []
+    for slot in layout.slots:
+        rows = jax.lax.slice_in_dim(mat, slot.row_start,
+                                    slot.row_start + slot.n_rows, axis=0)
+        leaves.append(rows.reshape(-1)[:slot.numel].reshape(slot.shape))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def slot_rows(mat: jnp.ndarray, slot: LeafSlot) -> jnp.ndarray:
+    """This leaf's rows of any packed per-row tensor (chunks, vals, idx)."""
+    return jax.lax.slice_in_dim(mat, slot.row_start,
+                                slot.row_start + slot.n_rows, axis=0)

@@ -5,17 +5,27 @@ Wire payload per leaf: per-chunk top-k coefficient VALUES and their INDICES
 fixed-shape ``all_gather`` of (values, indices) over R, after which every
 replica decodes and averages -- the FlexDeMo adaptation gathers once per
 sharding-group (node) instead of once per accelerator.
+
+Two execution strategies (``extract_impl``):
+
+  * ``per_leaf`` -- :meth:`communicate_leaf` on every pytree leaf: one dense
+    DCT, sort, gather, inverse, and collective PER LEAF (seed behaviour).
+  * packed (``packed`` / ``pallas`` / ``pallas_interpret`` / ``auto``) --
+    :meth:`communicate_tree`: the whole momentum tree is laid out as one
+    ``(C_total, s)`` chunk matrix (``repro.core.packing``), extracted in ONE
+    call (optionally the fused Pallas kernel), synchronized with ONE
+    all_gather, and decoded in ONE fused pass. Bit-compatible with the
+    per-leaf path at fp32 tolerance.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import compression, dct
+from repro.core import compression, packing
 from repro.core.replicators import base
 
 
@@ -26,6 +36,7 @@ class DeMoReplicator(base.Replicator):
     chunk_size: int = 64
     topk: int = 8
     wire: compression.WireFormat = compression.WireFormat()
+    extract_impl: str = "auto"
 
     def communicate_leaf(
         self,
@@ -49,17 +60,9 @@ class DeMoReplicator(base.Replicator):
             # fixed-shape gather of the compressed payload over R.
             g_vals = jax.lax.all_gather(tx, ax, tiled=False)   # (|R|, C, k)
             g_idx = jax.lax.all_gather(idx, ax, tiled=False)
-            n_rep = g_vals.shape[0]
-            c = vals.shape[0]
-            # scatter-add every replica's coefficients, then average.
-            coeff = jnp.zeros((c, s), g_vals.dtype)
-            rows = jnp.broadcast_to(jnp.arange(c)[None, :, None], g_idx.shape)
-            coeff = coeff.at[rows.reshape(-1), g_idx.reshape(-1)].add(
-                g_vals.reshape(-1)
-            )
-            coeff = coeff / n_rep
-            basis = dct.dct_basis(s, coeff.dtype)
-            q_sync = compression.unchunk(coeff @ basis, m.shape)
+            # scatter-add every replica's coefficients, average, inverse.
+            q_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
+            q_sync = compression.unchunk(q_rows, m.shape)
 
         return base.ReplicatorOutput(
             q_sync=q_sync,
@@ -67,12 +70,62 @@ class DeMoReplicator(base.Replicator):
             wire_bytes=self.wire_bytes(m.size),
         )
 
+    def communicate_tree(
+        self,
+        momentum,
+        *,
+        step: jnp.ndarray,
+        axes: Sequence[str],
+        sign: bool,
+    ):
+        """Packed whole-tree extract/sync/decode: returns (Q, residual, bytes).
+
+        One extraction call, one collective, and one decode for the entire
+        tree, instead of one of each per leaf. The layout plan is static
+        (shapes only), so this traces to a fixed graph under jit/shard_map.
+        """
+        del step
+        s, k = self.chunk_size, self.topk
+        impl = compression.resolve_extract_impl(self.extract_impl)
+        kernel = impl in ("pallas", "pallas_interpret")
+        interpret = impl == "pallas_interpret"
+
+        layout = packing.plan_tree(momentum, s)
+        chunks = packing.pack_tree(momentum, layout)           # (C_pad, s)
+        vals, idx, q_rows = compression.packed_dct_topk(chunks, k, impl=impl)
+        q_local = packing.unpack_tree(q_rows, layout)
+        residual = jax.tree_util.tree_map(
+            lambda m, q: (m.astype(jnp.float32) - q).astype(m.dtype),
+            momentum, q_local)
+        tx = base.maybe_sign(vals, sign)
+
+        if not axes:
+            g_vals, g_idx = tx[None], idx[None]                # |R| = 1
+        else:
+            ax = tuple(axes)
+            g_vals = jax.lax.all_gather(tx, ax, tiled=False)   # (|R|, C, k)
+            g_idx = jax.lax.all_gather(idx, ax, tiled=False)
+        if kernel:
+            from repro.kernels.dct_topk.ops import decode_topk_gathered
+
+            q_sync_rows = decode_topk_gathered(g_vals, g_idx, s,
+                                               interpret=interpret)
+        else:
+            q_sync_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
+        q_sync = jax.tree_util.tree_map(
+            lambda m, q: q.astype(m.dtype), momentum,
+            packing.unpack_tree(q_sync_rows, layout))
+
+        wire = sum(self.wire_bytes(slot.numel) for slot in layout.slots)
+        return q_sync, residual, wire
+
     def wire_bytes(self, numel: int) -> int:
         return compression.demo_wire_bytes(numel, self.chunk_size, self.topk, self.wire)
 
     @classmethod
     def from_rate(cls, rate: float, chunk_size: int = 64,
-                  wire: compression.WireFormat = compression.WireFormat()):
+                  wire: compression.WireFormat = compression.WireFormat(),
+                  extract_impl: str = "auto"):
         return cls(chunk_size=chunk_size,
                    topk=compression.rate_to_topk(rate, chunk_size, wire),
-                   wire=wire)
+                   wire=wire, extract_impl=extract_impl)

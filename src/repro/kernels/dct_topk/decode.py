@@ -1,0 +1,66 @@
+"""Fused DeMo decode kernel: gathered (vals, idx) payloads -> averaged iDCT.
+
+After the fixed-shape ``all_gather`` over the replication group R, every
+replica holds ``(|R|, C, k)`` top-k values and indices. The reference decode
+is a scatter-add into a dense ``(C, s)`` coefficient matrix followed by a
+basis matmul — two more HBM round trips per leaf. This kernel fuses both:
+each program materializes its coefficient tile in VMEM by accumulating
+|R| * k one-hot columns (VPU compares, no gather/scatter lowering needed on
+TPU), divides by |R|, and feeds the tile straight into the iDCT matmul on
+the MXU.
+
+Duplicate indices ACROSS replicas accumulate, exactly like the reference
+``coeff.at[rows, idx].add(vals)``; within one replica the top-k indices of a
+chunk are distinct by construction.
+
+VMEM per program (f32): payload 2 * R * TILE_C * k + coeff/out 2 * TILE_C * s
++ basis s^2 floats; R=8, k=32, TILE_C=256, s=256 -> ~2.6 MiB, within budget.
+The |R| * k accumulation loop is unrolled (R <= ~8 replication groups,
+k <= 32 in the paper's sweep).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(vals_ref, idx_ref, basis_ref, q_ref, *, n_rep: int, k: int):
+    basis = basis_ref[...]                                  # (s, s)
+    tc, s = q_ref.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tc, s), 1)
+    coeff = jnp.zeros((tc, s), jnp.float32)
+    for r in range(n_rep):
+        for j in range(k):
+            idx = idx_ref[r, :, j]                          # (TC,) i32
+            val = vals_ref[r, :, j]                         # (TC,) f32
+            coeff = coeff + jnp.where(cols == idx[:, None],
+                                      val[:, None], 0.0)
+    q_ref[...] = jnp.dot(coeff / n_rep, basis,
+                         preferred_element_type=jnp.float32)
+
+
+def decode_topk_call(g_vals: jnp.ndarray, g_idx: jnp.ndarray,
+                     basis: jnp.ndarray, tile_c: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """g_vals/g_idx: (R, C, k); basis: (s, s). Returns q chunks (C, s) f32,
+    the replica-mean of the decoded (masked iDCT) payloads."""
+    n_rep, c, k = g_vals.shape
+    s = basis.shape[0]
+    tile_c = min(tile_c, c)
+    assert c % tile_c == 0, (c, tile_c)
+    grid = (c // tile_c,)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, n_rep=n_rep, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_rep, tile_c, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_rep, tile_c, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_c, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, s), jnp.float32),
+        interpret=interpret,
+    )(g_vals.astype(jnp.float32), g_idx.astype(jnp.int32), basis)

@@ -1,5 +1,11 @@
-"""jit'd public wrapper for the dct_topk kernel: pads/reshapes a flat
-momentum shard into chunk rows, runs the fused kernel, and unpads."""
+"""jit'd public wrappers for the dct_topk kernels.
+
+``dct_topk`` pads/reshapes one flat momentum shard into chunk rows and runs
+the fused extract kernel; ``dct_topk_packed`` / ``decode_topk_gathered`` are
+the tree-level entry points used by the packed DeMo hot path: the caller
+(``repro.core.packing``) has already laid every leaf out in one ``(C, s)``
+chunk matrix, so a single kernel launch covers the whole tree.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,6 +15,15 @@ import jax.numpy as jnp
 
 from repro.core import dct
 from repro.kernels.dct_topk.dct_topk import dct_topk_call
+from repro.kernels.dct_topk.decode import decode_topk_call
+
+
+def _tile_rows(c: int, cap: int = 256) -> int:
+    """Biggest power-of-two divisor of ``c`` up to ``cap``."""
+    tile = 1
+    while tile < cap and c % (tile * 2) == 0:
+        tile *= 2
+    return tile
 
 
 @functools.partial(jax.jit, static_argnames=("chunk_size", "k", "interpret"))
@@ -21,13 +36,36 @@ def dct_topk(m: jnp.ndarray, chunk_size: int, k: int,
     if pad:
         flat = jnp.pad(flat, (0, pad))
     chunks = flat.reshape(-1, chunk_size)
-    c = chunks.shape[0]
-    # tile size: biggest power-of-two divisor of C up to 256
-    tile = 1
-    while tile < 256 and c % (tile * 2) == 0:
-        tile *= 2
     basis = dct.dct_basis(chunk_size, jnp.float32)
-    vals, idx, q = dct_topk_call(chunks, basis, k, tile_c=tile,
+    vals, idx, q = dct_topk_call(chunks, basis, k,
+                                 tile_c=_tile_rows(chunks.shape[0]),
                                  interpret=interpret)
     q_flat = q.reshape(-1)[:n]
     return vals, idx, q_flat.reshape(m.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def dct_topk_packed(chunks: jnp.ndarray, k: int, interpret: bool = False):
+    """Fused extract over pre-packed chunk rows.
+
+    chunks: (C, s) f32 — the whole tree, one launch. Returns
+    (vals (C,k), idx (C,k) i32, q (C,s)).
+    """
+    c, s = chunks.shape
+    basis = dct.dct_basis(s, jnp.float32)
+    return dct_topk_call(chunks.astype(jnp.float32), basis, k,
+                         tile_c=_tile_rows(c), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size", "interpret"))
+def decode_topk_gathered(g_vals: jnp.ndarray, g_idx: jnp.ndarray,
+                         chunk_size: int, interpret: bool = False):
+    """Fused decode of gathered payloads: (R, C, k) x2 -> q chunks (C, s).
+
+    Replaces the post-all_gather scatter-add + dense iDCT matmul with one
+    kernel launch; the result is the replica-MEAN decoded component.
+    """
+    basis = dct.dct_basis(chunk_size, jnp.float32)
+    return decode_topk_call(g_vals, g_idx, basis,
+                            tile_c=_tile_rows(g_vals.shape[1]),
+                            interpret=interpret)

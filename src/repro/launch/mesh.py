@@ -7,21 +7,19 @@ import; smoke tests and benchmarks see the real (single) device.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.utils import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod (TPU v5e); 2 pods when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Generic helper for tests/examples (e.g. (4,2) on 8 fake devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:

@@ -19,6 +19,14 @@ def main():
     ap.add_argument("--scheme", default="demo",
                     choices=["demo", "random", "striding", "diloco", "full", "none"])
     ap.add_argument("--rate", type=float, default=1 / 16)
+    ap.add_argument("--extract-impl", default="auto",
+                    choices=["auto", "per_leaf", "packed", "pallas",
+                             "pallas_interpret"],
+                    help="DeMo extractor: packed tree-level (one fused call "
+                         "+ one collective per step) vs per-leaf reference")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route model AND extractor hot paths through the "
+                         "fused Pallas kernels")
     ap.add_argument("--optimizer", default="demo_sgd",
                     choices=["demo_sgd", "decoupled_adamw", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -63,14 +71,16 @@ def main():
         shape = ((2, d, m) if args.multi_pod else (d, m))
         mesh = make_mesh(shape, axes)
 
-    flex = FlexConfig(scheme=args.scheme, rate=args.rate)
+    flex = FlexConfig(scheme=args.scheme, rate=args.rate,
+                      extract_impl=args.extract_impl)
     opt = make_optimizer(args.optimizer,
                          schedules.warmup_cosine(args.lr, args.steps),
                          **({} if args.optimizer == "adamw" else
                             {"flex": flex}))
     plan = make_train_plan(cfg, mesh, args.batch, args.seq,
                            args.microbatches)
-    step, shardings, _ = build_train_step(cfg, mesh, opt, plan)
+    step, shardings, _ = build_train_step(cfg, mesh, opt, plan,
+                                          use_kernel=args.use_kernel)
     state = init_state(jax.random.PRNGKey(0), cfg, opt, plan)
     stream = make_stream(cfg, args.batch, args.seq)
     print(f"launch: {cfg.name} on {mesh.devices.shape} "

@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.models import transformer
+from repro.utils import compat
 from repro.models.common import ArchConfig, DistCtx
 from repro.sharding import specs as sp
 
@@ -140,7 +141,7 @@ def build_serve_step(cfg: ArchConfig, mesh, plan: ServePlan,
             params, state, inputs, length, cfg, ctx, specs=param_specs)
         return logits, state
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         step, mesh=mesh,
         in_specs=(p_ps, st_ps, in_ps, P()),
         out_specs=(P(b, None, None), st_ps),
@@ -228,7 +229,7 @@ def build_prefill_step(cfg: ArchConfig, mesh, plan: ServePlan,
                                        specs=param_specs)
         return x, state
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         step, mesh=mesh,
         in_specs=(p_ps, in_ps, pos_ps),
         out_specs=(P(b, seq_axis, None), st_ps),

@@ -25,6 +25,7 @@ from repro.models import transformer
 from repro.models.common import ArchConfig, DistCtx
 from repro.sharding import specs as sp
 from repro.training.state import TrainPlan, batch_pspecs, state_pspecs
+from repro.utils import compat
 
 
 def _strip_lead(tree):
@@ -48,7 +49,13 @@ def build_train_step(
 
     ``state`` = {"params", "opt", "step"}; opt subtrees carry a leading
     replica axis (see training.state).
+
+    ``use_kernel`` routes BOTH the model forward (attention/rwkv/rglru) and —
+    for optimizers that support it — the DeMo extract/decode through the
+    fused Pallas kernels, so the whole hot path toggles with one flag.
     """
+    if use_kernel and optimizer.with_use_kernel is not None:
+        optimizer = optimizer.with_use_kernel(True)
     if params_shapes is None:
         params_shapes = jax.eval_shape(
             functools.partial(transformer.init_model, cfg=cfg),
@@ -146,8 +153,8 @@ def build_train_step(
                   "step": pspecs["step"]},
                  {"loss": P(), "wire_bytes": P()})
 
-    mapped = jax.shard_map(step_fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+    mapped = compat.shard_map(step_fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
     shardings = jax.tree_util.tree_map(
         lambda ps: NamedSharding(mesh, ps), (in_specs, out_specs),
         is_leaf=lambda x: isinstance(x, P))

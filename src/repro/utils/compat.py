@@ -1,0 +1,37 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the newest jax (``jax.shard_map``, ``jax.make_mesh`` with
+``axis_types``) but must also run on the 0.4.x line shipped in the CI
+container, where ``shard_map`` still lives in ``jax.experimental`` (with the
+old ``check_rep`` spelling) and ``jax.sharding.AxisType`` does not exist.
+Every call site goes through these two functions instead of touching the
+moving targets directly.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with a fallback to ``jax.experimental.shard_map``.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); both toggle
+    the same replication-invariance check.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` passing ``axis_types`` only where it exists."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,34 @@
+"""Optional-hypothesis shim: property tests SKIP (not error) when the
+``hypothesis`` package is absent, while every plain test in the same module
+still collects and runs. Usage::
+
+    from tests.hypothesis_compat import given, settings, st
+
+With hypothesis installed these are the real objects; without it, ``@given``
+replaces the test with a zero-arg stub that calls ``pytest.skip`` and
+``settings`` / ``st.*`` degrade to inert no-ops.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # CI image without dev deps (see requirements-dev.txt)
+
+    def given(*_args, **_kwargs):
+        def decorate(_f):
+            def stub():
+                pytest.skip("hypothesis not installed")
+
+            return stub
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -2,8 +2,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import compression as C
 

@@ -2,8 +2,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 import scipy.fft
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import dct
 
