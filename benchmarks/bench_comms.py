@@ -1,0 +1,110 @@
+"""Wire-codec benchmark: encode/decode throughput per amplitude dtype and
+modeled-vs-actual bytes per replication scheme.
+
+The "actual" column is the byte length of the buffer the packed DeMo path
+places on the collective (header + uint16/32 indices + encoded amplitudes
+[+ int8 scales]); "modeled" is the planning formula from
+``repro.core.compression``. For the masked/dense schemes the payload IS a
+bare value stream, so only the model applies. Honors BENCH_SMOKE=1 (fewer
+timing reps; used by scripts/verify.sh to keep the entrypoint alive)."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_packed import _tree
+from repro.comms import codecs
+from repro.core import compression, packing
+
+CHUNK, RATE = 64, 1 / 8
+
+
+def _reps() -> int:
+    return 2 if os.environ.get("BENCH_SMOKE") == "1" else 20
+
+
+def _time(f, *a, n):
+    jax.block_until_ready(f(*a))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*a))
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    tree = _tree()
+    layout = packing.plan_tree(tree, CHUNK)
+    numel = sum(s.numel for s in layout.slots)
+    k = compression.rate_to_topk(RATE, CHUNK)
+    chunks = packing.pack_tree(tree, layout)
+    vals, idx, _ = compression.packed_dct_topk(chunks, k, impl="packed")
+    vals, idx = vals[:layout.n_rows], idx[:layout.n_rows]
+    n = _reps()
+
+    rows = []
+    for amp in sorted(codecs.AMP_CODES):
+        cod = codecs.PackedCodec(layout.n_rows, CHUNK, k, amp)
+        enc = jax.jit(cod.encode)
+        dec = jax.jit(cod.decode)
+        buf = enc(vals, idx)
+        t_enc = _time(enc, vals, idx, n=n)
+        t_dec = _time(dec, buf, n=n)
+        modeled = compression.demo_wire_bytes(
+            numel, CHUNK, k,
+            compression.WireFormat(value_bytes=codecs.AMP_BYTES[amp]))
+        rows.append({
+            "scheme": f"demo:{amp}",
+            "chunk_rows": layout.n_rows,
+            "k": k,
+            "idx_dtype": cod.idx_dtype,
+            "wire_bytes_actual": cod.wire_bytes,
+            "wire_bytes_modeled": modeled,
+            "encode_us": t_enc * 1e6,
+            "decode_us": t_dec * 1e6,
+            "encode_MBps": cod.wire_bytes / t_enc / 1e6,
+            "decode_MBps": cod.wire_bytes / t_dec / 1e6,
+        })
+    for scheme, modeled in (
+            ("random", compression.masked_wire_bytes(numel, RATE)),
+            ("striding", compression.masked_wire_bytes(numel, RATE)),
+            ("full", compression.full_wire_bytes(numel))):
+        rows.append({
+            "scheme": scheme,
+            "wire_bytes_actual": None,    # bare value stream: model == wire
+            "wire_bytes_modeled": modeled,
+        })
+    rows.extend(_decode_variants(k, n))
+    return rows
+
+
+def _decode_variants(k: int, n: int):
+    """Gathered-decode accumulation strategies at small and large |R|.
+
+    The unrolled kernel emits |R|*k (TILE_C, s) compare+selects; the one-hot
+    matmul variant emits one compare + one row-batched matmul regardless of
+    |R|. Kernels run in interpret mode on CPU (parity only, wall excluded —
+    interpret timings are meaningless); ``modeled_vpu_passes`` counts the
+    emitted (TILE_C, s)-shaped accumulation ops per program instead."""
+    import numpy as np
+
+    from repro.core.compression import decode_gathered_ref
+    from repro.kernels.dct_topk.ops import decode_topk_gathered
+
+    rng = np.random.RandomState(0)
+    c, s = 128, CHUNK
+    out = []
+    for n_rep in (4, 16):                 # below / above the unroll comfort zone
+        g_vals = jnp.asarray(rng.randn(n_rep, c, k).astype(np.float32))
+        g_idx = jnp.asarray(rng.randint(0, s, (n_rep, c, k)).astype(np.int32))
+        ref = decode_gathered_ref(g_vals, g_idx, s)
+        for matmul in (False, True):
+            got = decode_topk_gathered(g_vals, g_idx, s, interpret=True,
+                                       matmul=matmul)
+            out.append({
+                "scheme": f"decode:{'matmul' if matmul else 'unrolled'}:R{n_rep}",
+                "n_rep": n_rep,
+                "modeled_vpu_passes": 1 if matmul else n_rep * k,
+                "max_err_vs_ref": float(jnp.abs(got - ref).max()),
+            })
+    return out

@@ -12,6 +12,7 @@ Per variant, per step over a mixed-shape momentum tree, the rows record:
     dispatch/fusion, not MXU; Pallas interpret timings are excluded as
     meaningless).
 """
+import os
 import time
 
 import jax
@@ -42,6 +43,8 @@ def _tree(seed=0):
 
 
 def _time(f, *a, n=5):
+    if os.environ.get("BENCH_SMOKE") == "1":
+        n = 1
     jax.block_until_ready(f(*a))
     t0 = time.perf_counter()
     for _ in range(n):

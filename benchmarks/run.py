@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV per benchmark and dumps the full row
 sets to experiments/bench/*.json. Scale with BENCH_QUICK=0 for full runs.
 ``--only SUBSTR`` runs just the matching entries (e.g. ``--only packed``).
+``--json PATH`` additionally writes one machine-readable summary (name,
+wall, derived metric, and the full row set per benchmark) so the perf
+trajectory can be tracked across commits (e.g. ``--only comms --json
+BENCH_comms.json``). ``--smoke`` sets BENCH_SMOKE=1: single timing reps,
+for CI liveness checks of the bench entrypoints.
 """
 from __future__ import annotations
 
@@ -36,7 +41,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="run only benchmarks whose name contains SUBSTR")
+    ap.add_argument("--json", default="",
+                    help="write a machine-readable run summary to PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="BENCH_SMOKE=1: minimal reps, entrypoint liveness")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["BENCH_SMOKE"] = "1"
 
     t_all = time.perf_counter()
     results = []
@@ -49,14 +60,16 @@ def main() -> None:
         dt = time.perf_counter() - t0
         _save(name, rows)
         us = dt * 1e6 / max(len(rows), 1)
-        line = f"{name},{us:.0f},{derived_fn(rows)}"
+        derived = derived_fn(rows)
+        line = f"{name},{us:.0f},{derived}"
         print(line, flush=True)
-        results.append(line)
+        results.append({"name": name, "us_per_call": us, "wall_s": dt,
+                        "derived": derived, "rows": rows})
 
-    from benchmarks import (bench_chunk, bench_comm, bench_dtype,
-                            bench_encdec, bench_kernels, bench_packed,
-                            bench_replicators, bench_scaling, bench_sign,
-                            bench_topk, roofline)
+    from benchmarks import (bench_chunk, bench_comm, bench_comms,
+                            bench_dtype, bench_encdec, bench_kernels,
+                            bench_packed, bench_replicators, bench_scaling,
+                            bench_sign, bench_topk, roofline)
 
     bench("fig1_replicators_sgd_vs_adamw",
           lambda: bench_replicators.run(
@@ -91,6 +104,11 @@ def main() -> None:
                      f"{r[1]['extract_calls']},"
                      f"speedup={r[0]['wall_us'] / r[1]['wall_us']:.2f}x,"
                      f"max_err={max(x['max_err_vs_per_leaf'] for x in r):.1e}"))
+    bench("comms", bench_comms.run,
+          lambda r: (f"actual/modeled="
+                     f"{r[0]['wire_bytes_actual'] / r[0]['wire_bytes_modeled']:.3f},"
+                     f"enc={r[0]['encode_MBps']:.0f}MBps,"
+                     f"dec={r[0]['decode_MBps']:.0f}MBps"))
 
     def _roofline():
         rows = roofline.run()
@@ -105,6 +123,12 @@ def main() -> None:
               if r else "no-artifacts"))
 
     print(f"# total {time.perf_counter() - t_all:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"timestamp": time.time(), "argv": sys.argv[1:],
+                       "smoke": args.smoke, "results": results},
+                      f, indent=1, default=str)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 # Single verification entrypoint for builders and CI:
 #   1. the tier-1 pytest suite (ROADMAP "Tier-1 verify" command),
 #   2. the quick kernel microbench (Pallas-interpret vs jnp oracles),
-#   3. the packed-vs-per-leaf extraction comparison (must stay bit-compatible).
+#   3. the packed-vs-per-leaf extraction comparison (must stay bit-compatible),
+#   4. a smoke run of the benchmark runner entrypoint (so benchmarks/run.py
+#      and its imports can't silently rot between full bench runs).
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -27,3 +29,6 @@ for row in rows:
 assert rows[1]["extract_calls"] == 1 and rows[0]["extract_calls"] > 1
 print("verify: OK")
 EOF
+
+python benchmarks/run.py --only packed_extraction --smoke
+python benchmarks/run.py --only comms --smoke

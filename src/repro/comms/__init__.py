@@ -1,0 +1,18 @@
+"""Network-aware communication subsystem (DeToNATION's "network-aware" half).
+
+Three layers, lowest to highest:
+
+  codecs    -- REAL wire payloads: the packed DeMo (values, indices) pair is
+               encoded into one contiguous, versioned uint8 buffer per step;
+               the bytes placed on the collective ARE the bytes reported.
+  topology  -- declarative cluster model (intra-/inter-node links, replica
+               placement from the mesh) + an analytic all-gather step-time
+               cost model.
+  planner   -- bandwidth-budget search over scheme x rate x chunk x k x codec
+               emitting a ready-to-run FlexConfig.
+
+Import discipline: ``codecs`` depends only on jax/numpy; ``topology`` is pure
+python; ``planner`` sits on top of both plus ``repro.core``. The replicators
+import ``codecs`` only, so there is no cycle through ``repro.core``.
+"""
+from repro.comms import codecs, topology  # noqa: F401  (planner imports core)

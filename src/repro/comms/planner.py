@@ -1,0 +1,191 @@
+"""Bandwidth-budget planner: search scheme x rate x chunk x k x codec.
+
+Given the parameter tree (shapes only), a :class:`~repro.comms.topology.Topology`
+and the replication placement, the planner enumerates replication-scheme
+configurations, prices each one with the REAL codec byte count (demo) or the
+modeled payload (masked/diloco/full schemes, whose payloads are plain dense
+value streams), predicts sync seconds with the topology cost model, and
+returns the highest-fidelity :class:`~repro.core.flexdemo.FlexConfig` that
+fits the budget.
+
+Budget forms (exactly one):
+  * ``budget_s``        -- hard ceiling on replication-sync seconds per step;
+  * ``target_overlap`` + ``compute_s`` -- comm must hide under
+    ``target_overlap * compute_s`` seconds of backprop.
+
+Fidelity ("quality") ranks how much of the full-sync information a candidate
+ships per step: the coefficient fraction ``k/s`` for demo (discounted
+slightly for lossier amplitude codecs), the mask rate for random/striding,
+the amortized rate for diloco.  Ties break toward fewer predicted seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+
+from repro.comms import codecs
+from repro.comms.topology import (Placement, Topology, get_topology,
+                                  step_comm_seconds)
+from repro.core import compression
+from repro.core.flexdemo import FlexConfig
+
+DEFAULT_SCHEMES = ("demo", "random", "striding", "diloco")
+DEFAULT_CHUNKS = (32, 64, 128, 256)
+DEFAULT_KS = (1, 2, 4, 8, 16, 32)
+DEFAULT_AMPS = ("fp32", "bf16", "int8")
+# fidelity discount of lossier amplitude encodings (tiebreaker, not physics)
+_AMP_FIDELITY = {"fp32": 1.0, "bf16": 0.999, "int8": 0.99}
+_VALUE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    flex: FlexConfig
+    wire_bytes: int           # per replica per step (codec-actual for demo)
+    comm_seconds: float
+    quality: float
+    link: str                 # link class the payload rides
+    n_replicas: int
+    feasible: bool
+
+    def describe(self) -> str:
+        f = self.flex
+        extra = (f" s={f.chunk_size} k={f.topk} codec={f.codec}"
+                 if f.scheme == "demo" else "")
+        return (f"{f.scheme}@{f.rate:g}{extra}: {self.wire_bytes:,} B/step "
+                f"over {self.link} x{self.n_replicas} -> "
+                f"{self.comm_seconds * 1e3:.3f} ms/step "
+                f"({'fits' if self.feasible else 'OVER BUDGET'})")
+
+
+def leaf_numels(params) -> list[int]:
+    """Per-leaf element counts from arrays / ShapeDtypeStructs / an int."""
+    if isinstance(params, int):
+        return [params]
+    return [math.prod(p.shape) if p.shape else 1
+            for p in jax.tree_util.tree_leaves(params)]
+
+
+def demo_rows(numels: Sequence[int], chunk_size: int) -> int:
+    """Packed chunk-row count — mirrors ``packing.plan_tree`` (valid rows)."""
+    return sum(max(1, math.ceil(n / chunk_size)) for n in numels)
+
+
+def _resolve_placement(placement, topology: Topology) -> Placement:
+    if isinstance(placement, Placement):
+        return placement
+    n = int(placement)
+    # FlexDeMo's regime: one replica per (sharded) node, so |R| > 1 implies
+    # the sync crosses the inter-node link.
+    return Placement(n_replicas=n, shard_devices=topology.devices_per_node,
+                     crosses_node=n > 1)
+
+
+def predict(flex: FlexConfig, params, topology, placement,
+            budget_s: float | None = None) -> CommPlan:
+    """Price ONE configuration (the planner's scorer, also used standalone)."""
+    topology = get_topology(topology) if isinstance(topology, str) else topology
+    placement = _resolve_placement(placement, topology)
+    numels = leaf_numels(params)
+    numel = sum(numels)
+
+    if flex.scheme == "demo":
+        s = flex.chunk_size
+        k = flex.topk if flex.topk is not None else compression.rate_to_topk(
+            flex.rate, s, compression.WireFormat(value_bytes=flex.value_bytes))
+        amp = flex.resolve_codec()
+        rows = demo_rows(numels, s)
+        if amp == "off":
+            # per-leaf modeled accounting, summed exactly like the
+            # replicator's codec-off path (one ceil per leaf, not one
+            # ceil over the total numel)
+            wire_fmt = compression.WireFormat(value_bytes=flex.value_bytes)
+            wire = sum(compression.demo_wire_bytes(n, s, k, wire_fmt)
+                       for n in numels)
+        else:
+            wire = codecs.demo_packed_wire_bytes(rows, s, k, amp)
+        quality = min(1.0, rows * k / max(1, numel)) * _AMP_FIDELITY.get(amp, 1.0)
+    elif flex.scheme in ("random", "striding"):
+        wire = compression.masked_wire_bytes(numel, flex.rate)
+        quality = flex.rate
+    elif flex.scheme == "diloco":
+        # budget_s is a hard PER-STEP ceiling, so diloco is priced at its
+        # sync-step BURST: every period-th step ships the FULL payload in one
+        # collective. Amortized-average pricing would mark plans "feasible"
+        # whose sync steps stall period-x over the promised ceiling.
+        wire = compression.full_wire_bytes(numel)
+        quality = flex.rate
+    elif flex.scheme == "full":
+        wire = compression.full_wire_bytes(numel)
+        quality = 1.0
+    elif flex.scheme == "none":
+        wire, quality = 0, 0.0
+    else:
+        raise KeyError(f"unknown scheme {flex.scheme!r}")
+
+    comm = step_comm_seconds(wire, placement, topology)
+    link = topology.link_for(placement.crosses_node).name
+    return CommPlan(flex=flex, wire_bytes=int(wire), comm_seconds=comm,
+                    quality=quality, link=link,
+                    n_replicas=placement.n_replicas,
+                    feasible=(budget_s is None or comm <= budget_s))
+
+
+def solve(params, topology, placement, *,
+          budget_s: float | None = None,
+          target_overlap: float | None = None,
+          compute_s: float | None = None,
+          schemes: Sequence[str] = DEFAULT_SCHEMES,
+          chunks: Sequence[int] = DEFAULT_CHUNKS,
+          ks: Sequence[int] = DEFAULT_KS,
+          amp_dtypes: Sequence[str] = DEFAULT_AMPS) -> CommPlan:
+    """Best-fidelity plan under the budget; min-comm plan if nothing fits."""
+    if budget_s is None:
+        if target_overlap is None or compute_s is None:
+            raise ValueError("need budget_s, or target_overlap + compute_s")
+        budget_s = target_overlap * compute_s
+    topology = get_topology(topology) if isinstance(topology, str) else topology
+    placement = _resolve_placement(placement, topology)
+
+    candidates: list[CommPlan] = []
+    for scheme in schemes:
+        if scheme == "demo":
+            for s in chunks:
+                for k in ks:
+                    if k >= s:
+                        continue
+                    for amp in amp_dtypes:
+                        flex = FlexConfig(
+                            scheme="demo", rate=k / s, chunk_size=s, topk=k,
+                            value_bytes=_VALUE_BYTES[amp], codec=amp)
+                        candidates.append(predict(flex, params, topology,
+                                                  placement, budget_s))
+        else:
+            for rate in (1 / 2, 1 / 4, 1 / 8, 1 / 16, 1 / 32, 1 / 64,
+                         1 / 128, 1 / 256):
+                flex = FlexConfig(scheme=scheme, rate=rate)
+                candidates.append(predict(flex, params, topology, placement,
+                                          budget_s))
+
+    feasible = [c for c in candidates if c.feasible]
+    if feasible:
+        return max(feasible, key=lambda c: (c.quality, -c.comm_seconds))
+    return min(candidates, key=lambda c: c.comm_seconds)
+
+
+def profile_sweep(flex: FlexConfig, params, placement,
+                  profiles: Sequence[str] = ("nvlink", "ethernet-100g",
+                                             "wan-10g")) -> dict:
+    """One config priced on every topology profile (the dry-run report)."""
+    out = {}
+    for name in profiles:
+        topo = get_topology(name)
+        plan = predict(flex, params, topo, placement)
+        out[name] = {"wire_bytes": plan.wire_bytes,
+                     "comm_seconds": plan.comm_seconds,
+                     "link": plan.link,
+                     "n_replicas": plan.n_replicas}
+    return out

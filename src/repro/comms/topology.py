@@ -1,0 +1,145 @@
+"""Declarative cluster topology + analytic collective step-time cost model.
+
+The paper's claim is that FlexDeMo wins because its compressed sync fits the
+SCARCE link: replication traffic inside a node rides NVLink/ICI-class
+bandwidth, across nodes it rides ethernet, across sites it rides a WAN.  This
+module models exactly enough of that to rank communication plans:
+
+  * ``LinkSpec``      -- point-to-point bandwidth (Gbit/s) + latency of one
+                         link class;
+  * ``Topology``      -- intra-node vs inter-node links and the node size;
+  * ``Placement``     -- how the mesh's replication group R maps onto nodes
+                         (derived from mesh axis sizes, see
+                         :func:`placement_from_mesh`);
+  * cost model        -- ring all-gather seconds for a payload over R on the
+                         link class the placement selects.
+
+All pure python over static ints/floats: usable at plan time, in tests, and
+from the dry-run without touching device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    name: str
+    bandwidth_gbps: float     # point-to-point, per direction
+    latency_s: float          # per-message one-way latency
+
+    def seconds(self, payload_bytes: float) -> float:
+        """One point-to-point transfer of ``payload_bytes``."""
+        return self.latency_s + payload_bytes * 8.0 / (self.bandwidth_gbps * 1e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+    intra_node: LinkSpec
+    inter_node: LinkSpec
+    devices_per_node: int = 8
+
+    def link_for(self, crosses_node: bool) -> LinkSpec:
+        return self.inter_node if crosses_node else self.intra_node
+
+
+# Three reference profiles (the ISSUE's acceptance set). Numbers are
+# deliberately round published figures, not measurements:
+#   nvlink        -- single DGX-class node: replication never leaves NVLink.
+#   ethernet-100g -- cluster: 100 Gb/s RoCE between nodes.
+#   wan-10g       -- geo-distributed "interlinked online nodes": 10 Gb/s, ms RTT.
+PROFILES: dict[str, Topology] = {
+    "nvlink": Topology(
+        name="nvlink",
+        intra_node=LinkSpec("nvlink4", bandwidth_gbps=3600.0, latency_s=2e-6),
+        inter_node=LinkSpec("nvlink-switch", bandwidth_gbps=3600.0,
+                            latency_s=5e-6),
+        devices_per_node=8,
+    ),
+    "ethernet-100g": Topology(
+        name="ethernet-100g",
+        intra_node=LinkSpec("nvlink4", bandwidth_gbps=3600.0, latency_s=2e-6),
+        inter_node=LinkSpec("roce-100g", bandwidth_gbps=100.0, latency_s=5e-5),
+        devices_per_node=8,
+    ),
+    "wan-10g": Topology(
+        name="wan-10g",
+        intra_node=LinkSpec("nvlink4", bandwidth_gbps=3600.0, latency_s=2e-6),
+        inter_node=LinkSpec("wan-10g", bandwidth_gbps=10.0, latency_s=1e-3),
+        devices_per_node=8,
+    ),
+}
+
+
+def get_topology(name: str) -> Topology:
+    if name not in PROFILES:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(PROFILES)}")
+    return PROFILES[name]
+
+
+# ---------------------------------------------------------------------------
+# replica-group placement from the mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """How the replication group R sits on the cluster."""
+
+    n_replicas: int           # |R|
+    shard_devices: int        # |S|: devices inside one replica (FSDP group)
+    crosses_node: bool        # does replication traffic leave the node?
+
+
+def placement_from_mesh(axis_sizes: Mapping[str, int],
+                        repl_axes: Sequence[str],
+                        devices_per_node: int) -> Placement:
+    """Derive R's placement from mesh axis sizes.
+
+    The mesh layout convention (launch.mesh) keeps the sharding group S on
+    the fastest, innermost links; a replica therefore occupies
+    ``|S| = prod(non-repl axes)`` consecutive devices.  Replication traffic
+    crosses node boundaries as soon as the whole group R x S no longer fits
+    inside one node.
+    """
+    n_repl = math.prod([axis_sizes[a] for a in repl_axes]) if repl_axes else 1
+    shard = math.prod([v for a, v in axis_sizes.items()
+                       if a not in tuple(repl_axes)])
+    crosses = n_repl > 1 and n_repl * shard > devices_per_node
+    return Placement(n_replicas=n_repl, shard_devices=shard,
+                     crosses_node=crosses)
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model
+
+
+def allgather_seconds(payload_bytes: float, n_replicas: int,
+                      link: LinkSpec) -> float:
+    """Ring all-gather of one ``payload_bytes`` contribution per member.
+
+    Each member forwards a payload-sized message ``|R| - 1`` times around the
+    ring; per hop it pays one link latency plus the serialization time.
+    ``|R| <= 1`` is free (no collective is issued).
+    """
+    if n_replicas <= 1 or payload_bytes <= 0:
+        return 0.0
+    return (n_replicas - 1) * link.seconds(payload_bytes)
+
+
+def step_comm_seconds(wire_bytes: int, placement: Placement,
+                      topology: Topology) -> float:
+    """Predicted replication-sync seconds per optimizer step."""
+    link = topology.link_for(placement.crosses_node)
+    return allgather_seconds(wire_bytes, placement.n_replicas, link)
+
+
+def overlap_ratio(comm_s: float, compute_s: float) -> float:
+    """comm / compute: <= 1.0 means the sync hides fully under compute."""
+    if comm_s == 0.0:
+        return 0.0
+    if compute_s <= 0.0:
+        return float("inf")
+    return comm_s / compute_s

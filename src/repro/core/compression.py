@@ -16,16 +16,25 @@ Wire format per scheme (per parameter shard of ``numel`` elements, per step):
 bandwidth when index_bytes == value_bytes (the paper's "double the amount of
 data, on the same bandwidth").
 
-DeMo wire format, precisely: per chunk row, ``k`` fp32 coefficient VALUES
+DeMo wire format, precisely: per chunk row, ``k`` coefficient VALUES
 (optionally sign-compressed to {-1, 0, +1} before the collective) plus ``k``
-integer INDICES into the length-``s`` DCT basis (uint16 on the wire; int32 in
-device memory). Indices differ per replica, so they must travel. The packed
+integer INDICES, serialized as GLOBAL flat coefficient positions — uint16
+while the flat space ``C_total * s`` fits, auto-widened to uint32 beyond
+(int32 in device memory either way). Indices differ per replica, so they must travel. The packed
 tree-level path (``repro.core.packing``) concatenates every leaf's chunk rows
 into one ``(C_total, s)`` matrix with static offsets; the payload for the
-whole tree is then a single ``(C_total, k)`` pair of values/indices, shipped
-with ONE fixed-shape ``all_gather`` instead of one per leaf. Zero-padded
-layout rows extract to zero values (indices arbitrary-but-valid) and decode
-to zero, so they are wire-inert and dropped on unpack.
+whole tree is then a single ``(C_total, k)`` pair of values/indices,
+serialized by ``repro.comms.codecs`` into ONE contiguous versioned buffer
+(uint16/uint32-auto indices, fp32/bf16/int8 amplitudes) and shipped with ONE
+fixed-shape ``all_gather`` instead of one per leaf. Zero-padded layout rows
+extract to zero values and are sliced off before encode, so they never
+travel.
+
+The byte formulas below are the PLANNING model (also the accounting for the
+per-leaf reference path and the seeded/dense schemes, whose payloads really
+are bare value streams). The packed DeMo hot path reports the encoded
+buffer's actual byte length instead — see ``repro.comms.codecs`` and the
+``repro.comms.planner`` budget search built on both.
 
 Extractor implementations (``FlexConfig.extract_impl``):
   per_leaf          -- dense jnp reference, one extraction per pytree leaf

@@ -30,11 +30,26 @@ class FlexConfig:
     topk: int | None = None         # DeMo k; derived from rate when None
     sign: bool = True               # sign-before-sync (appendix B: beneficial)
     sync_impl: str = "gather"       # gather (faithful) | psum (beyond-paper)
-    value_bytes: int = 4            # wire dtype study (fp32=4 / bf16=2)
+    value_bytes: int = 4            # wire dtype study (fp32=4 / bf16=2 / int8=1)
     # DeMo extractor strategy — see compression.EXTRACT_IMPLS:
     #   per_leaf | packed | pallas | pallas_interpret | auto
     # "auto" = packed tree-level extraction; fused Pallas kernels on TPU.
+    # Packed impls serialize their payload through the repro.comms.codecs
+    # wire codec (one contiguous versioned buffer per step), so the reported
+    # wire_bytes are the actual encoded bytes; per_leaf keeps the modeled
+    # WireFormat accounting.
     extract_impl: str = "auto"
+    # Wire codec amplitude encoding for the packed DeMo path:
+    #   auto (derive from value_bytes: 4->fp32, 2->bf16, 1->int8)
+    #   fp32 | bf16 | int8 | off (off = pre-codec raw f32/i32 collective,
+    #   modeled byte accounting)
+    codec: str = "auto"
+
+    def resolve_codec(self) -> str:
+        """Amplitude encoding for the packed wire codec ("off" disables)."""
+        from repro.comms import codecs as _codecs
+
+        return _codecs.resolve_amp(self.codec, self.value_bytes)
 
     def make(self) -> rbase.Replicator:
         wire = compression.WireFormat(value_bytes=self.value_bytes)
@@ -43,7 +58,8 @@ class FlexConfig:
             if k is None:
                 k = compression.rate_to_topk(self.rate, self.chunk_size, wire)
             return make_replicator("demo", chunk_size=self.chunk_size, topk=k,
-                                   wire=wire, extract_impl=self.extract_impl)
+                                   wire=wire, extract_impl=self.extract_impl,
+                                   codec=self.resolve_codec())
         if self.scheme == "random":
             return make_replicator("random", rate=self.rate, wire=wire, impl=self.sync_impl)
         if self.scheme == "striding":
@@ -70,10 +86,12 @@ def communicate_tree(
 
     Replicators that implement a tree-level ``communicate_tree`` method (DeMo
     with a packed ``extract_impl``) process the ENTIRE tree in one fused
-    extraction + one collective + one decode; everything else falls back to
-    the leaf-wise map below (one extraction and one collective per leaf).
+    extraction + one collective + one decode, and (codec != "off") serialize
+    the payload into one contiguous wire buffer whose byte length IS the
+    reported ``wire_bytes``; everything else falls back to the leaf-wise map
+    below (one extraction and one collective per leaf, modeled accounting).
     ``wire_bytes`` is a static python int either way (shapes only), so it is
-    safe to read outside jit and is identical across both paths.
+    safe to read outside jit.
     """
     tree_fn = getattr(replicator, "communicate_tree", None)
     if tree_fn is not None and (

@@ -66,9 +66,22 @@ def _pad_rows(n_rows: int) -> int:
     return p
 
 
+# Layout plans are pure functions of (treedef, leaf shapes, chunk_size), so
+# they are memoized: under jit the rebuild was already free after the first
+# trace, but eager callers (the N-replica simulator, benchmarks) hit
+# plan_tree every step. Bounded so cached treedefs can't grow unboundedly.
+_PLAN_CACHE: dict[tuple, PackedLayout] = {}
+_PLAN_CACHE_MAX = 128
+
+
 def plan_tree(tree, chunk_size: int) -> PackedLayout:
-    """Build the static packed layout for ``tree`` (shapes only, no data)."""
+    """Static packed layout for ``tree`` (shapes only, no data); memoized."""
     paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    key = (treedef, chunk_size,
+           tuple(tuple(leaf.shape) for _, leaf in paths_and_leaves))
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        return cached
     slots = []
     row = 0
     for path, leaf in paths_and_leaves:
@@ -80,9 +93,13 @@ def plan_tree(tree, chunk_size: int) -> PackedLayout:
         row += n_rows
     if not slots:
         raise ValueError("plan_tree: empty pytree")
-    return PackedLayout(chunk_size=chunk_size, slots=tuple(slots),
-                        treedef=treedef, n_rows=row,
-                        n_rows_padded=_pad_rows(row))
+    layout = PackedLayout(chunk_size=chunk_size, slots=tuple(slots),
+                          treedef=treedef, n_rows=row,
+                          n_rows_padded=_pad_rows(row))
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.clear()
+    _PLAN_CACHE[key] = layout
+    return layout
 
 
 def pack_tree(tree, layout: PackedLayout) -> jnp.ndarray:

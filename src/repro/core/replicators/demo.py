@@ -13,9 +13,13 @@ Two execution strategies (``extract_impl``):
   * packed (``packed`` / ``pallas`` / ``pallas_interpret`` / ``auto``) --
     :meth:`communicate_tree`: the whole momentum tree is laid out as one
     ``(C_total, s)`` chunk matrix (``repro.core.packing``), extracted in ONE
-    call (optionally the fused Pallas kernel), synchronized with ONE
-    all_gather, and decoded in ONE fused pass. Bit-compatible with the
-    per-leaf path at fp32 tolerance.
+    call (optionally the fused Pallas kernel), serialized through the
+    ``repro.comms.codecs`` wire codec into ONE contiguous uint8 buffer,
+    synchronized with ONE all_gather of that buffer, and decoded in ONE
+    fused pass. Bit-compatible with the per-leaf path at fp32 tolerance
+    (exactly, for the fp32 codec; sign-compressed payloads are exact under
+    every codec). ``wire_bytes`` on this path is the encoded buffer length —
+    actual bytes on the collective, not a model.
 """
 from __future__ import annotations
 
@@ -37,6 +41,18 @@ class DeMoReplicator(base.Replicator):
     topk: int = 8
     wire: compression.WireFormat = compression.WireFormat()
     extract_impl: str = "auto"
+    # Packed-path wire codec (repro.comms.codecs): amplitude encoding
+    # fp32 | bf16 | int8, or "off" for the pre-codec raw f32/i32 collective
+    # with modeled byte accounting. "auto" derives from wire.value_bytes.
+    codec: str = "auto"
+    # Gathered-payload decode kernel: "unrolled" (|R|*k where-accumulation)
+    # or "matmul" (one-hot matmul; better for |R| > 8). Pallas impls only.
+    decode_impl: str = "unrolled"
+
+    def amp_dtype(self) -> str:
+        from repro.comms import codecs
+
+        return codecs.resolve_amp(self.codec, self.wire.value_bytes)
 
     def communicate_leaf(
         self,
@@ -99,24 +115,49 @@ class DeMoReplicator(base.Replicator):
             momentum, q_local)
         tx = base.maybe_sign(vals, sign)
 
-        if not axes:
-            g_vals, g_idx = tx[None], idx[None]                # |R| = 1
+        amp = self.amp_dtype()
+        if amp != "off":
+            # real wire path: ONE contiguous encoded buffer on the collective.
+            # Pallas pad rows (extract to zero values) are sliced off before
+            # encode and zero-padded back after decode, so they never travel.
+            # |R| = 1 (axes=()) still round-trips the codec: what a replica
+            # applies is always the DECODED payload, so training dynamics do
+            # not change when R scales 1 -> N under a lossy amplitude codec.
+            from repro.comms import codecs
+
+            codec = codecs.PackedCodec(
+                n_rows=layout.n_rows, chunk_size=s, k=k, amp_dtype=amp,
+                signed=sign)
+            payload = codec.encode(tx[:layout.n_rows], idx[:layout.n_rows])
+            if not axes:
+                g_buf = payload[None]                          # |R| = 1
+            else:
+                g_buf = jax.lax.all_gather(payload, tuple(axes), tiled=False)
+            g_vals, g_idx = codec.decode(g_buf)                # (|R|, C, k)
+            pad = layout.n_rows_padded - layout.n_rows
+            if pad:
+                g_vals = jnp.pad(g_vals, ((0, 0), (0, pad), (0, 0)))
+                g_idx = jnp.pad(g_idx, ((0, 0), (0, pad), (0, 0)))
+            wire = codec.wire_bytes
         else:
-            ax = tuple(axes)
-            g_vals = jax.lax.all_gather(tx, ax, tiled=False)   # (|R|, C, k)
-            g_idx = jax.lax.all_gather(idx, ax, tiled=False)
+            if not axes:
+                g_vals, g_idx = tx[None], idx[None]            # |R| = 1
+            else:
+                ax = tuple(axes)
+                g_vals = jax.lax.all_gather(tx, ax, tiled=False)  # (|R|,C,k)
+                g_idx = jax.lax.all_gather(idx, ax, tiled=False)
+            wire = sum(self.wire_bytes(slot.numel) for slot in layout.slots)
         if kernel:
             from repro.kernels.dct_topk.ops import decode_topk_gathered
 
-            q_sync_rows = decode_topk_gathered(g_vals, g_idx, s,
-                                               interpret=interpret)
+            q_sync_rows = decode_topk_gathered(
+                g_vals, g_idx, s, interpret=interpret,
+                matmul=self.decode_impl == "matmul")
         else:
             q_sync_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
         q_sync = jax.tree_util.tree_map(
             lambda m, q: q.astype(m.dtype), momentum,
             packing.unpack_tree(q_sync_rows, layout))
-
-        wire = sum(self.wire_bytes(slot.numel) for slot in layout.slots)
         return q_sync, residual, wire
 
     def wire_bytes(self, numel: int) -> int:

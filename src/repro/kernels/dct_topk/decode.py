@@ -15,8 +15,15 @@ chunk are distinct by construction.
 
 VMEM per program (f32): payload 2 * R * TILE_C * k + coeff/out 2 * TILE_C * s
 + basis s^2 floats; R=8, k=32, TILE_C=256, s=256 -> ~2.6 MiB, within budget.
-The |R| * k accumulation loop is unrolled (R <= ~8 replication groups,
-k <= 32 in the paper's sweep).
+
+Two accumulation strategies (``matmul`` flag):
+  * unrolled (default) -- the |R| * k loop emits one (TILE_C, s) compare +
+    select per coefficient; fine for R <= ~8, k <= 32 (the paper's sweep).
+  * one-hot matmul -- folds (R, k) into a single contraction axis: build the
+    (TILE_C, R*k, s) one-hot tensor with ONE compare and contract it against
+    the values on the MXU as a row-batched matmul. Emitted-op count is
+    O(1) instead of O(R*k), so it scales to large replication groups; the
+    wrapper shrinks TILE_C to keep the one-hot tensor inside VMEM.
 """
 from __future__ import annotations
 
@@ -42,18 +49,53 @@ def _decode_kernel(vals_ref, idx_ref, basis_ref, q_ref, *, n_rep: int, k: int):
                          preferred_element_type=jnp.float32)
 
 
+def _decode_matmul_kernel(vals_ref, idx_ref, basis_ref, q_ref, *,
+                          n_rep: int, k: int):
+    basis = basis_ref[...]                                  # (s, s)
+    tc, s = q_ref.shape
+    rk = n_rep * k
+    # (R, TC, k) -> (TC, R*k): every row's coefficients on one contraction axis
+    v2 = jnp.transpose(vals_ref[...], (1, 0, 2)).reshape(tc, rk)
+    i2 = jnp.transpose(idx_ref[...], (1, 0, 2)).reshape(tc, rk)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tc, rk, s), 2)
+    onehot = (i2[:, :, None] == cols).astype(jnp.float32)
+    # coeff[c, s] = sum_rk v2[c, rk] * onehot[c, rk, s]  (row-batched matmul;
+    # duplicate indices across replicas accumulate, like the scatter-add)
+    coeff = jax.lax.dot_general(
+        v2, onehot, dimension_numbers=(((1,), (1,)), ((0,), (0,))))
+    q_ref[...] = jnp.dot(coeff / n_rep, basis,
+                         preferred_element_type=jnp.float32)
+
+
+# one-hot tensor VMEM budget for the matmul variant (f32 elements)
+_ONEHOT_BUDGET = 512 * 1024
+
+
 def decode_topk_call(g_vals: jnp.ndarray, g_idx: jnp.ndarray,
                      basis: jnp.ndarray, tile_c: int = 256,
-                     interpret: bool = False) -> jnp.ndarray:
+                     interpret: bool = False,
+                     matmul: bool = False) -> jnp.ndarray:
     """g_vals/g_idx: (R, C, k); basis: (s, s). Returns q chunks (C, s) f32,
     the replica-mean of the decoded (masked iDCT) payloads."""
     n_rep, c, k = g_vals.shape
     s = basis.shape[0]
     tile_c = min(tile_c, c)
+    if matmul:
+        # keep the (TILE_C, R*k, s) one-hot inside the VMEM budget
+        shrunk = tile_c
+        while shrunk > 8 and shrunk * n_rep * k * s > _ONEHOT_BUDGET:
+            shrunk //= 2
+        if shrunk * n_rep * k * s > _ONEHOT_BUDGET:
+            # R*k*s so large that no tile holds the one-hot: fall back to
+            # the unrolled kernel instead of blowing VMEM at compile time
+            matmul = False
+        else:
+            tile_c = shrunk
     assert c % tile_c == 0, (c, tile_c)
     grid = (c // tile_c,)
+    kernel = _decode_matmul_kernel if matmul else _decode_kernel
     return pl.pallas_call(
-        functools.partial(_decode_kernel, n_rep=n_rep, k=k),
+        functools.partial(kernel, n_rep=n_rep, k=k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((n_rep, tile_c, k), lambda i: (0, i, 0)),

@@ -57,15 +57,18 @@ def dct_topk_packed(chunks: jnp.ndarray, k: int, interpret: bool = False):
                          tile_c=_tile_rows(c), interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk_size", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_size", "interpret", "matmul"))
 def decode_topk_gathered(g_vals: jnp.ndarray, g_idx: jnp.ndarray,
-                         chunk_size: int, interpret: bool = False):
+                         chunk_size: int, interpret: bool = False,
+                         matmul: bool = False):
     """Fused decode of gathered payloads: (R, C, k) x2 -> q chunks (C, s).
 
     Replaces the post-all_gather scatter-add + dense iDCT matmul with one
     kernel launch; the result is the replica-MEAN decoded component.
+    ``matmul`` selects the one-hot matmul accumulation (for large |R|).
     """
     basis = dct.dct_basis(chunk_size, jnp.float32)
     return decode_topk_call(g_vals, g_idx, basis,
                             tile_c=_tile_rows(g_vals.shape[1]),
-                            interpret=interpret)
+                            interpret=interpret, matmul=matmul)

@@ -143,6 +143,35 @@ _LOWER = {"train": _train_lower, "decode": _serve_lower,
           "prefill": _prefill_lower}
 
 
+def _comm_report(cfg, plan_info: dict) -> dict:
+    """Replication-sync cost of this combo on the reference topologies.
+
+    Prices the training FlexConfig (demo @ 1/16, the paper's default) with
+    the REAL packed-codec byte count and the repro.comms cost model, per
+    topology profile, plus the budget plan the planner would pick to keep
+    sync under 10 ms/step on each profile.
+    """
+    from repro.comms import planner as comm_planner
+    from repro.comms.topology import placement_from_mesh
+
+    params_shapes = jax.eval_shape(
+        functools.partial(transformer.init_model, cfg=cfg),
+        jax.random.PRNGKey(0))
+    flex = FlexConfig(scheme="demo", rate=1 / 16)
+    budget_s = 10e-3
+    placement = placement_from_mesh(plan_info["mesh_axes"],
+                                    tuple(plan_info["repl_axes"]), 8)
+    report = {"flex": f"{flex.scheme}@{flex.rate:g}", "budget_s": budget_s,
+              "placement": dataclasses.asdict(placement),
+              "profiles": comm_planner.profile_sweep(flex, params_shapes,
+                                                     placement)}
+    for name, entry in report["profiles"].items():
+        solved = comm_planner.solve(params_shapes, name, placement,
+                                    budget_s=budget_s)
+        entry["plan_under_budget"] = solved.describe()
+    return report
+
+
 def _compile_stats(lowered):
     # TPU-faithful wire bytes from the target-independent stablehlo (the CPU
     # backend upcasts bf16 collectives to f32 in its compiled HLO)
@@ -236,6 +265,8 @@ def run_combo(arch: str, shape_name: str, mesh_kind: str,
     record.update(info)
     record["full"] = _compile_stats(lowered)
     del lowered
+    if shape.mode == "train":
+        record["comm_report"] = _comm_report(cfg, info["plan"])
 
     # 2) per-layer costs from unrolled shallow variants (single-pod only)
     if not skip_costs and not multi:

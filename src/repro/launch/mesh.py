@@ -24,3 +24,16 @@ def make_mesh(shape, axes):
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def replica_placement(mesh, repl_axes, devices_per_node: int = 8):
+    """Where the replication group R of this mesh sits on the cluster.
+
+    Thin bridge to ``repro.comms.topology``: derives |R|, the per-replica
+    sharding-group size |S|, and whether replication traffic crosses node
+    boundaries (and therefore rides the inter-node link in the cost model).
+    """
+    from repro.comms.topology import placement_from_mesh
+
+    return placement_from_mesh(mesh_axis_sizes(mesh), tuple(repl_axes),
+                               devices_per_node)

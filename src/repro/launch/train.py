@@ -27,6 +27,13 @@ def main():
     ap.add_argument("--use-kernel", action="store_true",
                     help="route model AND extractor hot paths through the "
                          "fused Pallas kernels")
+    ap.add_argument("--comm-budget", type=float, default=0.0,
+                    help="replication-sync budget in seconds/step; > 0 runs "
+                         "the repro.comms planner to pick scheme x rate x "
+                         "chunk x k x codec (overrides --scheme/--rate)")
+    ap.add_argument("--topology", default="ethernet-100g",
+                    help="cluster profile for the comms cost model "
+                         "(see repro.comms.topology.PROFILES)")
     ap.add_argument("--optimizer", default="demo_sgd",
                     choices=["demo_sgd", "decoupled_adamw", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -71,14 +78,35 @@ def main():
         shape = ((2, d, m) if args.multi_pod else (d, m))
         mesh = make_mesh(shape, axes)
 
-    flex = FlexConfig(scheme=args.scheme, rate=args.rate,
-                      extract_impl=args.extract_impl)
+    plan = make_train_plan(cfg, mesh, args.batch, args.seq,
+                           args.microbatches)
+    if args.comm_budget > 0:
+        import functools
+
+        from repro.comms import planner as comm_planner
+        from repro.comms.topology import get_topology
+        from repro.launch.mesh import replica_placement
+        from repro.models import transformer
+
+        topo = get_topology(args.topology)
+        placement = replica_placement(mesh, plan.repl_axes,
+                                      topo.devices_per_node)
+        params_shapes = jax.eval_shape(
+            functools.partial(transformer.init_model, cfg=cfg),
+            jax.random.PRNGKey(0))
+        comm_plan = comm_planner.solve(params_shapes, topo, placement,
+                                       budget_s=args.comm_budget)
+        print(f"comm planner [{args.topology}, budget "
+              f"{args.comm_budget * 1e3:g} ms/step]: {comm_plan.describe()}")
+        flex = dataclasses.replace(comm_plan.flex,
+                                   extract_impl=args.extract_impl)
+    else:
+        flex = FlexConfig(scheme=args.scheme, rate=args.rate,
+                          extract_impl=args.extract_impl)
     opt = make_optimizer(args.optimizer,
                          schedules.warmup_cosine(args.lr, args.steps),
                          **({} if args.optimizer == "adamw" else
                             {"flex": flex}))
-    plan = make_train_plan(cfg, mesh, args.batch, args.seq,
-                           args.microbatches)
     step, shardings, _ = build_train_step(cfg, mesh, opt, plan,
                                           use_kernel=args.use_kernel)
     state = init_state(jax.random.PRNGKey(0), cfg, opt, plan)

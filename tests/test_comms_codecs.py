@@ -1,0 +1,219 @@
+"""Wire codec round-trips: header integrity, property-style sweeps over
+chunk size / k / amplitude dtype, the uint16->uint32 index-width fallback,
+batched (gathered) decode, and end-to-end bit-identity of the codec'd packed
+replicator path against the pre-codec collective."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.comms import codecs
+from repro.core import packing
+from repro.core.flexdemo import FlexConfig, communicate_tree
+
+AMPS = sorted(codecs.AMP_CODES)
+
+
+def _payload(c, s, k, seed=0):
+    rng = np.random.RandomState(seed)
+    vals = jnp.asarray(rng.randn(c, k).astype(np.float32))
+    idx = jnp.asarray(rng.randint(0, s, (c, k)).astype(np.int32))
+    return vals, idx
+
+
+def _max_err(a, b):
+    return max(float(jnp.abs(x - y).max()) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# buffer layout / header
+
+
+@pytest.mark.parametrize("amp", AMPS)
+def test_header_and_buffer_length(amp):
+    c, s, k = 13, 64, 4
+    cod = codecs.PackedCodec(c, s, k, amp)
+    vals, idx = _payload(c, s, k)
+    buf = cod.encode(vals, idx)
+    assert buf.dtype == jnp.uint8
+    assert buf.shape == (cod.wire_bytes,)       # bytes on the wire == len(buf)
+    h = codecs.parse_header(np.asarray(buf))
+    assert h.amp_dtype == amp
+    assert (h.n_rows, h.chunk_size, h.k) == (c, s, k)
+    assert h.payload_bytes == cod.wire_bytes - codecs.HEADER_BYTES
+    assert h.idx_dtype == cod.idx_dtype
+
+
+def test_header_rejects_garbage():
+    with pytest.raises(ValueError, match="magic"):
+        codecs.parse_header(np.zeros(codecs.HEADER_BYTES, np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# round-trip sweep (the ISSUE's property sweep: s in 16..256, k in 1..32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([16, 32, 64, 128, 256]), st.integers(1, 32),
+       st.sampled_from(AMPS), st.integers(0, 10 ** 6))
+def test_roundtrip_sweep(s, k, amp, seed):
+    k = min(k, s)
+    c = (seed % 37) + 1
+    cod = codecs.PackedCodec(c, s, k, amp)
+    vals, idx = _payload(c, s, k, seed % 99991)
+    dec_vals, dec_idx = cod.decode(cod.encode(vals, idx))
+    # indices round-trip EXACTLY for every dtype/width
+    np.testing.assert_array_equal(np.asarray(dec_idx), np.asarray(idx))
+    v = np.asarray(vals)
+    d = np.asarray(dec_vals)
+    if amp == "fp32":
+        np.testing.assert_array_equal(d, v)     # pure bitcast: bit-identical
+    elif amp == "bf16":
+        ref = np.asarray(vals.astype(jnp.bfloat16).astype(jnp.float32))
+        np.testing.assert_array_equal(d, ref)   # exactly the bf16 rounding
+    else:  # int8: documented tolerance, half a quantization step per value
+        tol = np.abs(v).max(axis=-1, keepdims=True) / 254 + 1e-7
+        assert (np.abs(d - v) <= tol).all()
+
+
+@pytest.mark.parametrize("amp", ["bf16", "int8"])
+def test_sign_payloads_roundtrip_exactly(amp):
+    """{-1, 0, +1} payloads (the paper's sign-before-sync default) survive
+    even the lossy amplitude encodings bit-for-bit."""
+    c, s, k = 21, 64, 8
+    vals, idx = _payload(c, s, k, 3)
+    sv = jnp.sign(vals)
+    cod = codecs.PackedCodec(c, s, k, amp, signed=True)
+    dec_vals, dec_idx = cod.decode(cod.encode(sv, idx))
+    np.testing.assert_array_equal(np.asarray(dec_vals), np.asarray(sv))
+    np.testing.assert_array_equal(np.asarray(dec_idx), np.asarray(idx))
+    assert codecs.parse_header(np.asarray(cod.encode(sv, idx))).signed
+
+
+# ---------------------------------------------------------------------------
+# index width selection
+
+
+def test_index_width_fallback():
+    s = 64
+    # uint16 while C*s <= 65535 ...
+    c16 = codecs.UINT16_MAX_FLAT // s
+    assert codecs.index_dtype(c16, s) == "uint16"
+    # ... uint32 beyond
+    c32 = c16 + 1
+    assert codecs.index_dtype(c32, s) == "uint32"
+
+    for c, width in ((c16, 2), (c32, 4)):
+        cod = codecs.PackedCodec(c, s, 2, "fp32")
+        assert cod.idx_bytes == c * 2 * width
+        vals, idx = _payload(c, s, 2, 5)
+        dec_vals, dec_idx = cod.decode(cod.encode(vals, idx))
+        np.testing.assert_array_equal(np.asarray(dec_idx), np.asarray(idx))
+        np.testing.assert_array_equal(np.asarray(dec_vals), np.asarray(vals))
+
+
+def test_wire_bytes_scale_with_amp_dtype():
+    c, s, k = 100, 64, 8
+    w = {a: codecs.PackedCodec(c, s, k, a).wire_bytes for a in AMPS}
+    assert w["fp32"] > w["bf16"] > w["int8"]
+    assert w["fp32"] == codecs.HEADER_BYTES + c * k * (2 + 4)
+    assert w["int8"] == codecs.HEADER_BYTES + c * k * (2 + 1) + 4 * c
+
+
+# ---------------------------------------------------------------------------
+# gathered decode + jit
+
+
+def test_batched_decode_matches_unbatched():
+    c, s, k = 17, 32, 4
+    cod = codecs.PackedCodec(c, s, k, "bf16")
+    bufs, vals_list = [], []
+    for i in range(3):
+        vals, idx = _payload(c, s, k, i)
+        bufs.append(cod.encode(vals, idx))
+        vals_list.append((vals, idx))
+    g = jnp.stack(bufs)                           # (R, wire_bytes)
+    gv, gi = jax.jit(cod.decode)(g)
+    assert gv.shape == (3, c, k) and gi.shape == (3, c, k)
+    for i, (vals, idx) in enumerate(vals_list):
+        sv, si = cod.decode(bufs[i])
+        np.testing.assert_array_equal(np.asarray(gv[i]), np.asarray(sv))
+        np.testing.assert_array_equal(np.asarray(gi[i]), np.asarray(si))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the codec'd packed hot path
+
+
+def test_packed_path_reports_actual_bytes_and_is_bit_identical():
+    """Acceptance: wire_bytes == len(encoded buffer); fp32 decode from the
+    wire buffer == pre-codec collective, bit for bit."""
+    rng = np.random.RandomState(0)
+    tree = {"w": jnp.asarray(rng.randn(41, 9).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(130).astype(np.float32))}
+    step = jnp.asarray(0)
+    for sign in (True, False):
+        on = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed").make()
+        off = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed",
+                         codec="off").make()
+        q1, r1, w1 = communicate_tree(on, tree, step=step, axes=(), sign=sign)
+        q0, r0, w0 = communicate_tree(off, tree, step=step, axes=(), sign=sign)
+        layout = packing.plan_tree(tree, on.chunk_size)
+        cod = codecs.PackedCodec(layout.n_rows, on.chunk_size, on.topk,
+                                 "fp32", signed=sign)
+        assert w1 == cod.wire_bytes                 # actual, not modeled
+        assert w1 != w0                             # and distinguishable
+        assert _max_err(q1, q0) == 0.0
+        assert _max_err(r1, r0) == 0.0
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_packed_path_lossy_codecs_with_sign(codec):
+    """Sign-compressed payloads are exact under every codec, so the whole
+    hot path stays bit-identical to the pre-codec collective."""
+    rng = np.random.RandomState(1)
+    tree = {"w": jnp.asarray(rng.randn(37, 11).astype(np.float32))}
+    step = jnp.asarray(0)
+    on = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed",
+                    codec=codec).make()
+    off = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed",
+                     codec="off").make()
+    q1, r1, w1 = communicate_tree(on, tree, step=step, axes=(), sign=True)
+    q0, r0, _ = communicate_tree(off, tree, step=step, axes=(), sign=True)
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0
+    # lossy amplitude dtypes genuinely shrink the buffer
+    fp32 = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed").make()
+    _, _, w32 = communicate_tree(fp32, tree, step=step, axes=(), sign=True)
+    assert w1 < w32
+
+
+def test_gathered_codec_path_matches_per_leaf():
+    """|R| = 4 via vmap: the encoded-buffer all_gather must reproduce the
+    per-leaf raw-payload reference."""
+    rng = np.random.RandomState(11)
+    R = 4
+    stacked = {"a": jnp.asarray(rng.randn(R, 300).astype(np.float32)),
+               "b": jnp.asarray(rng.randn(R, 37, 11).astype(np.float32))}
+
+    def run(impl, codec):
+        rep = FlexConfig(scheme="demo", rate=1 / 8, extract_impl=impl,
+                         codec=codec).make()
+
+        def f(m):
+            q, res, _ = communicate_tree(rep, m, step=jnp.asarray(0),
+                                         axes=("r",), sign=True)
+            return q, res
+
+        return jax.vmap(f, axis_name="r")(stacked)
+
+    q0, r0 = run("per_leaf", "off")
+    q1, r1 = run("packed", "fp32")
+    q2, r2 = run("pallas_interpret", "int8")    # sign payload: int8 exact
+    assert _max_err(q1, q0) < 1e-5
+    assert _max_err(r1, r0) < 1e-5
+    assert _max_err(q2, q0) < 1e-5
+    assert _max_err(r2, r0) < 1e-5

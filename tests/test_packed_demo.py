@@ -66,6 +66,17 @@ def test_plan_is_static_and_replica_identical():
     assert p1.n_rows_padded == p2.n_rows_padded
 
 
+def test_plan_is_cached_across_steps():
+    """Same (structure, shapes, chunk) -> the SAME layout object (memoized);
+    different chunk or shapes -> a fresh plan."""
+    p1 = packing.plan_tree(_tree(0), 64)
+    p2 = packing.plan_tree(_tree(1), 64)
+    assert p2 is p1
+    assert packing.plan_tree(_tree(0), 32) is not p1
+    other = {"emb": jnp.zeros((301,), jnp.float32)}
+    assert packing.plan_tree(other, 64) is not p1
+
+
 # ---------------------------------------------------------------------------
 # fused extract kernel vs reference, all paper chunk sizes + padding
 
@@ -108,17 +119,20 @@ def test_packed_reference_matches_per_leaf_extraction():
 # fused decode kernel
 
 
+@pytest.mark.parametrize("matmul", [False, True])
 @pytest.mark.parametrize("n_rep", [1, 4])
 @pytest.mark.parametrize("s", [16, 64, 128])
-def test_decode_kernel_vs_reference(n_rep, s):
+def test_decode_kernel_vs_reference(n_rep, s, matmul):
     """Gathered-payload decode: scatter-add (duplicates across replicas
-    accumulate) + averaged iDCT, fused vs C.decode_dct_topk."""
+    accumulate) + averaged iDCT, fused vs C.decode_dct_topk. Both the
+    unrolled and the one-hot matmul accumulation must match."""
     c, k = 24, max(2, s // 8)
     rng = np.random.RandomState(s + n_rep)
     g_vals = jnp.asarray(rng.randn(n_rep, c, k).astype(np.float32))
     # random indices WITH cross-replica collisions
     g_idx = jnp.asarray(rng.randint(0, s, (n_rep, c, k)).astype(np.int32))
-    fused = decode_topk_gathered(g_vals, g_idx, s, interpret=True)
+    fused = decode_topk_gathered(g_vals, g_idx, s, interpret=True,
+                                 matmul=matmul)
     ref = C.decode_gathered_ref(g_vals, g_idx, s)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), atol=1e-5)
     # n_rep=1 with distinct indices must equal the single-payload decode
@@ -130,6 +144,50 @@ def test_decode_kernel_vs_reference(n_rep, s):
         np.testing.assert_allclose(np.asarray(one), np.asarray(two), atol=1e-5)
 
 
+def test_decode_matmul_large_replication_group():
+    """The one-hot matmul path exists for |R| > 8, where the unrolled
+    accumulation emits R*k ops; parity must hold there too (and the
+    VMEM-budget tile shrink must still divide C)."""
+    n_rep, c, s, k = 12, 128, 64, 8
+    rng = np.random.RandomState(0)
+    g_vals = jnp.asarray(rng.randn(n_rep, c, k).astype(np.float32))
+    g_idx = jnp.asarray(rng.randint(0, s, (n_rep, c, k)).astype(np.int32))
+    fused = decode_topk_gathered(g_vals, g_idx, s, interpret=True,
+                                 matmul=True)
+    ref = C.decode_gathered_ref(g_vals, g_idx, s)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), atol=1e-5)
+
+
+def test_decode_matmul_overbudget_falls_back():
+    """When R*k*s is so large no tile holds the one-hot tensor in VMEM,
+    matmul=True silently falls back to the unrolled kernel (still correct)
+    instead of emitting an over-budget pallas_call."""
+    n_rep, c, s, k = 16, 8, 256, 32      # R*k*s = 131072 > budget even @ 8
+    rng = np.random.RandomState(1)
+    g_vals = jnp.asarray(rng.randn(n_rep, c, k).astype(np.float32))
+    g_idx = jnp.asarray(rng.randint(0, s, (n_rep, c, k)).astype(np.int32))
+    fused = decode_topk_gathered(g_vals, g_idx, s, interpret=True,
+                                 matmul=True)
+    ref = C.decode_gathered_ref(g_vals, g_idx, s)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), atol=1e-5)
+
+
+def test_demo_replicator_decode_impl_flag():
+    """decode_impl="matmul" on the replicator reproduces the unrolled path."""
+    import dataclasses
+
+    tree = _tree(9)
+    kw = dict(scheme="demo", rate=1 / 8, extract_impl="pallas_interpret")
+    rep0 = FlexConfig(**kw).make()
+    rep1 = dataclasses.replace(rep0, decode_impl="matmul")
+    q0, r0, _ = communicate_tree(rep0, tree, step=jnp.asarray(0), axes=(),
+                                 sign=True)
+    q1, r1, _ = communicate_tree(rep1, tree, step=jnp.asarray(0), axes=(),
+                                 sign=True)
+    assert _max_err(q1, q0) < 1e-5
+    assert _max_err(r1, r0) < 1e-5
+
+
 # ---------------------------------------------------------------------------
 # tentpole acceptance: packed hot path == per-leaf reference path
 
@@ -137,15 +195,28 @@ def test_decode_kernel_vs_reference(n_rep, s):
 @pytest.mark.parametrize("impl", ["packed", "pallas_interpret"])
 @pytest.mark.parametrize("sign", [True, False])
 def test_packed_tree_bitcompat_single_device(impl, sign):
+    from repro.comms import codecs
+
     tree = _tree(7)
     ref = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="per_leaf").make()
     new = FlexConfig(scheme="demo", rate=1 / 8, extract_impl=impl).make()
     step = jnp.asarray(0)
     q0, r0, w0 = communicate_tree(ref, tree, step=step, axes=(), sign=sign)
     q1, r1, w1 = communicate_tree(new, tree, step=step, axes=(), sign=sign)
-    assert w1 == w0                       # modeled wire bytes identical
+    # packed path reports the ACTUAL encoded buffer length: the modeled
+    # payload (same uint16+fp32 per-coefficient cost) plus the wire header
+    layout = packing.plan_tree(tree, new.chunk_size)
+    cod = codecs.PackedCodec(layout.n_rows, new.chunk_size, new.topk,
+                             "fp32", signed=sign)
+    assert w1 == cod.wire_bytes == w0 + codecs.HEADER_BYTES
     assert _max_err(q1, q0) < 1e-5        # q_sync
     assert _max_err(r1, r0) < 1e-5        # m_residual
+    # fp32 codec is exact: codec on == codec off, bit for bit
+    pre = FlexConfig(scheme="demo", rate=1 / 8, extract_impl=impl,
+                     codec="off").make()
+    q2, r2, _ = communicate_tree(pre, tree, step=step, axes=(), sign=sign)
+    assert _max_err(q1, q2) == 0.0
+    assert _max_err(r1, r2) == 0.0
 
 
 @pytest.mark.parametrize("impl", ["packed", "pallas_interpret"])
