@@ -7,7 +7,6 @@ from repro.core import FlexConfig
 from repro.core.compression import rate_to_topk
 from repro.data.synthetic import Seq2Seq
 
-import numpy as np
 
 
 def run(n_steps=None):

@@ -1,12 +1,18 @@
-"""Wire-codec benchmark: encode/decode throughput per amplitude dtype and
-modeled-vs-actual bytes per replication scheme.
+"""Wire-codec benchmark: encode/decode throughput per amplitude dtype,
+wire format v1-vs-v2 index bytes, and actual-vs-modeled bytes per
+replication scheme.
 
-The "actual" column is the byte length of the buffer the packed DeMo path
-places on the collective (header + uint16/32 indices + encoded amplitudes
-[+ int8 scales]); "modeled" is the planning formula from
-``repro.core.compression``. For the masked/dense schemes the payload IS a
-bare value stream, so only the model applies. Honors BENCH_SMOKE=1 (fewer
-timing reps; used by scripts/verify.sh to keep the entrypoint alive)."""
+The "actual" column is the byte length of the buffer each scheme places on
+the collective (header + indices + encoded amplitudes [+ scales]); "modeled"
+is the planner's prediction (``repro.comms.planner.scheme_wire_bytes``).
+Since wire format v2 the codec is the ONLY wire path — every scheme encodes,
+so actual/modeled must be exactly 1.0 on every row (the bench is the
+regression witness for that invariant, enforced by scripts/check_bench.py).
+
+The demo rows also record measured encode/decode MB/s; those feed
+``topology.overhead_from_bench`` so the planner can price codec overhead.
+Honors BENCH_SMOKE=1 (fewer timing reps; used by scripts/verify.sh and CI
+to keep the entrypoint alive)."""
 import os
 import time
 
@@ -14,8 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.bench_packed import _tree
-from repro.comms import codecs
+from repro.comms import codecs, planner
 from repro.core import compression, packing
+from repro.core.flexdemo import FlexConfig, communicate_tree
 
 CHUNK, RATE = 64, 1 / 8
 
@@ -34,8 +41,10 @@ def _time(f, *a, n):
 
 def run():
     tree = _tree()
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    numels = planner.leaf_numels(shapes)
     layout = packing.plan_tree(tree, CHUNK)
-    numel = sum(s.numel for s in layout.slots)
     k = compression.rate_to_topk(RATE, CHUNK)
     chunks = packing.pack_tree(tree, layout)
     vals, idx, _ = compression.packed_dct_topk(chunks, k, impl="packed")
@@ -43,6 +52,7 @@ def run():
     n = _reps()
 
     rows = []
+    # -- packed DeMo codec: v2 per amplitude dtype, with timings -----------
     for amp in sorted(codecs.AMP_CODES):
         cod = codecs.PackedCodec(layout.n_rows, CHUNK, k, amp)
         enc = jax.jit(cod.encode)
@@ -50,30 +60,66 @@ def run():
         buf = enc(vals, idx)
         t_enc = _time(enc, vals, idx, n=n)
         t_dec = _time(dec, buf, n=n)
-        modeled = compression.demo_wire_bytes(
-            numel, CHUNK, k,
-            compression.WireFormat(value_bytes=codecs.AMP_BYTES[amp]))
+        flex = FlexConfig(scheme="demo", chunk_size=CHUNK, topk=k, codec=amp,
+                          value_bytes=codecs.AMP_BYTES[amp])
         rows.append({
             "scheme": f"demo:{amp}",
             "chunk_rows": layout.n_rows,
             "k": k,
+            "wire_version": cod.version,
             "idx_dtype": cod.idx_dtype,
-            "wire_bytes_actual": cod.wire_bytes,
-            "wire_bytes_modeled": modeled,
+            "wire_bytes_actual": int(buf.shape[0]),
+            "wire_bytes_modeled": planner.scheme_wire_bytes(flex, numels),
             "encode_us": t_enc * 1e6,
             "decode_us": t_dec * 1e6,
             "encode_MBps": cod.wire_bytes / t_enc / 1e6,
             "decode_MBps": cod.wire_bytes / t_dec / 1e6,
         })
-    for scheme, modeled in (
-            ("random", compression.masked_wire_bytes(numel, RATE)),
-            ("striding", compression.masked_wire_bytes(numel, RATE)),
-            ("full", compression.full_wire_bytes(numel))):
+
+    # -- wire format v1 (flat indices): the layout v2 replaces -------------
+    cod_v1 = codecs.PackedCodec(layout.n_rows, CHUNK, k, "fp32",
+                                idx_layout="flat")
+    buf_v1 = jax.jit(cod_v1.encode)(vals, idx)
+    flex_v1 = FlexConfig(scheme="demo", chunk_size=CHUNK, topk=k,
+                         codec="fp32", idx_layout="flat")
+    v2_fp32 = next(x for x in rows if x["scheme"] == "demo:fp32")
+    rows.append({
+        "scheme": "demo:fp32:v1-flat",
+        "chunk_rows": layout.n_rows,
+        "k": k,
+        "wire_version": cod_v1.version,
+        "idx_dtype": cod_v1.idx_dtype,
+        "wire_bytes_actual": int(buf_v1.shape[0]),
+        "wire_bytes_modeled": planner.scheme_wire_bytes(flex_v1, numels),
+        # index bytes v2 saves on this tree (C*s > 65535 -> v1 pays uint32)
+        "v2_index_savings": int(buf_v1.shape[0]) - v2_fp32["wire_bytes_actual"],
+    })
+
+    # -- masked/dense schemes: the codec is their wire path too ------------
+    step = jnp.asarray(0)
+    for scheme in ("random", "striding", "full"):
+        flex = FlexConfig(scheme=scheme, rate=RATE)
+        _, _, wire = communicate_tree(flex.make(), tree, step=step, axes=(),
+                                      sign=True)
         rows.append({
             "scheme": scheme,
-            "wire_bytes_actual": None,    # bare value stream: model == wire
-            "wire_bytes_modeled": modeled,
+            "wire_bytes_actual": int(wire),       # len of encoded buffers
+            "wire_bytes_modeled": planner.scheme_wire_bytes(flex, numels),
         })
+    # diloco's wire path is the outer parameter average: measure the actual
+    # sync-step burst (one encoded buffer per leaf) against the planner's
+    # burst pricing (budget_s is a per-step ceiling).
+    flex = FlexConfig(scheme="diloco", rate=RATE)
+    amp = flex.resolve_codec()
+    burst = sum(int(codecs.DenseCodec(leaf.size, amp)
+                    .encode(leaf.reshape(-1)).shape[0])
+                for leaf in jax.tree_util.tree_leaves(tree))
+    rows.append({
+        "scheme": "diloco",
+        "wire_bytes_actual": burst,
+        "wire_bytes_modeled": planner.scheme_wire_bytes(flex, numels),
+    })
+
     rows.extend(_decode_variants(k, n))
     return rows
 

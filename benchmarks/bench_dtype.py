@@ -8,7 +8,6 @@ from repro.configs import get_config
 from repro.core import FlexConfig
 from repro.data.synthetic import Seq2Seq
 
-import numpy as np
 
 
 def run(n_steps=None):

@@ -3,7 +3,6 @@ compute + collective time, with the paper's observation built in: DeMo's
 payload gather is an all_gather whose received bytes grow ~linearly with the
 node count, while Random (shared indices -> all-reduce-able) and full-sync
 (ring all-reduce) stay ~constant per node."""
-from benchmarks import settings as S
 from repro.configs import get_config
 from repro.core import FlexConfig
 from repro.core.flexdemo import tree_wire_bytes

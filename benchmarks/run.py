@@ -104,11 +104,18 @@ def main() -> None:
                      f"{r[1]['extract_calls']},"
                      f"speedup={r[0]['wall_us'] / r[1]['wall_us']:.2f}x,"
                      f"max_err={max(x['max_err_vs_per_leaf'] for x in r):.1e}"))
-    bench("comms", bench_comms.run,
-          lambda r: (f"actual/modeled="
-                     f"{r[0]['wire_bytes_actual'] / r[0]['wire_bytes_modeled']:.3f},"
-                     f"enc={r[0]['encode_MBps']:.0f}MBps,"
-                     f"dec={r[0]['decode_MBps']:.0f}MBps"))
+    def _comms_derived(r):
+        ratios = [x["wire_bytes_actual"] / x["wire_bytes_modeled"]
+                  for x in r if x.get("wire_bytes_modeled")]
+        fp32 = next(x for x in r if x["scheme"] == "demo:fp32")
+        v1 = next(x for x in r if x["scheme"] == "demo:fp32:v1-flat")
+        return (f"actual/modeled_max={max(ratios):.3f},"
+                f"schemes={len(ratios)},"
+                f"v2/v1={fp32['wire_bytes_actual'] / v1['wire_bytes_actual']:.3f},"
+                f"enc={fp32['encode_MBps']:.0f}MBps,"
+                f"dec={fp32['decode_MBps']:.0f}MBps")
+
+    bench("comms", bench_comms.run, _comms_derived)
 
     def _roofline():
         rows = roofline.run()

@@ -1,0 +1,176 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare a fresh ``benchmarks/run.py --json`` summary
+against the committed baselines under ``experiments/bench/``.
+
+Two classes of check, per benchmark row (rows are matched by their
+``scheme`` / ``setting`` / ``name`` key, falling back to list position):
+
+  * exact     -- every ``wire_bytes*`` field must match the baseline bit for
+                 bit.  Wire bytes are STATIC functions of shapes and codec
+                 plans; any drift is a silent wire-format regression (the
+                 thing this repo exists to avoid), so there is no tolerance.
+  * throughput-- every ``*_MBps`` field must stay above
+                 ``tolerance * baseline``.  Timings are machine-dependent, so
+                 the default tolerance only catches order-of-magnitude rot
+                 (e.g. a codec that silently fell off the jit path).
+
+Derived metrics embedded in a row (``max_err*`` fields) must also not grow
+beyond ``--err-tol``.
+
+Usage:
+  python scripts/check_bench.py CURRENT.json [--baseline-dir experiments/bench]
+                                [--throughput-tol 0.1] [--update]
+
+``--update`` rewrites the baseline row sets from CURRENT.json instead of
+comparing (how baselines are refreshed after an intentional wire change;
+re-run ``benchmarks/run.py --only comms --json ...`` first).
+
+Exit status: 0 = no regressions, 1 = at least one regression (printed),
+2 = usage / missing file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+EXACT_PREFIX = "wire_bytes"
+THROUGHPUT_SUFFIX = "_MBps"
+ERR_PREFIX = "max_err"
+
+
+def _row_key(row: dict, i: int) -> str:
+    for field in ("scheme", "setting", "name", "variant", "kernel"):
+        if row.get(field) is not None:
+            return f"{field}={row[field]}"
+    return f"#{i}"
+
+
+def _index_rows(name: str, rows: list, failures: list[str]) -> dict:
+    out = {}
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            continue
+        key = _row_key(row, i)
+        if key in out:
+            # a duplicate key would shadow one row from every check below —
+            # exactly the silent drift the gate exists to catch
+            failures.append(f"{name}[{key}]: duplicate row key; the bench "
+                            f"must emit distinguishable rows")
+        out[key] = row
+    return out
+
+
+def compare_rows(name: str, current: list, baseline: list,
+                 throughput_tol: float, err_tol: float) -> list[str]:
+    """All regressions of one benchmark's row set vs its baseline."""
+    failures: list[str] = []
+    cur = _index_rows(name, current, failures)
+    base = _index_rows(name, baseline, failures)
+    for key, brow in base.items():
+        crow = cur.get(key)
+        if crow is None:
+            failures.append(f"{name}[{key}]: row disappeared from the bench")
+            continue
+        for field, bval in brow.items():
+            cval = crow.get(field)
+            if field.startswith(EXACT_PREFIX):
+                if bval is None or cval is None:
+                    if bval != cval:
+                        failures.append(
+                            f"{name}[{key}].{field}: {bval!r} -> {cval!r}")
+                elif int(cval) != int(bval):
+                    failures.append(
+                        f"{name}[{key}].{field}: wire bytes changed "
+                        f"{bval} -> {cval} (exact check; refresh baselines "
+                        f"with --update if intentional)")
+            elif field.endswith(THROUGHPUT_SUFFIX):
+                if not isinstance(bval, (int, float)) or bval <= 0:
+                    continue
+                if not isinstance(cval, (int, float)) \
+                        or cval < throughput_tol * bval:
+                    failures.append(
+                        f"{name}[{key}].{field}: throughput {cval} below "
+                        f"{throughput_tol:g} x baseline {bval:.1f}")
+            elif field.startswith(ERR_PREFIX):
+                if isinstance(bval, (int, float)) and (
+                        not isinstance(cval, (int, float))
+                        or cval > max(float(bval), err_tol)):
+                    failures.append(
+                        f"{name}[{key}].{field}: error grew "
+                        f"{bval} -> {cval} (tol {err_tol:g})")
+    return failures
+
+
+def load_current(path: str) -> dict:
+    """{bench name: rows} from a ``run.py --json`` summary (or a bare row
+    set saved by ``run.py`` under experiments/bench/, keyed by filename)."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "results" in data:
+        return {r["name"]: r["rows"] for r in data["results"]}
+    name = os.path.splitext(os.path.basename(path))[0]
+    return {name: data}
+
+
+def run_check(current_path: str, baseline_dir: str, throughput_tol: float,
+              err_tol: float, update: bool = False) -> list[str]:
+    current = load_current(current_path)
+    if not current:
+        return [f"{current_path}: no benchmark results to check"]
+    if update:
+        os.makedirs(baseline_dir, exist_ok=True)
+        for name, rows in current.items():
+            with open(os.path.join(baseline_dir, f"{name}.json"), "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            print(f"updated baseline {name}.json ({len(rows)} rows)")
+        return []
+    failures = []
+    checked = 0
+    for name, rows in current.items():
+        bpath = os.path.join(baseline_dir, f"{name}.json")
+        if not os.path.exists(bpath):
+            print(f"note: no baseline for {name!r} ({bpath}); skipping")
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        failures += compare_rows(name, rows, baseline, throughput_tol,
+                                 err_tol)
+        checked += 1
+    if checked == 0:
+        failures.append(f"no baselines under {baseline_dir!r} matched "
+                        f"{sorted(current)} — nothing was actually checked")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("current", help="summary written by benchmarks/run.py --json")
+    ap.add_argument("--baseline-dir", default="experiments/bench")
+    ap.add_argument("--throughput-tol", type=float, default=0.1,
+                    help="current *_MBps must exceed TOL x baseline "
+                    "(default 0.1: catches order-of-magnitude rot only)")
+    ap.add_argument("--err-tol", type=float, default=1e-5,
+                    help="absolute floor below which max_err growth is noise")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from CURRENT instead of comparing")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"error: {args.current} not found", file=sys.stderr)
+        return 2
+    failures = run_check(args.current, args.baseline_dir,
+                         args.throughput_tol, args.err_tol, args.update)
+    if failures:
+        print(f"PERF REGRESSION: {len(failures)} check(s) failed")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    if not args.update:
+        print("perf gate: OK (wire bytes exact, throughput within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,5 +30,8 @@ assert rows[1]["extract_calls"] == 1 and rows[0]["extract_calls"] > 1
 print("verify: OK")
 EOF
 
-python benchmarks/run.py --only packed_extraction --smoke
-python benchmarks/run.py --only comms --smoke
+# BENCH_OUT: smoke-run row sets go to a scratch dir so the COMMITTED
+# baselines under experiments/bench/ (the perf gate's reference — see
+# scripts/check_bench.py) are never overwritten with 2-rep smoke timings.
+BENCH_OUT="$(mktemp -d)" python benchmarks/run.py --only packed_extraction --smoke
+BENCH_OUT="$(mktemp -d)" python benchmarks/run.py --only comms --smoke

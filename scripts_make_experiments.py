@@ -47,10 +47,12 @@ def extensions_section():
             f"| {coll_of(src)/2**30:.3f} |")
     lines += [
         "",
-        "- **`sync_impl=\"psum\"`** for random/striding: shared seeded "
-        "indices make the compressed values all-REDUCE-able — the "
-        "beyond-paper fix for DeMo's all_gather scaling wall (paper Fig. 6; "
-        "modeled 5.4x at 64 nodes in benchmarks/fig5_6).",
+        "- **`sync_impl=\"psum\"`** for random/striding (requires "
+        "`codec=\"off\"`: psum all-reduces raw values, bypassing the wire "
+        "codec): shared seeded indices make the compressed values "
+        "all-REDUCE-able — the beyond-paper fix for DeMo's all_gather "
+        "scaling wall (paper Fig. 6; modeled 5.4x at 64 nodes in "
+        "benchmarks/fig5_6).",
         "- **Ulysses attention**, **bf16-before-gather**, "
         "**replicated-weight prefill**, **2-D TP decode with batch-sharded "
         "ring/flash KV cache** — §Perf.",

@@ -2,14 +2,20 @@
 
 Three layers, lowest to highest:
 
-  codecs    -- REAL wire payloads: the packed DeMo (values, indices) pair is
-               encoded into one contiguous, versioned uint8 buffer per step;
-               the bytes placed on the collective ARE the bytes reported.
+  codecs    -- REAL wire payloads for EVERY scheme: DeMo's (values, indices)
+               pair rides PackedCodec (wire v2 "local" index layout by
+               default, v1 "flat" still decodes via the version byte), the
+               index-free schemes (random/striding/full/diloco) ride
+               DenseCodec value streams; the bytes placed on the collective
+               ARE the bytes reported.
   topology  -- declarative cluster model (intra-/inter-node links, replica
                placement from the mesh) + an analytic all-gather step-time
-               cost model.
-  planner   -- bandwidth-budget search over scheme x rate x chunk x k x codec
-               emitting a ready-to-run FlexConfig.
+               cost model, optionally charging measured codec overhead
+               (CodecOverhead / overhead_from_bench).
+  planner   -- bandwidth-budget search over scheme x rate x chunk x k x
+               codec x wire version emitting a ready-to-run FlexConfig;
+               its byte predictions reproduce the replicators'
+               serialization exactly (scheme_wire_bytes).
 
 Import discipline: ``codecs`` depends only on jax/numpy; ``topology`` is pure
 python; ``planner`` sits on top of both plus ``repro.core``. The replicators

@@ -1,52 +1,67 @@
-"""Wire codecs: pack a compressed DeMo payload into ONE contiguous buffer.
+"""Wire codecs: pack a compressed replication payload into ONE contiguous buffer.
 
-The packed DeMo hot path extracts per-chunk top-k DCT coefficients for the
-whole momentum tree at once: ``vals (C, k) f32`` and ``idx (C, k) i32``.
-Before this module existed the repo only *modeled* what those would cost on
-the network (``WireFormat.value_bytes`` multipliers); here the payload is
-actually serialized, so the byte count reported by the replicator is the
-byte length of the buffer handed to the collective.
+Every replication scheme now serializes what it actually places on the
+collective, so the byte count a replicator reports is the byte length of the
+buffer handed to ``all_gather`` — never a planning formula.  Two payload
+shapes exist:
 
-Wire format v1 (little-endian), one buffer per step per replica::
+  * :class:`PackedCodec` -- the DeMo (values, indices) pair: per-chunk top-k
+    DCT coefficients ``vals (C, k) f32`` plus their in-chunk positions
+    ``idx (C, k) i32``;
+  * :class:`DenseCodec`  -- a bare value stream (random/striding/full/diloco:
+    their indices are reproduced from seed/stride/step on every replica, so
+    only amplitudes travel).
+
+Shared header (little-endian, 24 B), one buffer per step per replica::
 
     offset  size  field
     0       4     magic            0x0DE70A71
-    4       1     version          1
+    4       1     version          1 = flat index layout, 2 = local
     5       1     amp_code         0=fp32  1=bf16  2=int8
-    6       1     idx_code         0=uint16  1=uint32
+    6       1     idx_code         0=uint16  1=uint32  2=none (dense stream)
     7       1     flags            bit0: payload was sign-compressed
-    8       4     n_rows (C)       valid chunk rows (pallas pad rows excluded)
-    12      4     chunk_size (s)
-    16      4     k
+    8       4     n_rows (C)       chunk rows (dense: total value count)
+    12      4     chunk_size (s)   (dense: int8 scale-group length)
+    16      4     k                per-row payload width (dense: 0)
     20      4     payload_bytes    bytes after the header
-    24      ...   indices          C*k ints, GLOBAL flat positions row*s + j
-    ...     ...   amplitudes       C*k values in amp dtype
-    [...    ...   scales           C f32 per-row scales, int8 only]
+    24      ...   indices          C*k ints (PackedCodec only)
+    ...     ...   amplitudes       values in amp dtype
+    [...    ...   scales           per-row/group f32 scales, int8 only]
 
-Indices travel as global flat coefficient positions (``row * s + j``) so a
-receiver can scatter into the flat coefficient buffer without consulting the
-layout; they fit uint16 while ``C * s <= 65535`` and auto-widen to uint32
-beyond that (the "uint16 wire cast" the ROADMAP queued, with the fallback).
-Deliberate trade-off: flat addressing is self-describing but pays 4 B/index
-once ``C * s`` outgrows uint16, which every production-scale tree does; a v2
-``idx_layout=local`` (store the in-chunk ``j`` only, always uint16 for
-``s <= 65536``, row implied by position) is queued in the ROADMAP. The
-planner and the comms bench price the flat cost honestly either way.
+Index layouts (the version byte):
 
-Round-trip guarantees:
+  v1 ``flat``  -- indices are GLOBAL flat coefficient positions ``row*s + j``:
+      self-describing (a receiver can scatter without consulting the layout)
+      but they outgrow uint16 as soon as ``C*s > 65535``, which every
+      production-scale tree does — 4 B/index on exactly the payloads that
+      matter.
+  v2 ``local`` -- indices are the in-chunk position ``j`` only; the row is
+      implied by the index's position in the buffer (``C`` consecutive groups
+      of ``k``).  uint16 whenever ``chunk_size <= 65536`` REGARDLESS of tree
+      size, i.e. always in practice — half the index bytes of v1 on any tree
+      past ~64k coefficients.  v2 is the default; v1 buffers still decode
+      (version-byte dispatch in :func:`decode_buffer`).
+
+Round-trip guarantees (both codecs):
   fp32  -- bit-identical (pure bitcast).
   bf16  -- bit-identical whenever the values are bf16-representable; the
            sign-compressed payloads the paper recommends ({-1, 0, +1}) always
            are.  Otherwise round-to-nearest-even at 8 mantissa bits.
-  int8  -- per-row absmax scaling; |error| <= row_absmax / 254 per value
-           (half a quantization step).  Sign payloads round-trip exactly.
+  int8  -- per-row (per-group) absmax scaling; |error| <= absmax / 254 per
+           value (half a quantization step).  Sign payloads round-trip
+           exactly.
 
 Everything here is jit-traceable (bitcasts + concatenation); the header is a
-trace-time constant and ``PackedCodec.wire_bytes`` is a static python int.
+trace-time constant and ``wire_bytes`` is a static python int.  The
+host-side entry points (:func:`parse_header`, :func:`decode_buffer`) validate
+hostile input: bad magic, unknown version/amp_code/idx_code, truncated or
+padded buffers, and header/payload size mismatches all raise ``ValueError``
+instead of silently mis-decoding.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import struct
 
 import jax
@@ -54,9 +69,13 @@ import jax.numpy as jnp
 import numpy as np
 
 MAGIC = 0x0DE70A71
-VERSION = 1
 HEADER_BYTES = 24
 _HEADER_FMT = "<IBBBBIIII"
+
+# version byte <-> index layout (v2 "local" is the default everywhere)
+IDX_LAYOUTS = {"flat": 1, "local": 2}
+VERSIONS = {v: n for n, v in IDX_LAYOUTS.items()}
+DEFAULT_IDX_LAYOUT = "local"
 
 AMP_CODES = {"fp32": 0, "bf16": 1, "int8": 2}
 AMP_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
@@ -64,40 +83,78 @@ AMP_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 # FlexConfig.value_bytes (the paper's wire-dtype study axis) -> amp encoding
 AMP_FOR_VALUE_BYTES = {4: "fp32", 2: "bf16", 1: "int8"}
 
-IDX_CODES = {"uint16": 0, "uint32": 1}
-IDX_BYTES = {"uint16": 2, "uint32": 4}
-# uint16 holds flat positions while C*s <= 65535; uint32 beyond
+IDX_CODES = {"uint16": 0, "uint32": 1, "none": 2}
+IDX_BYTES = {"uint16": 2, "uint32": 4, "none": 0}
+# uint16 holds v1 flat positions while C*s <= 65535; v2 local positions
+# while s <= 65536 (j <= s-1)
 UINT16_MAX_FLAT = 65535
+UINT16_MAX_LOCAL = 65536
+
+# int8 scale-group length for dense value streams (one f32 absmax per group)
+DENSE_SCALE_GROUP = 256
 
 
-def index_dtype(n_rows: int, chunk_size: int) -> str:
-    """Narrowest index width for global flat positions in ``[0, C*s)``."""
-    return "uint16" if n_rows * chunk_size <= UINT16_MAX_FLAT else "uint32"
+def index_dtype(n_rows: int, chunk_size: int,
+                idx_layout: str = DEFAULT_IDX_LAYOUT) -> str:
+    """Narrowest index width for the given layout.
+
+    flat  : positions span ``[0, C*s)`` -- uint16 only while the whole flat
+            coefficient space fits.
+    local : positions span ``[0, s)`` -- uint16 whenever the CHUNK fits,
+            i.e. independent of tree size (the point of wire format v2).
+    """
+    if idx_layout == "flat":
+        return "uint16" if n_rows * chunk_size <= UINT16_MAX_FLAT else "uint32"
+    if idx_layout == "local":
+        return "uint16" if chunk_size <= UINT16_MAX_LOCAL else "uint32"
+    raise ValueError(f"unknown idx_layout {idx_layout!r}; "
+                     f"have {sorted(IDX_LAYOUTS)}")
 
 
 @dataclasses.dataclass(frozen=True)
 class WireHeader:
+    version: int
+    idx_layout: str            # "flat" | "local" ("local" for dense streams)
     amp_dtype: str
-    idx_dtype: str
+    idx_dtype: str             # "uint16" | "uint32" | "none"
     signed: bool
     n_rows: int
     chunk_size: int
     k: int
     payload_bytes: int
 
+    @property
+    def dense(self) -> bool:
+        return self.idx_dtype == "none"
+
 
 def parse_header(buf) -> WireHeader:
-    """Host-side header parse/validation of an encoded buffer (or prefix)."""
-    raw = bytes(np.asarray(buf[:HEADER_BYTES], dtype=np.uint8))
+    """Host-side header parse/validation of an encoded buffer (or prefix).
+
+    Raises ``ValueError`` on bad magic and on unknown version / amp_code /
+    idx_code bytes — a hostile or corrupt header never silently decodes.
+    """
+    raw = bytes(np.asarray(buf, dtype=np.uint8)[:HEADER_BYTES])
+    if len(raw) < HEADER_BYTES:
+        raise ValueError(f"buffer too short for header: {len(raw)} "
+                         f"< {HEADER_BYTES} bytes")
     (magic, version, amp_code, idx_code, flags,
      n_rows, chunk_size, k, payload) = struct.unpack(_HEADER_FMT, raw)
     if magic != MAGIC:
         raise ValueError(f"bad magic {magic:#x} (want {MAGIC:#x})")
-    if version != VERSION:
-        raise ValueError(f"unsupported wire version {version}")
-    amp = {v: n for n, v in AMP_CODES.items()}[amp_code]
-    idx = {v: n for n, v in IDX_CODES.items()}[idx_code]
-    return WireHeader(amp_dtype=amp, idx_dtype=idx, signed=bool(flags & 1),
+    if version not in VERSIONS:
+        raise ValueError(f"unsupported wire version {version}; "
+                         f"have {sorted(VERSIONS)}")
+    amp = {v: n for n, v in AMP_CODES.items()}.get(amp_code)
+    if amp is None:
+        raise ValueError(f"unknown amp_code {amp_code}; "
+                         f"have {sorted(AMP_CODES.values())}")
+    idx = {v: n for n, v in IDX_CODES.items()}.get(idx_code)
+    if idx is None:
+        raise ValueError(f"unknown idx_code {idx_code}; "
+                         f"have {sorted(IDX_CODES.values())}")
+    return WireHeader(version=version, idx_layout=VERSIONS[version],
+                      amp_dtype=amp, idx_dtype=idx, signed=bool(flags & 1),
                       n_rows=n_rows, chunk_size=chunk_size, k=k,
                       payload_bytes=payload)
 
@@ -107,26 +164,48 @@ def _bytes_of(x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
 
 
+def _encode_amp(v32: jnp.ndarray, amp_dtype: str):
+    """f32 rows (C, w) -> (amp payload u8, per-row scales u8 or None)."""
+    if amp_dtype == "fp32":
+        return _bytes_of(v32), None
+    if amp_dtype == "bf16":
+        return _bytes_of(v32.astype(jnp.bfloat16)), None
+    # int8, per-row absmax scaling
+    scale = jnp.max(jnp.abs(v32), axis=-1)                    # (C,)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(v32 / safe[:, None] * 127.0),
+                 -127, 127).astype(jnp.int8)
+    return _bytes_of(q), _bytes_of(scale[:, None]).reshape(-1)
+
+
 @dataclasses.dataclass(frozen=True)
 class PackedCodec:
-    """Static codec plan for one packed payload shape (C, s, k)."""
+    """Static codec plan for one packed top-k payload shape (C, s, k)."""
 
     n_rows: int
     chunk_size: int
     k: int
     amp_dtype: str = "fp32"
     signed: bool = False
+    idx_layout: str = DEFAULT_IDX_LAYOUT     # "local" (v2) | "flat" (v1)
 
     def __post_init__(self):
         if self.amp_dtype not in AMP_CODES:
             raise ValueError(f"unknown amp dtype {self.amp_dtype!r}; "
                              f"have {sorted(AMP_CODES)}")
+        if self.idx_layout not in IDX_LAYOUTS:
+            raise ValueError(f"unknown idx_layout {self.idx_layout!r}; "
+                             f"have {sorted(IDX_LAYOUTS)}")
 
     # -- static sizing ------------------------------------------------------
 
     @property
+    def version(self) -> int:
+        return IDX_LAYOUTS[self.idx_layout]
+
+    @property
     def idx_dtype(self) -> str:
-        return index_dtype(self.n_rows, self.chunk_size)
+        return index_dtype(self.n_rows, self.chunk_size, self.idx_layout)
 
     @property
     def idx_bytes(self) -> int:
@@ -151,7 +230,7 @@ class PackedCodec:
 
     def header(self) -> bytes:
         return struct.pack(
-            _HEADER_FMT, MAGIC, VERSION, AMP_CODES[self.amp_dtype],
+            _HEADER_FMT, MAGIC, self.version, AMP_CODES[self.amp_dtype],
             IDX_CODES[self.idx_dtype], int(self.signed),
             self.n_rows, self.chunk_size, self.k, self.payload_bytes)
 
@@ -162,23 +241,17 @@ class PackedCodec:
         c, k, s = self.n_rows, self.k, self.chunk_size
         assert vals.shape == (c, k) and idx.shape == (c, k), (
             vals.shape, idx.shape, (c, k))
-        flat = (jnp.arange(c, dtype=jnp.int32)[:, None] * s
-                + idx.astype(jnp.int32))
-        idx_u8 = _bytes_of(flat.astype(jnp.dtype(self.idx_dtype)))
+        if self.idx_layout == "flat":
+            # v1: global flat positions row*s + j
+            pos = (jnp.arange(c, dtype=jnp.int32)[:, None] * s
+                   + idx.astype(jnp.int32))
+        else:
+            # v2: the in-chunk j only — the row is the buffer position
+            pos = idx.astype(jnp.int32)
+        idx_u8 = _bytes_of(pos.astype(jnp.dtype(self.idx_dtype)))
 
-        v32 = vals.astype(jnp.float32)
-        scales_u8 = None
-        if self.amp_dtype == "fp32":
-            amp_u8 = _bytes_of(v32)
-        elif self.amp_dtype == "bf16":
-            amp_u8 = _bytes_of(v32.astype(jnp.bfloat16))
-        else:  # int8, per-row absmax scaling
-            scale = jnp.max(jnp.abs(v32), axis=-1)                # (C,)
-            safe = jnp.where(scale > 0, scale, 1.0)
-            q = jnp.clip(jnp.round(v32 / safe[:, None] * 127.0),
-                         -127, 127).astype(jnp.int8)
-            amp_u8 = _bytes_of(q)
-            scales_u8 = _bytes_of(scale[:, None]).reshape(-1)
+        amp_u8, scales_u8 = _encode_amp(vals.astype(jnp.float32),
+                                        self.amp_dtype)
         head = jnp.asarray(np.frombuffer(self.header(), np.uint8))
         parts = [head, idx_u8, amp_u8]
         if scales_u8 is not None:
@@ -199,8 +272,11 @@ class PackedCodec:
 
         iw = IDX_BYTES[self.idx_dtype]
         seg = buf[..., o:o + self.idx_bytes].reshape(*lead, c * k, iw)
-        flat = jax.lax.bitcast_convert_type(seg, jnp.dtype(self.idx_dtype))
-        idx = (flat.astype(jnp.int32) % s).reshape(*lead, c, k)
+        pos = jax.lax.bitcast_convert_type(seg, jnp.dtype(self.idx_dtype))
+        if self.idx_layout == "flat":
+            idx = (pos.astype(jnp.int32) % s).reshape(*lead, c, k)
+        else:
+            idx = pos.astype(jnp.int32).reshape(*lead, c, k)
         o += self.idx_bytes
 
         aw = AMP_BYTES[self.amp_dtype]
@@ -222,12 +298,170 @@ class PackedCodec:
         return vals.reshape(*lead, c, k), idx
 
 
+@dataclasses.dataclass(frozen=True)
+class DenseCodec:
+    """Static codec plan for a bare value stream of ``n_values`` floats.
+
+    The wire path of the index-free schemes (random / striding / full /
+    diloco): their selections are reproduced from (seed, step) or the stride
+    on every replica, so the payload is amplitudes only.  Wire layout is the
+    shared v2 header with ``idx_code = none``, ``n_rows = n_values``,
+    ``chunk_size = scale group length`` and ``k = 0``, followed by the
+    ``n_values`` encoded amplitudes (int8 adds one f32 absmax per
+    ``group``-sized run of values).
+    """
+
+    n_values: int
+    amp_dtype: str = "fp32"
+    signed: bool = False
+    group: int = DENSE_SCALE_GROUP
+
+    def __post_init__(self):
+        if self.amp_dtype not in AMP_CODES:
+            raise ValueError(f"unknown amp dtype {self.amp_dtype!r}; "
+                             f"have {sorted(AMP_CODES)}")
+        if self.n_values <= 0:
+            raise ValueError(f"n_values must be positive, got {self.n_values}")
+        if self.group <= 0:
+            raise ValueError(f"scale group must be positive, got {self.group}")
+
+    # -- static sizing ------------------------------------------------------
+
+    @property
+    def version(self) -> int:
+        return IDX_LAYOUTS[DEFAULT_IDX_LAYOUT]
+
+    @property
+    def n_groups(self) -> int:
+        return math.ceil(self.n_values / self.group)
+
+    @property
+    def amp_bytes(self) -> int:
+        return self.n_values * AMP_BYTES[self.amp_dtype]
+
+    @property
+    def scale_bytes(self) -> int:
+        return self.n_groups * 4 if self.amp_dtype == "int8" else 0
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.amp_bytes + self.scale_bytes
+
+    @property
+    def wire_bytes(self) -> int:
+        """Byte length of :meth:`encode`'s output — the bytes on the wire."""
+        return HEADER_BYTES + self.payload_bytes
+
+    def header(self) -> bytes:
+        return struct.pack(
+            _HEADER_FMT, MAGIC, self.version, AMP_CODES[self.amp_dtype],
+            IDX_CODES["none"], int(self.signed),
+            self.n_values, self.group, 0, self.payload_bytes)
+
+    # -- encode / decode ----------------------------------------------------
+
+    def encode(self, vals: jnp.ndarray) -> jnp.ndarray:
+        """(n_values,) values -> (wire_bytes,) uint8."""
+        n = self.n_values
+        assert vals.shape == (n,), (vals.shape, n)
+        v32 = vals.astype(jnp.float32)
+        if self.amp_dtype == "int8":
+            pad = self.n_groups * self.group - n
+            rows = jnp.pad(v32, (0, pad)).reshape(self.n_groups, self.group)
+            scale = jnp.max(jnp.abs(rows), axis=-1)            # (G,)
+            safe = jnp.where(scale > 0, scale, 1.0)
+            q = jnp.clip(jnp.round(rows / safe[:, None] * 127.0),
+                         -127, 127).astype(jnp.int8)
+            amp_u8 = _bytes_of(q.reshape(-1)[:n])
+            scales_u8 = _bytes_of(scale[:, None]).reshape(-1)
+        else:
+            amp_u8, scales_u8 = _encode_amp(v32[None, :], self.amp_dtype)
+        head = jnp.asarray(np.frombuffer(self.header(), np.uint8))
+        parts = [head, amp_u8]
+        if scales_u8 is not None:
+            parts.append(scales_u8)
+        buf = jnp.concatenate(parts)
+        assert buf.shape == (self.wire_bytes,), (buf.shape, self.wire_bytes)
+        return buf
+
+    def decode(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """(..., wire_bytes) uint8 -> (..., n_values) f32; batch dims pass."""
+        n = self.n_values
+        assert buf.shape[-1] == self.wire_bytes, (buf.shape, self.wire_bytes)
+        lead = buf.shape[:-1]
+        o = HEADER_BYTES
+        aw = AMP_BYTES[self.amp_dtype]
+        seg = buf[..., o:o + self.amp_bytes].reshape(*lead, n, aw)
+        if self.amp_dtype == "fp32":
+            vals = jax.lax.bitcast_convert_type(seg, jnp.float32)
+        elif self.amp_dtype == "bf16":
+            vals = jax.lax.bitcast_convert_type(
+                seg, jnp.bfloat16).astype(jnp.float32)
+        else:
+            q = jax.lax.bitcast_convert_type(seg.reshape(*lead, n), jnp.int8)
+            o += self.amp_bytes
+            sseg = buf[..., o:o + self.scale_bytes].reshape(
+                *lead, self.n_groups, 4)
+            scale = jax.lax.bitcast_convert_type(sseg, jnp.float32) / 127.0
+            per_val = jnp.repeat(scale, self.group, axis=-1)[..., :n]
+            return q.astype(jnp.float32) * per_val
+        return vals.reshape(*lead, n)
+
+
+def codec_for_header(h: WireHeader):
+    """Reconstruct the codec plan an encoded buffer was produced with.
+
+    Cross-checks the header's redundant fields (idx_code, payload_bytes)
+    against the reconstructed plan and raises ``ValueError`` on any mismatch,
+    so a tampered header cannot select a decoder that mis-reads the payload.
+    """
+    if h.dense:
+        codec = DenseCodec(n_values=h.n_rows, amp_dtype=h.amp_dtype,
+                           signed=h.signed, group=h.chunk_size)
+        if h.k != 0:
+            raise ValueError(f"dense stream with k={h.k} (want 0)")
+    else:
+        codec = PackedCodec(n_rows=h.n_rows, chunk_size=h.chunk_size, k=h.k,
+                            amp_dtype=h.amp_dtype, signed=h.signed,
+                            idx_layout=h.idx_layout)
+        if codec.idx_dtype != h.idx_dtype:
+            raise ValueError(
+                f"header idx_code {h.idx_dtype} inconsistent with layout "
+                f"{h.idx_layout!r} at C={h.n_rows} s={h.chunk_size} "
+                f"(want {codec.idx_dtype})")
+    if codec.payload_bytes != h.payload_bytes:
+        raise ValueError(f"header payload_bytes {h.payload_bytes} != "
+                         f"{codec.payload_bytes} implied by the shape fields")
+    return codec
+
+
+def decode_buffer(buf):
+    """Host-side self-describing decode with full hostile-input validation.
+
+    Parses and validates the header (version dispatch: v1 flat and v2 local
+    layouts both decode), reconstructs the codec plan, length-checks the
+    buffer, and decodes.  Returns ``(vals, idx, header)``; ``idx`` is None
+    for dense value streams.  Truncated, padded, or inconsistent buffers
+    raise ``ValueError`` — never a silent mis-decode.
+    """
+    arr = np.asarray(buf, dtype=np.uint8).reshape(-1)
+    h = parse_header(arr)
+    codec = codec_for_header(h)
+    if arr.size != codec.wire_bytes:
+        raise ValueError(f"buffer length {arr.size} != wire_bytes "
+                         f"{codec.wire_bytes} (truncated or padded)")
+    if h.dense:
+        return codec.decode(jnp.asarray(arr)), None, h
+    vals, idx = codec.decode(jnp.asarray(arr))
+    return vals, idx, h
+
+
 def resolve_amp(codec: str, value_bytes: int) -> str:
     """Resolve a codec choice to an amplitude encoding (or "off").
 
     "auto" derives from the FlexConfig/WireFormat ``value_bytes`` study axis;
     anything else must be a known encoding. Single source of truth for both
-    ``FlexConfig.resolve_codec`` and ``DeMoReplicator.amp_dtype``.
+    ``FlexConfig.resolve_codec`` and the replicators' ``amp_dtype``.
     """
     if codec == "auto":
         return AMP_FOR_VALUE_BYTES.get(value_bytes, "fp32")
@@ -238,6 +472,13 @@ def resolve_amp(codec: str, value_bytes: int) -> str:
 
 
 def demo_packed_wire_bytes(n_rows: int, chunk_size: int, k: int,
-                           amp_dtype: str = "fp32") -> int:
+                           amp_dtype: str = "fp32",
+                           idx_layout: str = DEFAULT_IDX_LAYOUT) -> int:
     """Actual (not modeled) bytes for a packed DeMo step at these shapes."""
-    return PackedCodec(n_rows, chunk_size, k, amp_dtype).wire_bytes
+    return PackedCodec(n_rows, chunk_size, k, amp_dtype,
+                       idx_layout=idx_layout).wire_bytes
+
+
+def dense_wire_bytes(n_values: int, amp_dtype: str = "fp32") -> int:
+    """Actual (not modeled) bytes for one dense value-stream buffer."""
+    return DenseCodec(n_values, amp_dtype).wire_bytes

@@ -1,12 +1,19 @@
-"""Bandwidth-budget planner: search scheme x rate x chunk x k x codec.
+"""Bandwidth-budget planner: search scheme x rate x chunk x k x codec x wire.
 
 Given the parameter tree (shapes only), a :class:`~repro.comms.topology.Topology`
 and the replication placement, the planner enumerates replication-scheme
-configurations, prices each one with the REAL codec byte count (demo) or the
-modeled payload (masked/diloco/full schemes, whose payloads are plain dense
-value streams), predicts sync seconds with the topology cost model, and
-returns the highest-fidelity :class:`~repro.core.flexdemo.FlexConfig` that
-fits the budget.
+configurations, prices each one with the REAL codec byte count — the same
+static sizing the replicators serialize with, per leaf, so the predicted
+``wire_bytes`` equals what ``communicate_tree`` reports — predicts sync
+seconds with the topology cost model (optionally folding in measured
+encode/decode codec overhead), and returns the highest-fidelity
+:class:`~repro.core.flexdemo.FlexConfig` that fits the budget.
+
+Wire-format versions are part of the search space: DeMo candidates are
+priced under both the v2 ``local`` index layout (uint16 indices whenever
+``chunk <= 65536``) and the legacy v1 ``flat`` layout (uint32 past
+``C*s > 65535``); past that boundary v2 strictly wins and the tie-break
+toward fewer predicted seconds selects it.
 
 Budget forms (exactly one):
   * ``budget_s``        -- hard ceiling on replication-sync seconds per step;
@@ -27,8 +34,8 @@ from typing import Sequence
 import jax
 
 from repro.comms import codecs
-from repro.comms.topology import (Placement, Topology, get_topology,
-                                  step_comm_seconds)
+from repro.comms.topology import (CodecOverhead, Placement, Topology,
+                                  get_topology, step_comm_seconds)
 from repro.core import compression
 from repro.core.flexdemo import FlexConfig
 
@@ -36,6 +43,7 @@ DEFAULT_SCHEMES = ("demo", "random", "striding", "diloco")
 DEFAULT_CHUNKS = (32, 64, 128, 256)
 DEFAULT_KS = (1, 2, 4, 8, 16, 32)
 DEFAULT_AMPS = ("fp32", "bf16", "int8")
+DEFAULT_IDX_LAYOUTS = ("local", "flat")     # wire v2 first; v1 priced too
 # fidelity discount of lossier amplitude encodings (tiebreaker, not physics)
 _AMP_FIDELITY = {"fp32": 1.0, "bf16": 0.999, "int8": 0.99}
 _VALUE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
@@ -44,7 +52,7 @@ _VALUE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
 @dataclasses.dataclass(frozen=True)
 class CommPlan:
     flex: FlexConfig
-    wire_bytes: int           # per replica per step (codec-actual for demo)
+    wire_bytes: int           # per replica per step (codec-actual)
     comm_seconds: float
     quality: float
     link: str                 # link class the payload rides
@@ -54,6 +62,7 @@ class CommPlan:
     def describe(self) -> str:
         f = self.flex
         extra = (f" s={f.chunk_size} k={f.topk} codec={f.codec}"
+                 f" wire_v{codecs.IDX_LAYOUTS[f.idx_layout]}"
                  if f.scheme == "demo" else "")
         return (f"{f.scheme}@{f.rate:g}{extra}: {self.wire_bytes:,} B/step "
                 f"over {self.link} x{self.n_replicas} -> "
@@ -84,49 +93,94 @@ def _resolve_placement(placement, topology: Topology) -> Placement:
                      crosses_node=n > 1)
 
 
-def predict(flex: FlexConfig, params, topology, placement,
-            budget_s: float | None = None) -> CommPlan:
-    """Price ONE configuration (the planner's scorer, also used standalone)."""
-    topology = get_topology(topology) if isinstance(topology, str) else topology
-    placement = _resolve_placement(placement, topology)
-    numels = leaf_numels(params)
-    numel = sum(numels)
+def scheme_wire_bytes(flex: FlexConfig, numels: Sequence[int]) -> int:
+    """EXACT per-step wire bytes of one configuration.
 
-    if flex.scheme == "demo":
+    Mirrors the replicators' serialization leaf for leaf — packed DeMo ships
+    ONE ``PackedCodec`` buffer per tree, the masked/dense schemes one
+    ``DenseCodec`` buffer per leaf (diloco priced at its sync-step burst) —
+    so the prediction equals the ``wire_bytes`` ``communicate_tree`` reports.
+    ``codec="off"`` falls back to the raw-collective planning formulas.
+    """
+    numel = sum(numels)
+    amp = flex.resolve_codec()
+    scheme = flex.scheme
+
+    if scheme == "demo":
         s = flex.chunk_size
         k = flex.topk if flex.topk is not None else compression.rate_to_topk(
             flex.rate, s, compression.WireFormat(value_bytes=flex.value_bytes))
-        amp = flex.resolve_codec()
-        rows = demo_rows(numels, s)
         if amp == "off":
             # per-leaf modeled accounting, summed exactly like the
             # replicator's codec-off path (one ceil per leaf, not one
             # ceil over the total numel)
             wire_fmt = compression.WireFormat(value_bytes=flex.value_bytes)
-            wire = sum(compression.demo_wire_bytes(n, s, k, wire_fmt)
+            return sum(compression.demo_wire_bytes(n, s, k, wire_fmt)
                        for n in numels)
-        else:
-            wire = codecs.demo_packed_wire_bytes(rows, s, k, amp)
-        quality = min(1.0, rows * k / max(1, numel)) * _AMP_FIDELITY.get(amp, 1.0)
-    elif flex.scheme in ("random", "striding"):
-        wire = compression.masked_wire_bytes(numel, flex.rate)
-        quality = flex.rate
-    elif flex.scheme == "diloco":
-        # budget_s is a hard PER-STEP ceiling, so diloco is priced at its
+        if flex.extract_impl == "per_leaf":
+            # the reference path ships one PackedCodec buffer per LEAF:
+            # same coefficient bytes, one header each (and the idx width is
+            # chosen per leaf, which matters under the v1 flat layout)
+            return sum(codecs.demo_packed_wire_bytes(
+                max(1, math.ceil(n / s)), s, k, amp,
+                idx_layout=flex.idx_layout) for n in numels)
+        rows = demo_rows(numels, s)
+        return codecs.demo_packed_wire_bytes(rows, s, k, amp,
+                                             idx_layout=flex.idx_layout)
+    if scheme == "random":
+        if amp == "off":
+            # one ceil per LEAF, matching the replicator's modeled accounting
+            return sum(compression.masked_wire_bytes(n, flex.rate)
+                       for n in numels)
+        return sum(codecs.dense_wire_bytes(
+            compression.random_n_sel(n, flex.rate), amp) for n in numels)
+    if scheme == "striding":
+        if amp == "off":
+            return sum(compression.masked_wire_bytes(n, flex.rate)
+                       for n in numels)
+        stride = compression.rate_to_stride(flex.rate)
+        return sum(codecs.dense_wire_bytes(
+            compression.striding_n_sel(n, stride), amp) for n in numels)
+    if scheme in ("diloco", "full"):
+        # diloco: budget_s is a hard PER-STEP ceiling, so it is priced at its
         # sync-step BURST: every period-th step ships the FULL payload in one
         # collective. Amortized-average pricing would mark plans "feasible"
         # whose sync steps stall period-x over the promised ceiling.
-        wire = compression.full_wire_bytes(numel)
+        if amp == "off":
+            return compression.full_wire_bytes(numel)
+        return sum(codecs.dense_wire_bytes(n, amp) for n in numels)
+    if scheme == "none":
+        return 0
+    raise KeyError(f"unknown scheme {scheme!r}")
+
+
+def predict(flex: FlexConfig, params, topology, placement,
+            budget_s: float | None = None,
+            overhead: CodecOverhead | None = None) -> CommPlan:
+    """Price ONE configuration (the planner's scorer, also used standalone)."""
+    topology = get_topology(topology) if isinstance(topology, str) else topology
+    placement = _resolve_placement(placement, topology)
+    numels = leaf_numels(params)
+    numel = sum(numels)
+    amp = flex.resolve_codec()
+
+    wire = scheme_wire_bytes(flex, numels)
+    if flex.scheme == "demo":
+        s = flex.chunk_size
+        k = flex.topk if flex.topk is not None else compression.rate_to_topk(
+            flex.rate, s, compression.WireFormat(value_bytes=flex.value_bytes))
+        rows = demo_rows(numels, s)
+        quality = min(1.0, rows * k / max(1, numel)) * _AMP_FIDELITY.get(amp, 1.0)
+    elif flex.scheme in ("random", "striding", "diloco"):
         quality = flex.rate
     elif flex.scheme == "full":
-        wire = compression.full_wire_bytes(numel)
         quality = 1.0
     elif flex.scheme == "none":
-        wire, quality = 0, 0.0
+        quality = 0.0
     else:
         raise KeyError(f"unknown scheme {flex.scheme!r}")
 
-    comm = step_comm_seconds(wire, placement, topology)
+    comm = step_comm_seconds(wire, placement, topology, overhead=overhead)
     link = topology.link_for(placement.crosses_node).name
     return CommPlan(flex=flex, wire_bytes=int(wire), comm_seconds=comm,
                     quality=quality, link=link,
@@ -141,7 +195,9 @@ def solve(params, topology, placement, *,
           schemes: Sequence[str] = DEFAULT_SCHEMES,
           chunks: Sequence[int] = DEFAULT_CHUNKS,
           ks: Sequence[int] = DEFAULT_KS,
-          amp_dtypes: Sequence[str] = DEFAULT_AMPS) -> CommPlan:
+          amp_dtypes: Sequence[str] = DEFAULT_AMPS,
+          idx_layouts: Sequence[str] = DEFAULT_IDX_LAYOUTS,
+          overhead: CodecOverhead | None = None) -> CommPlan:
     """Best-fidelity plan under the budget; min-comm plan if nothing fits."""
     if budget_s is None:
         if target_overlap is None or compute_s is None:
@@ -158,17 +214,20 @@ def solve(params, topology, placement, *,
                     if k >= s:
                         continue
                     for amp in amp_dtypes:
-                        flex = FlexConfig(
-                            scheme="demo", rate=k / s, chunk_size=s, topk=k,
-                            value_bytes=_VALUE_BYTES[amp], codec=amp)
-                        candidates.append(predict(flex, params, topology,
-                                                  placement, budget_s))
+                        for layout in idx_layouts:
+                            flex = FlexConfig(
+                                scheme="demo", rate=k / s, chunk_size=s,
+                                topk=k, value_bytes=_VALUE_BYTES[amp],
+                                codec=amp, idx_layout=layout)
+                            candidates.append(predict(
+                                flex, params, topology, placement, budget_s,
+                                overhead=overhead))
         else:
             for rate in (1 / 2, 1 / 4, 1 / 8, 1 / 16, 1 / 32, 1 / 64,
                          1 / 128, 1 / 256):
                 flex = FlexConfig(scheme=scheme, rate=rate)
                 candidates.append(predict(flex, params, topology, placement,
-                                          budget_s))
+                                          budget_s, overhead=overhead))
 
     feasible = [c for c in candidates if c.feasible]
     if feasible:
@@ -178,12 +237,13 @@ def solve(params, topology, placement, *,
 
 def profile_sweep(flex: FlexConfig, params, placement,
                   profiles: Sequence[str] = ("nvlink", "ethernet-100g",
-                                             "wan-10g")) -> dict:
+                                             "wan-10g"),
+                  overhead: CodecOverhead | None = None) -> dict:
     """One config priced on every topology profile (the dry-run report)."""
     out = {}
     for name in profiles:
         topo = get_topology(name)
-        plan = predict(flex, params, topo, placement)
+        plan = predict(flex, params, topo, placement, overhead=overhead)
         out[name] = {"wire_bytes": plan.wire_bytes,
                      "comm_seconds": plan.comm_seconds,
                      "link": plan.link,

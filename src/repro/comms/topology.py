@@ -11,8 +11,12 @@ module models exactly enough of that to rank communication plans:
   * ``Placement``     -- how the mesh's replication group R maps onto nodes
                          (derived from mesh axis sizes, see
                          :func:`placement_from_mesh`);
+  * ``CodecOverhead`` -- measured encode/decode seconds-per-byte of the wire
+                         codec (calibrated from ``benchmarks/bench_comms``
+                         output via :func:`overhead_from_bench`);
   * cost model        -- ring all-gather seconds for a payload over R on the
-                         link class the placement selects.
+                         link class the placement selects, plus the codec
+                         overhead when one is supplied.
 
 All pure python over static ints/floats: usable at plan time, in tests, and
 from the dry-run without touching device state.
@@ -20,7 +24,9 @@ from the dry-run without touching device state.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 from typing import Mapping, Sequence
 
 
@@ -113,6 +119,60 @@ def placement_from_mesh(axis_sizes: Mapping[str, int],
 
 
 # ---------------------------------------------------------------------------
+# codec overhead (measured, not guessed)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecOverhead:
+    """Measured wire-codec cost folded into the step-time prediction.
+
+    Per step each replica encodes its OWN payload once and decodes the
+    gathered ``|R|`` buffers, so the overhead scales as
+    ``encode + |R| * decode`` seconds per wire byte.  Calibrate from a
+    ``benchmarks/bench_comms`` run via :func:`overhead_from_bench`; the
+    default is zero (bitcasts fuse on TPU — measure before you charge).
+    """
+
+    encode_s_per_byte: float = 0.0
+    decode_s_per_byte: float = 0.0
+    source: str = "zero"
+
+    def step_seconds(self, wire_bytes: float, n_replicas: int) -> float:
+        if wire_bytes <= 0 or n_replicas <= 1:
+            # no collective -> nothing is encoded for the wire
+            return 0.0
+        return wire_bytes * (self.encode_s_per_byte
+                             + n_replicas * self.decode_s_per_byte)
+
+
+ZERO_OVERHEAD = CodecOverhead()
+
+_DEFAULT_BENCH = os.path.join("experiments", "bench", "comms.json")
+
+
+def overhead_from_bench(path: str = _DEFAULT_BENCH,
+                        amp_dtype: str = "fp32") -> CodecOverhead:
+    """Calibrate :class:`CodecOverhead` from a saved comms-bench row set.
+
+    Reads the ``demo:{amp}`` row of ``benchmarks/bench_comms`` output (the
+    committed baseline under ``experiments/bench/`` by default) and converts
+    its measured encode/decode MB/s into seconds-per-byte.  Raises
+    ``FileNotFoundError`` / ``KeyError`` on a missing file or row so a
+    mis-calibrated planner never silently prices overhead at zero.
+    """
+    with open(path) as f:
+        rows = json.load(f)
+    want = f"demo:{amp_dtype}"
+    for row in rows:
+        if row.get("scheme") == want and row.get("encode_MBps"):
+            return CodecOverhead(
+                encode_s_per_byte=1.0 / (float(row["encode_MBps"]) * 1e6),
+                decode_s_per_byte=1.0 / (float(row["decode_MBps"]) * 1e6),
+                source=f"{path}:{want}")
+    raise KeyError(f"no {want!r} row with encode_MBps in {path}")
+
+
+# ---------------------------------------------------------------------------
 # analytic cost model
 
 
@@ -130,10 +190,18 @@ def allgather_seconds(payload_bytes: float, n_replicas: int,
 
 
 def step_comm_seconds(wire_bytes: int, placement: Placement,
-                      topology: Topology) -> float:
-    """Predicted replication-sync seconds per optimizer step."""
+                      topology: Topology,
+                      overhead: CodecOverhead | None = None) -> float:
+    """Predicted replication-sync seconds per optimizer step.
+
+    ``overhead`` (when supplied) adds the measured encode + |R|*decode codec
+    cost on top of the ring all-gather transfer time.
+    """
     link = topology.link_for(placement.crosses_node)
-    return allgather_seconds(wire_bytes, placement.n_replicas, link)
+    t = allgather_seconds(wire_bytes, placement.n_replicas, link)
+    if overhead is not None:
+        t += overhead.step_seconds(wire_bytes, placement.n_replicas)
+    return t
 
 
 def overlap_ratio(comm_s: float, compute_s: float) -> float:

@@ -18,23 +18,28 @@ data, on the same bandwidth").
 
 DeMo wire format, precisely: per chunk row, ``k`` coefficient VALUES
 (optionally sign-compressed to {-1, 0, +1} before the collective) plus ``k``
-integer INDICES, serialized as GLOBAL flat coefficient positions — uint16
-while the flat space ``C_total * s`` fits, auto-widened to uint32 beyond
-(int32 in device memory either way). Indices differ per replica, so they must travel. The packed
-tree-level path (``repro.core.packing``) concatenates every leaf's chunk rows
-into one ``(C_total, s)`` matrix with static offsets; the payload for the
-whole tree is then a single ``(C_total, k)`` pair of values/indices,
-serialized by ``repro.comms.codecs`` into ONE contiguous versioned buffer
-(uint16/uint32-auto indices, fp32/bf16/int8 amplitudes) and shipped with ONE
+integer INDICES — wire format v2 serializes the in-chunk position ``j`` only
+(the row is implied by buffer position), so indices stay uint16 whenever the
+chunk fits (``s <= 65536``) regardless of tree size; the legacy v1 layout
+(global flat positions ``row*s + j``, uint16 only while ``C_total*s`` fits)
+still decodes via the version byte. Indices differ per replica, so they must
+travel. The packed tree-level path (``repro.core.packing``) concatenates
+every leaf's chunk rows into one ``(C_total, s)`` matrix with static
+offsets; the payload for the whole tree is then a single ``(C_total, k)``
+pair of values/indices, serialized by ``repro.comms.codecs`` into ONE
+contiguous versioned buffer (fp32/bf16/int8 amplitudes) and shipped with ONE
 fixed-shape ``all_gather`` instead of one per leaf. Zero-padded layout rows
 extract to zero values and are sliced off before encode, so they never
 travel.
 
-The byte formulas below are the PLANNING model (also the accounting for the
-per-leaf reference path and the seeded/dense schemes, whose payloads really
-are bare value streams). The packed DeMo hot path reports the encoded
-buffer's actual byte length instead — see ``repro.comms.codecs`` and the
-``repro.comms.planner`` budget search built on both.
+The codec is the ONLY wire path: the per-leaf DeMo reference and the
+masked/dense schemes (random / striding / full / diloco) also serialize
+their payloads (``codecs.PackedCodec`` per leaf, ``codecs.DenseCodec`` value
+streams), so the ``wire_bytes`` every replicator reports is the byte length
+of an encoded buffer. The byte formulas below are the PLANNING model for the
+``codec="off"`` escape hatch (raw f32 collectives) and the bandwidth-rate
+arithmetic (``rate_to_topk``); the ``repro.comms.planner`` budget search
+prices codec-on candidates with the codec's own static sizing instead.
 
 Extractor implementations (``FlexConfig.extract_impl``):
   per_leaf          -- dense jnp reference, one extraction per pytree leaf
@@ -174,6 +179,23 @@ def decode_gathered_ref(
 
 # ---------------------------------------------------------------------------
 # index masks for seeded schemes
+
+
+def rate_to_stride(rate: float) -> int:
+    """Stride (and diloco period) for a target rate — shared by
+    ``FlexConfig.make`` and the planner so predicted bytes match actual."""
+    return max(1, int(round(1 / rate)))
+
+
+def random_n_sel(numel: int, rate: float) -> int:
+    """Selected-element count of the random scheme (single source of truth
+    for the replicator AND the planner, so predicted bytes match actual)."""
+    return max(1, int(round(numel * rate)))
+
+
+def striding_n_sel(numel: int, stride: int) -> int:
+    """Selected-element count of the striding scheme (shared with planner)."""
+    return math.ceil(numel / stride)
 
 
 def random_mask(shape: tuple[int, ...], rate: float, seed, step) -> jnp.ndarray:

@@ -12,7 +12,6 @@ import dataclasses
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import compression
 from repro.core.replicators import base as rbase
@@ -39,37 +38,66 @@ class FlexConfig:
     # wire_bytes are the actual encoded bytes; per_leaf keeps the modeled
     # WireFormat accounting.
     extract_impl: str = "auto"
-    # Wire codec amplitude encoding for the packed DeMo path:
+    # Wire codec amplitude encoding (every scheme's wire path — the packed
+    # AND per-leaf DeMo paths ride codecs.PackedCodec, the masked/dense
+    # schemes ride codecs.DenseCodec):
     #   auto (derive from value_bytes: 4->fp32, 2->bf16, 1->int8)
     #   fp32 | bf16 | int8 | off (off = pre-codec raw f32/i32 collective,
     #   modeled byte accounting)
     codec: str = "auto"
+    # Wire-format index layout for the DeMo codec: "local" (v2: in-chunk j
+    # only, uint16 whenever s <= 65536 regardless of tree size) or "flat"
+    # (v1: global flat positions, uint32 past C*s > 65535).
+    idx_layout: str = "local"
+
+    def __post_init__(self):
+        if self.sync_impl not in ("gather", "psum"):
+            raise ValueError(f"unknown sync_impl {self.sync_impl!r}; "
+                             "have gather | psum")
+        if self.idx_layout not in ("local", "flat"):
+            raise ValueError(f"unknown idx_layout {self.idx_layout!r}; "
+                             "have local (wire v2) | flat (wire v1)")
+        if self.sync_impl == "psum" and self.resolve_codec() != "off":
+            # psum all-reduces RAW values on the collective: there is no
+            # encoded buffer on the wire, so a codec cannot apply.  Resolved
+            # ROADMAP open item: the combination is forbidden, not modeled.
+            raise ValueError(
+                "sync_impl='psum' all-reduces raw values and bypasses the "
+                f"wire codec (codec={self.codec!r} resolves to "
+                f"{self.resolve_codec()!r}); use codec='off' with psum, or "
+                "keep sync_impl='gather' to ride the codec")
 
     def resolve_codec(self) -> str:
-        """Amplitude encoding for the packed wire codec ("off" disables)."""
+        """Amplitude encoding for the wire codec ("off" disables)."""
         from repro.comms import codecs as _codecs
 
         return _codecs.resolve_amp(self.codec, self.value_bytes)
 
     def make(self) -> rbase.Replicator:
         wire = compression.WireFormat(value_bytes=self.value_bytes)
+        amp = self.resolve_codec()
         if self.scheme == "demo":
             k = self.topk
             if k is None:
                 k = compression.rate_to_topk(self.rate, self.chunk_size, wire)
             return make_replicator("demo", chunk_size=self.chunk_size, topk=k,
                                    wire=wire, extract_impl=self.extract_impl,
-                                   codec=self.resolve_codec())
+                                   codec=amp, idx_layout=self.idx_layout)
         if self.scheme == "random":
-            return make_replicator("random", rate=self.rate, wire=wire, impl=self.sync_impl)
+            return make_replicator("random", rate=self.rate, wire=wire,
+                                   impl=self.sync_impl, codec=amp)
         if self.scheme == "striding":
-            stride = max(1, int(round(1 / self.rate)))
-            return make_replicator("striding", stride=stride, wire=wire, impl=self.sync_impl)
+            stride = compression.rate_to_stride(self.rate)
+            return make_replicator("striding", stride=stride, wire=wire,
+                                   impl=self.sync_impl, codec=amp)
         if self.scheme == "diloco":
-            period = max(1, int(round(1 / self.rate)))
-            return make_replicator("diloco", period=period, wire=wire)
-        if self.scheme in ("full", "none"):
-            return make_replicator(self.scheme, **({"wire": wire} if self.scheme == "full" else {}))
+            period = compression.rate_to_stride(self.rate)
+            return make_replicator("diloco", period=period, wire=wire,
+                                   codec=amp)
+        if self.scheme == "full":
+            return make_replicator("full", wire=wire, codec=amp)
+        if self.scheme == "none":
+            return make_replicator("none")
         raise KeyError(f"unknown scheme {self.scheme!r}")
 
 
@@ -89,9 +117,10 @@ def communicate_tree(
     extraction + one collective + one decode, and (codec != "off") serialize
     the payload into one contiguous wire buffer whose byte length IS the
     reported ``wire_bytes``; everything else falls back to the leaf-wise map
-    below (one extraction and one collective per leaf, modeled accounting).
-    ``wire_bytes`` is a static python int either way (shapes only), so it is
-    safe to read outside jit.
+    below (one extraction and one collective per leaf — still codec'd per
+    leaf unless codec="off", which restores the raw collectives with modeled
+    accounting).  ``wire_bytes`` is a static python int either way (shapes
+    only), so it is safe to read outside jit.
     """
     tree_fn = getattr(replicator, "communicate_tree", None)
     if tree_fn is not None and (

@@ -16,10 +16,9 @@ report communication without re-deriving it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
 
 class OptimizerAux(NamedTuple):

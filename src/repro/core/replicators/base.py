@@ -64,6 +64,55 @@ def mean_over(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
     return jax.lax.pmean(x, tuple(axes))
 
 
+def sync_dense_values(
+    vals: jnp.ndarray,
+    *,
+    axes: Sequence[str],
+    impl: str = "gather",
+    codec: str = "fp32",
+    sign: bool = False,
+    modeled_bytes: int | None = None,
+) -> tuple[jnp.ndarray, int]:
+    """Mean a flat value stream over R through the dense wire codec.
+
+    The shared transport of every index-free scheme (random / striding /
+    full / diloco's outer step).  With ``codec != "off"`` the stream is
+    serialized into ONE contiguous ``DenseCodec`` buffer, the collective
+    gathers THAT buffer, and the reported bytes are its length — what a
+    replica applies is always the DECODED payload (|R| = 1 included), so
+    training dynamics do not change when R scales 1 -> N under a lossy
+    amplitude codec.  ``codec == "off"`` restores the raw f32 collective
+    (gather-mean, or pmean for ``impl="psum"``) with ``modeled_bytes``
+    accounting.  Returns ``(mean_vals, wire_bytes)``.
+    """
+    if impl == "psum" and codec != "off":
+        # enforce the psum-x-codec contract at the shared transport, not
+        # just in the replicators' constructors: psum all-reduces raw
+        # values, so silently substituting the encoded gather would change
+        # the collective (and |R|x the receive volume) behind the caller
+        raise ValueError("impl='psum' all-reduces raw values and cannot "
+                         "ride the wire codec; set codec='off'")
+    if codec != "off":
+        from repro.comms import codecs
+
+        cod = codecs.DenseCodec(vals.size, codec, signed=sign)
+        buf = cod.encode(vals)
+        if not axes:
+            g = buf[None]                                     # |R| = 1
+        else:
+            g = jax.lax.all_gather(buf, tuple(axes), tiled=False)
+        return cod.decode(g).mean(axis=0), cod.wire_bytes
+    if axes:
+        ax = tuple(axes)
+        if impl == "psum":
+            vals = jax.lax.pmean(vals, ax)
+        else:
+            vals = jax.lax.all_gather(vals, ax, tiled=False).mean(axis=0)
+    if modeled_bytes is None:
+        modeled_bytes = vals.size * 4
+    return vals, modeled_bytes
+
+
 def maybe_sign(x: jnp.ndarray, sign: bool) -> jnp.ndarray:
     # paper appendix B: sign-before-sync is "a corner-stone" of the scheme.
     return jnp.sign(x) if sign else x

@@ -9,7 +9,10 @@ sharding-group (node) instead of once per accelerator.
 Two execution strategies (``extract_impl``):
 
   * ``per_leaf`` -- :meth:`communicate_leaf` on every pytree leaf: one dense
-    DCT, sort, gather, inverse, and collective PER LEAF (seed behaviour).
+    DCT, sort, gather, inverse, and collective PER LEAF (seed behaviour) —
+    since wire format v2, each leaf's payload is still serialized through
+    the wire codec (one encoded buffer per leaf), so ``wire_bytes`` is the
+    summed buffer length, not a formula.
   * packed (``packed`` / ``pallas`` / ``pallas_interpret`` / ``auto``) --
     :meth:`communicate_tree`: the whole momentum tree is laid out as one
     ``(C_total, s)`` chunk matrix (``repro.core.packing``), extracted in ONE
@@ -41,10 +44,14 @@ class DeMoReplicator(base.Replicator):
     topk: int = 8
     wire: compression.WireFormat = compression.WireFormat()
     extract_impl: str = "auto"
-    # Packed-path wire codec (repro.comms.codecs): amplitude encoding
-    # fp32 | bf16 | int8, or "off" for the pre-codec raw f32/i32 collective
-    # with modeled byte accounting. "auto" derives from wire.value_bytes.
+    # Wire codec (repro.comms.codecs) for BOTH the packed and the per-leaf
+    # path: amplitude encoding fp32 | bf16 | int8, or "off" for the
+    # pre-codec raw f32/i32 collective with modeled byte accounting.
+    # "auto" derives from wire.value_bytes.
     codec: str = "auto"
+    # Wire-format index layout: "local" (v2, in-chunk j, uint16 for any tree
+    # with s <= 65536) or "flat" (v1, global positions, uint32 at scale).
+    idx_layout: str = "local"
     # Gathered-payload decode kernel: "unrolled" (|R|*k where-accumulation)
     # or "matmul" (one-hot matmul; better for |R| > 8). Pallas impls only.
     decode_impl: str = "unrolled"
@@ -69,21 +76,42 @@ class DeMoReplicator(base.Replicator):
         m_residual = m - q_local
         tx = base.maybe_sign(vals, sign)
 
-        if not axes:
-            q_sync = compression.decode_dct_topk(tx, idx, s, m.shape)
-        else:
-            ax = tuple(axes)
-            # fixed-shape gather of the compressed payload over R.
-            g_vals = jax.lax.all_gather(tx, ax, tiled=False)   # (|R|, C, k)
-            g_idx = jax.lax.all_gather(idx, ax, tiled=False)
-            # scatter-add every replica's coefficients, average, inverse.
+        amp = self.amp_dtype()
+        if amp != "off":
+            # codec'd reference path: ONE encoded buffer per LEAF on the
+            # collective (the packed path ships one per TREE); what a replica
+            # applies is always the DECODED payload, |R| = 1 included.
+            from repro.comms import codecs
+
+            codec = codecs.PackedCodec(
+                n_rows=vals.shape[0], chunk_size=s, k=k, amp_dtype=amp,
+                signed=sign, idx_layout=self.idx_layout)
+            payload = codec.encode(tx, idx)
+            if not axes:
+                g_buf = payload[None]                          # |R| = 1
+            else:
+                g_buf = jax.lax.all_gather(payload, tuple(axes), tiled=False)
+            g_vals, g_idx = codec.decode(g_buf)                # (|R|, C, k)
             q_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
             q_sync = compression.unchunk(q_rows, m.shape)
+            wire = codec.wire_bytes
+        else:
+            if not axes:
+                q_sync = compression.decode_dct_topk(tx, idx, s, m.shape)
+            else:
+                ax = tuple(axes)
+                # fixed-shape gather of the compressed payload over R.
+                g_vals = jax.lax.all_gather(tx, ax, tiled=False)  # (|R|,C,k)
+                g_idx = jax.lax.all_gather(idx, ax, tiled=False)
+                # scatter-add every replica's coefficients, average, inverse.
+                q_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
+                q_sync = compression.unchunk(q_rows, m.shape)
+            wire = self.wire_bytes(m.size)
 
         return base.ReplicatorOutput(
             q_sync=q_sync,
             m_residual=m_residual,
-            wire_bytes=self.wire_bytes(m.size),
+            wire_bytes=wire,
         )
 
     def communicate_tree(
@@ -127,7 +155,7 @@ class DeMoReplicator(base.Replicator):
 
             codec = codecs.PackedCodec(
                 n_rows=layout.n_rows, chunk_size=s, k=k, amp_dtype=amp,
-                signed=sign)
+                signed=sign, idx_layout=self.idx_layout)
             payload = codec.encode(tx[:layout.n_rows], idx[:layout.n_rows])
             if not axes:
                 g_buf = payload[None]                          # |R| = 1

@@ -5,6 +5,13 @@ Between syncs every replica applies its *local* momentum update, so the
 parameters diverge across R (``params_diverge = True``); on sync steps the
 parameters are federated-averaged over R (the outer step). Compression rate
 is 1/period.
+
+Wire path: the outer parameter average rides the dense value-stream codec
+(one contiguous encoded buffer per leaf on an all_gather); the per-step
+``wire_bytes`` a leaf reports is that buffer's length amortized over the
+period — on sync steps the BURST is the full buffer, which is what the
+planner prices against a per-step budget.  ``codec="off"`` restores the raw
+pmean outer step with modeled accounting.
 """
 from __future__ import annotations
 
@@ -24,6 +31,9 @@ class DiLoCoReplicator(base.Replicator):
     name = "diloco"
     period: int = 16
     wire: compression.WireFormat = compression.WireFormat()
+    # dense value-stream codec for the outer parameter average:
+    # fp32 | bf16 | int8 | off (raw pmean)
+    codec: str = "fp32"
 
     params_diverge = True
 
@@ -40,19 +50,30 @@ class DiLoCoReplicator(base.Replicator):
         # local (divergent) momentum update every step (inner momentum-SGD);
         # synchronization happens through the parameter average below.
         q_local = base.maybe_sign(m, sign)
+        if self.codec != "off":
+            from repro.comms import codecs
+
+            # amortized accounting of the outer step's encoded-buffer burst
+            wire = codecs.dense_wire_bytes(m.size, self.codec) // self.period
+        else:
+            wire = self.wire_bytes(m.size)
         return base.ReplicatorOutput(
             q_sync=q_local,
             m_residual=m,
-            wire_bytes=self.wire_bytes(m.size),
+            wire_bytes=wire,
         )
 
     def postprocess_params(self, params, *, step: jnp.ndarray, axes: Sequence[str]):
         if not axes:
             return params
-        ax = tuple(axes)
 
         def avg(p):
-            synced = jax.lax.pmean(p, ax)
+            if self.codec != "off":
+                vals, _ = base.sync_dense_values(
+                    p.reshape(-1), axes=axes, codec=self.codec)
+                synced = vals.reshape(p.shape).astype(p.dtype)
+            else:
+                synced = jax.lax.pmean(p, tuple(axes))
             return jnp.where(step % self.period == self.period - 1, synced, p)
 
         return jax.tree_util.tree_map(avg, params)

@@ -1,15 +1,19 @@
 """Full replication: classic hybrid-FSDP gradient synchronization (baseline).
 
-Every step the whole momentum/gradient is all-reduced (mean) over R. With the
-AdamW optimizer on top this is exactly the paper's "conventional Hybrid-FSDP
-with AdamW" baseline.
+Every step the whole momentum/gradient is synchronized (mean) over R. With
+the AdamW optimizer on top this is exactly the paper's "conventional
+Hybrid-FSDP with AdamW" baseline.
+
+Wire path: the flattened momentum rides the dense value-stream codec (one
+contiguous encoded buffer per leaf on an all_gather; ``wire_bytes`` is its
+length).  ``codec="off"`` restores the classic raw pmean all-reduce with
+modeled byte accounting — the memory-lean transport for real meshes.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import compression
@@ -21,6 +25,8 @@ from repro.core.replicators import base
 class FullReplicator(base.Replicator):
     name = "full"
     wire: compression.WireFormat = compression.WireFormat()
+    # dense value-stream codec: fp32 | bf16 | int8 | off (raw pmean)
+    codec: str = "fp32"
 
     def communicate_leaf(
         self,
@@ -33,14 +39,20 @@ class FullReplicator(base.Replicator):
     ) -> base.ReplicatorOutput:
         del step, seed
         q = base.maybe_sign(m, sign)
-        q = base.mean_over(q, tuple(axes))
+        if self.codec != "off":
+            vals, wire = base.sync_dense_values(
+                q.reshape(-1), axes=axes, codec=self.codec, sign=sign)
+            q = vals.reshape(m.shape).astype(m.dtype)
+        else:
+            q = base.mean_over(q, tuple(axes))
+            wire = self.wire_bytes(m.size)
         # full sync transmits the momentum but does NOT consume it: this is
         # classic synchronized momentum-SGD (mean of per-replica momenta ==
         # momentum of the mean gradient).
         return base.ReplicatorOutput(
             q_sync=q,
             m_residual=m,
-            wire_bytes=self.wire_bytes(m.size),
+            wire_bytes=wire,
         )
 
     def wire_bytes(self, numel: int) -> int:

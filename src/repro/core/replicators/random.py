@@ -4,11 +4,17 @@ The index set is reproduced on every replica from a shared (path-derived) seed
 folded with the step, so *no indices travel* -- at equal bandwidth Random ships
 2x the values of DeMo. We draw a fixed-size subset (top-k of uniform noise) so
 payload shapes stay static for XLA.
+
+Wire path: the selected values are serialized through the dense value-stream
+codec (``repro.comms.codecs.DenseCodec``) into one contiguous uint8 buffer
+per leaf, the collective gathers THAT buffer, and ``wire_bytes`` is its byte
+length.  ``codec="off"`` restores the raw f32 collective with modeled
+accounting; ``impl="psum"`` (all-reduce of raw values) requires it — there is
+no buffer on the wire to encode, so the combination codec+psum is rejected.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import jax
@@ -32,11 +38,19 @@ class RandomReplicator(base.Replicator):
     rate: float = 1 / 16
     wire: compression.WireFormat = compression.WireFormat()
     # indices are shared -> an all-reduce of the values is legal; "gather" is
-    # the paper-faithful transport, "psum" the beyond-paper scalable one.
+    # the paper-faithful transport, "psum" the beyond-paper scalable one
+    # (raw values only: psum cannot ride the codec).
     impl: str = "gather"
+    # dense value-stream codec: fp32 | bf16 | int8 | off (raw collective)
+    codec: str = "fp32"
+
+    def __post_init__(self):
+        if self.impl == "psum" and self.codec != "off":
+            raise ValueError("impl='psum' all-reduces raw values; "
+                             "set codec='off' (or use impl='gather')")
 
     def _n_sel(self, numel: int) -> int:
-        return max(1, int(round(numel * self.rate)))
+        return compression.random_n_sel(numel, self.rate)
 
     def communicate_leaf(
         self,
@@ -52,14 +66,9 @@ class RandomReplicator(base.Replicator):
         flat = m.reshape(-1)
         idx = _fixed_random_indices(n, n_sel, seed, step)
         vals = base.maybe_sign(flat[idx], sign)
-
-        if axes:
-            ax = tuple(axes)
-            if self.impl == "psum":
-                vals = jax.lax.pmean(vals, ax)
-            else:
-                g = jax.lax.all_gather(vals, ax, tiled=False)  # (|R|, n_sel)
-                vals = g.mean(axis=0)
+        vals, wire = base.sync_dense_values(
+            vals, axes=axes, impl=self.impl, codec=self.codec, sign=sign,
+            modeled_bytes=self.wire_bytes(n))
 
         q_sync = jnp.zeros_like(flat).at[idx].set(vals).reshape(m.shape)
         # residual: drop the selected (local) components from the momentum.
@@ -69,7 +78,7 @@ class RandomReplicator(base.Replicator):
         return base.ReplicatorOutput(
             q_sync=q_sync,
             m_residual=m_residual,
-            wire_bytes=self.wire_bytes(n),
+            wire_bytes=wire,
         )
 
     def wire_bytes(self, numel: int) -> int:

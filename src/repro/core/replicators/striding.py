@@ -1,15 +1,16 @@
 """Striding replication (this paper): every n-th momentum entry.
 
 The offset rotates with the training step so all entries are visited every
-``stride`` steps. Indices are derivable on every replica -> no index traffic.
+``stride`` steps. Indices are derivable on every replica -> no index traffic:
+only the selected values travel, serialized through the dense value-stream
+codec (one contiguous buffer per leaf; ``wire_bytes`` is its length).
+``codec="off"`` restores the raw collective; ``impl="psum"`` requires it.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import compression
@@ -23,6 +24,13 @@ class StridingReplicator(base.Replicator):
     stride: int = 16          # compression rate = 1/stride
     wire: compression.WireFormat = compression.WireFormat()
     impl: str = "gather"
+    # dense value-stream codec: fp32 | bf16 | int8 | off (raw collective)
+    codec: str = "fp32"
+
+    def __post_init__(self):
+        if self.impl == "psum" and self.codec != "off":
+            raise ValueError("impl='psum' all-reduces raw values; "
+                             "set codec='off' (or use impl='gather')")
 
     def communicate_leaf(
         self,
@@ -35,25 +43,21 @@ class StridingReplicator(base.Replicator):
     ) -> base.ReplicatorOutput:
         del seed
         n = m.size
-        n_sel = math.ceil(n / self.stride)
+        n_sel = compression.striding_n_sel(n, self.stride)
         flat = compression.pad_to_multiple(m, self.stride)
         offset = step % self.stride
         idx = jnp.arange(n_sel) * self.stride + offset
         vals = base.maybe_sign(flat[idx], sign)
-
-        if axes:
-            ax = tuple(axes)
-            if self.impl == "psum":
-                vals = jax.lax.pmean(vals, ax)
-            else:
-                vals = jax.lax.all_gather(vals, ax, tiled=False).mean(axis=0)
+        vals, wire = base.sync_dense_values(
+            vals, axes=axes, impl=self.impl, codec=self.codec, sign=sign,
+            modeled_bytes=self.wire_bytes(n))
 
         q_flat = jnp.zeros_like(flat).at[idx].set(vals)
         m_flat = flat.at[idx].set(0.0)
         return base.ReplicatorOutput(
             q_sync=q_flat[:n].reshape(m.shape),
             m_residual=m_flat[:n].reshape(m.shape),
-            wire_bytes=self.wire_bytes(n),
+            wire_bytes=wire,
         )
 
     def wire_bytes(self, numel: int) -> int:

@@ -7,7 +7,6 @@ from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def to_device(batch: dict, shardings=None) -> dict:

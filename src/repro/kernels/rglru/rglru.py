@@ -12,7 +12,6 @@ TR=128 that is 512 KiB f32 in VMEM, inside the v5e budget.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

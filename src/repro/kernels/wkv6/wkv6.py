@@ -14,7 +14,6 @@ heads per 128 lane group after Mosaic layout, acceptable for this shape.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,7 @@ from repro.configs.shapes import SHAPES, combo_supported, get_shape, input_specs
 from repro.core import FlexConfig, make_optimizer
 from repro.launch.hlo_stats import (collective_bytes,
     collective_bytes_by_axis, stablehlo_collective_bytes)
-from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.mesh import make_production_mesh
 from repro.models import transformer
 from repro.serving.engine import build_prefill_step, build_serve_step, make_serve_plan
 from repro.training.state import make_train_plan

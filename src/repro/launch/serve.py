@@ -26,7 +26,6 @@ def main():
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.configs import get_config
     from repro.launch.mesh import make_mesh, make_production_mesh

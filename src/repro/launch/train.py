@@ -8,7 +8,6 @@ On a real TPU pod, omit --fake-devices and pass --mesh 16x16 (or
 """
 import argparse
 import os
-import sys
 
 
 def main():

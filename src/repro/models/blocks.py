@@ -2,7 +2,6 @@
 with pre-norms and residuals, for train/prefill and decode."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.common import ArchConfig, DistCtx, split_keys

@@ -21,7 +21,6 @@ from repro.models.layers import attention as attn_mod
 from repro.models.layers import embeddings as emb
 from repro.models.layers.mlp import apply_mlp, init_mlp
 from repro.models.layers.norms import apply_norm, init_norm
-from repro.models.layers.rope import apply_rope
 
 
 def init_cross_attention(key, cfg: ArchConfig):

@@ -9,8 +9,7 @@ axes (ZeRO-3), wrapped in jax.checkpoint so the backward re-gathers.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Any
 
 
 def sp_wrap(tree, specs):

@@ -24,11 +24,8 @@ full weight; expert leaves keep their E dim sharded (expert parallelism).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 

@@ -4,12 +4,9 @@ paper-figure benchmarks."""
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 from typing import Any, Callable
 
-import jax
-import numpy as np
 
 from repro.data.pipeline import to_device
 

@@ -3,12 +3,10 @@ plan that places it on the production mesh."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.optimizers.base import Optimizer

@@ -13,7 +13,6 @@ Data flow per step (paper Alg. 1, TPU-native):
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,140 @@
+"""The CI perf-regression gate (scripts/check_bench.py): an injected
+wire_bytes regression must fail the check (non-zero exit), matching rows
+must pass, and --update must refresh baselines."""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                       "check_bench.py")
+_spec = importlib.util.spec_from_file_location("check_bench", _SCRIPT)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+ROWS = [
+    {"scheme": "demo:fp32", "wire_bytes_actual": 287144,
+     "wire_bytes_modeled": 287144, "encode_MBps": 300.0,
+     "decode_MBps": 700.0},
+    {"scheme": "random", "wire_bytes_actual": 229960,
+     "wire_bytes_modeled": 229960},
+    {"scheme": "decode:unrolled:R4", "max_err_vs_ref": 0.0},
+]
+
+
+def _summary(tmp_path, rows, name="comms"):
+    path = tmp_path / "current.json"
+    path.write_text(json.dumps(
+        {"results": [{"name": name, "rows": rows}]}))
+    return str(path)
+
+
+def _baseline(tmp_path, rows, name="comms"):
+    bdir = tmp_path / "baselines"
+    bdir.mkdir(exist_ok=True)
+    (bdir / f"{name}.json").write_text(json.dumps(rows))
+    return str(bdir)
+
+
+def test_identical_rows_pass(tmp_path):
+    cur = _summary(tmp_path, ROWS)
+    bdir = _baseline(tmp_path, ROWS)
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 0
+
+
+def test_injected_wire_bytes_regression_fails(tmp_path):
+    """ISSUE acceptance: the gate exits non-zero on a wire_bytes change."""
+    bad = json.loads(json.dumps(ROWS))
+    bad[0]["wire_bytes_actual"] += 4096
+    cur = _summary(tmp_path, bad)
+    bdir = _baseline(tmp_path, ROWS)
+    rc = check_bench.main([cur, "--baseline-dir", bdir])
+    assert rc == 1
+    failures = check_bench.run_check(cur, bdir, 0.1, 1e-5)
+    assert any("wire_bytes_actual" in f and "demo:fp32" in f
+               for f in failures)
+
+
+def test_wire_bytes_exact_even_when_smaller(tmp_path):
+    """Shrinking is also a change: baselines must be refreshed explicitly."""
+    bad = json.loads(json.dumps(ROWS))
+    bad[1]["wire_bytes_modeled"] -= 1
+    cur = _summary(tmp_path, bad)
+    bdir = _baseline(tmp_path, ROWS)
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 1
+
+
+def test_throughput_tolerance(tmp_path):
+    slow = json.loads(json.dumps(ROWS))
+    slow[0]["encode_MBps"] = 300.0 * 0.5          # 2x slower: within default
+    cur = _summary(tmp_path, slow)
+    bdir = _baseline(tmp_path, ROWS)
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 0
+    crawl = json.loads(json.dumps(ROWS))
+    crawl[0]["decode_MBps"] = 700.0 * 0.01        # 100x slower: rot
+    cur = _summary(tmp_path, crawl)
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 1
+
+
+def test_error_growth_fails(tmp_path):
+    worse = json.loads(json.dumps(ROWS))
+    worse[2]["max_err_vs_ref"] = 0.5
+    cur = _summary(tmp_path, worse)
+    bdir = _baseline(tmp_path, ROWS)
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 1
+
+
+def test_disappearing_row_fails(tmp_path):
+    cur = _summary(tmp_path, ROWS[:1])
+    bdir = _baseline(tmp_path, ROWS)
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 1
+
+
+def test_no_matching_baseline_is_a_failure_not_a_silent_pass(tmp_path):
+    cur = _summary(tmp_path, ROWS, name="novel_bench")
+    bdir = _baseline(tmp_path, ROWS, name="comms")
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 1
+
+
+def test_update_refreshes_baselines(tmp_path):
+    new = json.loads(json.dumps(ROWS))
+    new[0]["wire_bytes_actual"] = 1
+    cur = _summary(tmp_path, new)
+    bdir = _baseline(tmp_path, ROWS)
+    assert check_bench.main([cur, "--baseline-dir", bdir, "--update"]) == 0
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 0
+    with open(os.path.join(bdir, "comms.json")) as f:
+        assert json.load(f)[0]["wire_bytes_actual"] == 1
+
+
+def test_duplicate_row_keys_fail_loudly(tmp_path):
+    """Two rows sharing a key would shadow each other in every check —
+    the gate must reject the row set rather than silently compare half."""
+    dup = json.loads(json.dumps(ROWS)) + [dict(ROWS[1])]
+    cur = _summary(tmp_path, dup)
+    bdir = _baseline(tmp_path, ROWS)
+    rc = check_bench.main([cur, "--baseline-dir", bdir])
+    assert rc == 1
+    failures = check_bench.run_check(cur, bdir, 0.1, 1e-5)
+    assert any("duplicate row key" in f for f in failures)
+
+
+def test_missing_current_file_is_usage_error(tmp_path):
+    assert check_bench.main([str(tmp_path / "nope.json")]) == 2
+
+
+def test_gate_passes_on_repo_baselines(tmp_path):
+    """End-to-end on the real committed artifacts: the comms baseline row
+    set compared against itself (as a run.py --json summary) passes."""
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    bpath = os.path.join(repo, "experiments", "bench", "comms.json")
+    if not os.path.exists(bpath):
+        pytest.skip("no committed comms baseline")
+    with open(bpath) as f:
+        rows = json.load(f)
+    cur = _summary(tmp_path, rows)
+    bdir = os.path.join(repo, "experiments", "bench")
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 0

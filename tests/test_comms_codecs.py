@@ -1,7 +1,9 @@
 """Wire codec round-trips: header integrity, property-style sweeps over
-chunk size / k / amplitude dtype, the uint16->uint32 index-width fallback,
-batched (gathered) decode, and end-to-end bit-identity of the codec'd packed
-replicator path against the pre-codec collective."""
+chunk size / k / amplitude dtype / index layout (wire v1 "flat" vs v2
+"local"), hostile-buffer rejection (truncation, bad magic, unknown
+version/amp/idx codes), the dense value-stream codec, and end-to-end
+bit-identity of the codec'd replicator paths against the pre-codec
+collectives."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,6 +16,7 @@ from repro.core import packing
 from repro.core.flexdemo import FlexConfig, communicate_tree
 
 AMPS = sorted(codecs.AMP_CODES)
+LAYOUTS = sorted(codecs.IDX_LAYOUTS)
 
 
 def _payload(c, s, k, seed=0):
@@ -32,15 +35,18 @@ def _max_err(a, b):
 # buffer layout / header
 
 
+@pytest.mark.parametrize("layout", LAYOUTS)
 @pytest.mark.parametrize("amp", AMPS)
-def test_header_and_buffer_length(amp):
+def test_header_and_buffer_length(amp, layout):
     c, s, k = 13, 64, 4
-    cod = codecs.PackedCodec(c, s, k, amp)
+    cod = codecs.PackedCodec(c, s, k, amp, idx_layout=layout)
     vals, idx = _payload(c, s, k)
     buf = cod.encode(vals, idx)
     assert buf.dtype == jnp.uint8
     assert buf.shape == (cod.wire_bytes,)       # bytes on the wire == len(buf)
     h = codecs.parse_header(np.asarray(buf))
+    assert h.version == codecs.IDX_LAYOUTS[layout]
+    assert h.idx_layout == layout
     assert h.amp_dtype == amp
     assert (h.n_rows, h.chunk_size, h.k) == (c, s, k)
     assert h.payload_bytes == cod.wire_bytes - codecs.HEADER_BYTES
@@ -50,22 +56,25 @@ def test_header_and_buffer_length(amp):
 def test_header_rejects_garbage():
     with pytest.raises(ValueError, match="magic"):
         codecs.parse_header(np.zeros(codecs.HEADER_BYTES, np.uint8))
+    with pytest.raises(ValueError, match="header"):
+        codecs.parse_header(np.zeros(5, np.uint8))      # shorter than header
 
 
 # ---------------------------------------------------------------------------
-# round-trip sweep (the ISSUE's property sweep: s in 16..256, k in 1..32)
+# round-trip sweep (s in 16..256, k in 1..32, both wire versions)
 
 
 @settings(max_examples=40, deadline=None)
 @given(st.sampled_from([16, 32, 64, 128, 256]), st.integers(1, 32),
-       st.sampled_from(AMPS), st.integers(0, 10 ** 6))
-def test_roundtrip_sweep(s, k, amp, seed):
+       st.sampled_from(AMPS), st.sampled_from(LAYOUTS),
+       st.integers(0, 10 ** 6))
+def test_roundtrip_sweep(s, k, amp, layout, seed):
     k = min(k, s)
     c = (seed % 37) + 1
-    cod = codecs.PackedCodec(c, s, k, amp)
+    cod = codecs.PackedCodec(c, s, k, amp, idx_layout=layout)
     vals, idx = _payload(c, s, k, seed % 99991)
     dec_vals, dec_idx = cod.decode(cod.encode(vals, idx))
-    # indices round-trip EXACTLY for every dtype/width
+    # indices round-trip EXACTLY for every dtype/width/layout
     np.testing.assert_array_equal(np.asarray(dec_idx), np.asarray(idx))
     v = np.asarray(vals)
     d = np.asarray(dec_vals)
@@ -77,6 +86,28 @@ def test_roundtrip_sweep(s, k, amp, seed):
     else:  # int8: documented tolerance, half a quantization step per value
         tol = np.abs(v).max(axis=-1, keepdims=True) / 254 + 1e-7
         assert (np.abs(d - v) <= tol).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([16, 64, 256]), st.integers(1, 16),
+       st.sampled_from(AMPS), st.integers(0, 10 ** 6))
+def test_cross_version_roundtrip_sweep(s, k, amp, seed):
+    """v1 and v2 buffers of the SAME payload decode to the SAME result via
+    the self-describing ``decode_buffer`` path (version-byte dispatch)."""
+    k = min(k, s)
+    c = (seed % 29) + 1
+    vals, idx = _payload(c, s, k, seed % 99991)
+    out = {}
+    for layout in LAYOUTS:
+        cod = codecs.PackedCodec(c, s, k, amp, idx_layout=layout)
+        buf = np.asarray(cod.encode(vals, idx))
+        dv, di, h = codecs.decode_buffer(buf)
+        assert h.idx_layout == layout
+        out[layout] = (np.asarray(dv), np.asarray(di))
+    (v1, i1), (v2, i2) = out["flat"], out["local"]
+    np.testing.assert_array_equal(v1, v2)       # identical values...
+    np.testing.assert_array_equal(i1, i2)       # ...and identical indices
+    np.testing.assert_array_equal(i2, np.asarray(idx))
 
 
 @pytest.mark.parametrize("amp", ["bf16", "int8"])
@@ -94,25 +125,48 @@ def test_sign_payloads_roundtrip_exactly(amp):
 
 
 # ---------------------------------------------------------------------------
-# index width selection
+# index width selection: where v2 pays off
 
 
-def test_index_width_fallback():
+def test_index_width_fallback_flat_vs_local():
     s = 64
-    # uint16 while C*s <= 65535 ...
     c16 = codecs.UINT16_MAX_FLAT // s
-    assert codecs.index_dtype(c16, s) == "uint16"
-    # ... uint32 beyond
     c32 = c16 + 1
-    assert codecs.index_dtype(c32, s) == "uint32"
+    # v1 flat: uint16 only while C*s <= 65535
+    assert codecs.index_dtype(c16, s, "flat") == "uint16"
+    assert codecs.index_dtype(c32, s, "flat") == "uint32"
+    # v2 local: uint16 at ANY tree size while the chunk fits
+    assert codecs.index_dtype(c32, s, "local") == "uint16"
+    assert codecs.index_dtype(10 ** 6, s, "local") == "uint16"
+    assert codecs.index_dtype(1, 70000, "local") == "uint32"
 
-    for c, width in ((c16, 2), (c32, 4)):
-        cod = codecs.PackedCodec(c, s, 2, "fp32")
+    for layout, c, width in (("flat", c16, 2), ("flat", c32, 4),
+                             ("local", c32, 2)):
+        cod = codecs.PackedCodec(c, s, 2, "fp32", idx_layout=layout)
         assert cod.idx_bytes == c * 2 * width
         vals, idx = _payload(c, s, 2, 5)
         dec_vals, dec_idx = cod.decode(cod.encode(vals, idx))
         np.testing.assert_array_equal(np.asarray(dec_idx), np.asarray(idx))
         np.testing.assert_array_equal(np.asarray(dec_vals), np.asarray(vals))
+
+
+def test_v2_strictly_smaller_past_uint16_flat_boundary():
+    """ISSUE acceptance: chunk=64, k=8, C*s > 65535 — the v2 buffer is
+    strictly smaller than v1 (uint16 vs uint32 indices) and fp32
+    round-trips stay bit-identical."""
+    s, k = 64, 8
+    c = codecs.UINT16_MAX_FLAT // s + 7          # C*s = 72,128 > 65,535
+    assert c * s > codecs.UINT16_MAX_FLAT
+    v1 = codecs.PackedCodec(c, s, k, "fp32", idx_layout="flat")
+    v2 = codecs.PackedCodec(c, s, k, "fp32", idx_layout="local")
+    assert v1.idx_dtype == "uint32" and v2.idx_dtype == "uint16"
+    assert v2.wire_bytes < v1.wire_bytes
+    assert v1.wire_bytes - v2.wire_bytes == c * k * 2   # 2 B saved per index
+    vals, idx = _payload(c, s, k, 9)
+    for cod in (v1, v2):
+        dv, di = cod.decode(cod.encode(vals, idx))
+        np.testing.assert_array_equal(np.asarray(dv), np.asarray(vals))
+        np.testing.assert_array_equal(np.asarray(di), np.asarray(idx))
 
 
 def test_wire_bytes_scale_with_amp_dtype():
@@ -121,6 +175,109 @@ def test_wire_bytes_scale_with_amp_dtype():
     assert w["fp32"] > w["bf16"] > w["int8"]
     assert w["fp32"] == codecs.HEADER_BYTES + c * k * (2 + 4)
     assert w["int8"] == codecs.HEADER_BYTES + c * k * (2 + 1) + 4 * c
+
+
+# ---------------------------------------------------------------------------
+# hostile / corrupt buffers: raise, never silently mis-decode
+
+
+def _wire_buf(amp="fp32", layout="local", c=11, s=32, k=3):
+    cod = codecs.PackedCodec(c, s, k, amp, idx_layout=layout)
+    vals, idx = _payload(c, s, k, 1)
+    return np.asarray(cod.encode(vals, idx))
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_truncated_buffer_rejected(layout):
+    buf = _wire_buf(layout=layout)
+    for cut in (1, 7, buf.size - codecs.HEADER_BYTES + 1):
+        with pytest.raises(ValueError, match="truncated|header"):
+            codecs.decode_buffer(buf[:-cut])
+    # over-long (padded) buffers are just as corrupt as truncated ones
+    with pytest.raises(ValueError, match="truncated or padded"):
+        codecs.decode_buffer(np.concatenate([buf, buf[:8]]))
+
+
+def test_tampered_header_bytes_rejected():
+    buf = _wire_buf()
+    cases = {
+        0: "magic",              # magic
+        4: "version",            # unknown wire version
+        5: "amp_code",           # unknown amplitude encoding
+        6: "idx_code",           # unknown index encoding
+    }
+    for offset, match in cases.items():
+        bad = buf.copy()
+        bad[offset] = 0xEE
+        with pytest.raises(ValueError, match=match):
+            codecs.decode_buffer(bad)
+
+
+def test_inconsistent_header_shape_fields_rejected():
+    buf = _wire_buf()
+    # grow k without growing the payload: sizes no longer reconcile
+    bad = buf.copy()
+    bad[16] += 1
+    with pytest.raises(ValueError, match="payload_bytes"):
+        codecs.decode_buffer(bad)
+    # claim uint32 indices on a buffer whose plan implies uint16
+    bad = buf.copy()
+    bad[6] = codecs.IDX_CODES["uint32"]
+    with pytest.raises(ValueError, match="idx_code|payload_bytes"):
+        codecs.decode_buffer(bad)
+
+
+def test_dense_buffer_hostile_rejection():
+    cod = codecs.DenseCodec(100, "int8")
+    buf = np.asarray(cod.encode(jnp.arange(100, dtype=jnp.float32)))
+    with pytest.raises(ValueError, match="truncated"):
+        codecs.decode_buffer(buf[:-2])
+    bad = buf.copy()
+    bad[16] = 5                  # dense stream must carry k == 0
+    with pytest.raises(ValueError, match="dense|payload_bytes"):
+        codecs.decode_buffer(bad)
+
+
+# ---------------------------------------------------------------------------
+# dense value-stream codec (random/striding/full/diloco wire path)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 2000), st.sampled_from(AMPS), st.integers(0, 10 ** 6))
+def test_dense_roundtrip_sweep(n, amp, seed):
+    rng = np.random.RandomState(seed % 99991)
+    vals = jnp.asarray(rng.randn(n).astype(np.float32))
+    cod = codecs.DenseCodec(n, amp)
+    buf = cod.encode(vals)
+    assert buf.shape == (cod.wire_bytes,)
+    dec = cod.decode(buf)
+    v, d = np.asarray(vals), np.asarray(dec)
+    if amp == "fp32":
+        np.testing.assert_array_equal(d, v)
+    elif amp == "bf16":
+        ref = np.asarray(vals.astype(jnp.bfloat16).astype(jnp.float32))
+        np.testing.assert_array_equal(d, ref)
+    else:
+        g = cod.group
+        pad = np.pad(v, (0, cod.n_groups * g - n)).reshape(cod.n_groups, g)
+        tol = np.repeat(np.abs(pad).max(-1) / 254 + 1e-7, g)[:n]
+        assert (np.abs(d - v) <= tol).all()
+    # self-describing decode agrees and reports a dense stream
+    dv, di, h = codecs.decode_buffer(np.asarray(buf))
+    assert di is None and h.dense
+    np.testing.assert_array_equal(np.asarray(dv), d)
+
+
+def test_dense_sign_payloads_exact_and_batched():
+    rng = np.random.RandomState(4)
+    n = 777
+    sv = jnp.sign(jnp.asarray(rng.randn(n).astype(np.float32)))
+    for amp in AMPS:
+        cod = codecs.DenseCodec(n, amp, signed=True)
+        g = jnp.stack([cod.encode(sv)] * 3)          # (R, wire_bytes)
+        dec = jax.jit(cod.decode)(g)
+        assert dec.shape == (3, n)
+        np.testing.assert_array_equal(np.asarray(dec[1]), np.asarray(sv))
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +302,35 @@ def test_batched_decode_matches_unbatched():
 
 
 # ---------------------------------------------------------------------------
-# end-to-end: the codec'd packed hot path
+# psum x codec: forbidden at FlexConfig validation time (resolved ROADMAP item)
+
+
+def test_psum_sync_impl_requires_codec_off():
+    with pytest.raises(ValueError, match="psum.*codec|codec.*psum"):
+        FlexConfig(scheme="random", sync_impl="psum")
+    with pytest.raises(ValueError, match="psum"):
+        FlexConfig(scheme="striding", sync_impl="psum", codec="bf16")
+    # the escape hatch: raw all-reduce with modeled accounting stays legal
+    flex = FlexConfig(scheme="random", sync_impl="psum", codec="off")
+    assert flex.make().impl == "psum"
+    with pytest.raises(ValueError, match="sync_impl"):
+        FlexConfig(scheme="random", sync_impl="carrier-pigeon")
+    with pytest.raises(ValueError, match="idx_layout"):
+        FlexConfig(scheme="demo", idx_layout="diagonal")
+
+
+def test_replicator_level_psum_codec_guard():
+    from repro.core.replicators import make_replicator
+
+    with pytest.raises(ValueError, match="psum"):
+        make_replicator("random", impl="psum")           # codec defaults on
+    with pytest.raises(ValueError, match="psum"):
+        make_replicator("striding", impl="psum", codec="fp32")
+    make_replicator("random", impl="psum", codec="off")  # legal
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the codec'd paths
 
 
 def test_packed_path_reports_actual_bytes_and_is_bit_identical():
@@ -170,6 +355,23 @@ def test_packed_path_reports_actual_bytes_and_is_bit_identical():
         assert _max_err(r1, r0) == 0.0
 
 
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_packed_path_identical_across_wire_versions(layout):
+    """The wire version changes BYTES, never VALUES: v1 and v2 replicators
+    produce bit-identical Q/residual, v2 reports fewer or equal bytes."""
+    rng = np.random.RandomState(6)
+    tree = {"w": jnp.asarray(rng.randn(128, 70).astype(np.float32))}
+    step = jnp.asarray(0)
+    ref = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed").make()
+    rep = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed",
+                     idx_layout=layout).make()
+    q0, r0, w0 = communicate_tree(ref, tree, step=step, axes=(), sign=True)
+    q1, r1, w1 = communicate_tree(rep, tree, step=step, axes=(), sign=True)
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0
+    assert w1 >= w0                                 # local (default) <= flat
+
+
 @pytest.mark.parametrize("codec", ["bf16", "int8"])
 def test_packed_path_lossy_codecs_with_sign(codec):
     """Sign-compressed payloads are exact under every codec, so the whole
@@ -189,6 +391,30 @@ def test_packed_path_lossy_codecs_with_sign(codec):
     fp32 = FlexConfig(scheme="demo", rate=1 / 8, extract_impl="packed").make()
     _, _, w32 = communicate_tree(fp32, tree, step=step, axes=(), sign=True)
     assert w1 < w32
+
+
+@pytest.mark.parametrize("scheme", ["random", "striding", "full"])
+def test_dense_scheme_codec_is_bit_identical_and_reports_buffer(scheme):
+    """Every masked/dense scheme ships a real encoded buffer: wire_bytes is
+    its length (header included), and the fp32 codec changes nothing."""
+    rng = np.random.RandomState(2)
+    tree = {"w": jnp.asarray(rng.randn(41, 9).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(130).astype(np.float32))}
+    step = jnp.asarray(0)
+    on = FlexConfig(scheme=scheme, rate=1 / 8).make()
+    off = FlexConfig(scheme=scheme, rate=1 / 8, codec="off").make()
+    q1, r1, w1 = communicate_tree(on, tree, step=step, axes=(), sign=True)
+    q0, r0, w0 = communicate_tree(off, tree, step=step, axes=(), sign=True)
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0
+    assert w1 > w0        # headers now counted: actual strictly > raw model
+    # the reported bytes ARE the planner's codec sizing (len of buffers)
+    from repro.comms import planner
+
+    shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    assert w1 == planner.scheme_wire_bytes(
+        FlexConfig(scheme=scheme, rate=1 / 8), planner.leaf_numels(shapes))
 
 
 def test_gathered_codec_path_matches_per_leaf():
@@ -217,3 +443,26 @@ def test_gathered_codec_path_matches_per_leaf():
     assert _max_err(r1, r0) < 1e-5
     assert _max_err(q2, q0) < 1e-5
     assert _max_err(r2, r0) < 1e-5
+
+
+@pytest.mark.parametrize("scheme", ["random", "striding", "full"])
+def test_gathered_dense_codec_matches_raw(scheme):
+    """|R| = 4 via vmap: dense encoded-buffer gather == raw-value gather."""
+    rng = np.random.RandomState(12)
+    R = 4
+    stacked = {"a": jnp.asarray(rng.randn(R, 300).astype(np.float32))}
+
+    def run(codec):
+        rep = FlexConfig(scheme=scheme, rate=1 / 4, codec=codec).make()
+
+        def f(m):
+            q, res, _ = communicate_tree(rep, m, step=jnp.asarray(0),
+                                         axes=("r",), sign=True)
+            return q, res
+
+        return jax.vmap(f, axis_name="r")(stacked)
+
+    q1, r1 = run("fp32")
+    q0, r0 = run("off")
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0

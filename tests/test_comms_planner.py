@@ -7,7 +7,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.comms import codecs, planner, topology
@@ -99,21 +98,85 @@ def test_predict_demo_uses_actual_codec_bytes():
                                        "ethernet-100g", 4).wire_bytes
 
 
-def test_predict_other_schemes_modeled():
+def test_predict_other_schemes_codec_sizing():
+    """Dense schemes are priced with the SAME per-leaf DenseCodec sizing the
+    replicators serialize with: amplitude bytes plus one header per leaf."""
     params = _params()
-    numel = sum(planner.leaf_numels(params))
+    numels = planner.leaf_numels(params)
+    numel = sum(numels)
     full = planner.predict(FlexConfig(scheme="full"), params, "wan-10g", 2)
-    assert full.wire_bytes == numel * 4 and full.quality == 1.0
+    assert full.wire_bytes == sum(codecs.dense_wire_bytes(n) for n in numels)
+    assert full.wire_bytes == numel * 4 + len(numels) * codecs.HEADER_BYTES
+    assert full.quality == 1.0
     rnd = planner.predict(FlexConfig(scheme="random", rate=1 / 4), params,
                           "wan-10g", 2)
-    assert rnd.wire_bytes == math.ceil(numel / 4) * 4
+    assert rnd.wire_bytes == sum(
+        codecs.dense_wire_bytes(max(1, round(n / 4))) for n in numels)
     none = planner.predict(FlexConfig(scheme="none"), params, "wan-10g", 2)
     assert none.wire_bytes == 0 and none.comm_seconds == 0.0
     # diloco is priced at its sync-step BURST (budget_s is a hard per-step
     # ceiling), not the amortized average
     dil = planner.predict(FlexConfig(scheme="diloco", rate=1 / 8), params,
                           "wan-10g", 2)
-    assert dil.wire_bytes == numel * 4 and dil.quality == 1 / 8
+    assert dil.wire_bytes == full.wire_bytes and dil.quality == 1 / 8
+    # codec="off" restores the raw-collective planning formulas
+    off = planner.predict(FlexConfig(scheme="full", codec="off"), params,
+                          "wan-10g", 2)
+    assert off.wire_bytes == numel * 4
+    rnd_off = planner.predict(FlexConfig(scheme="random", rate=1 / 4,
+                                         codec="off"), params, "wan-10g", 2)
+    assert rnd_off.wire_bytes == sum(math.ceil(n / 4) * 4 for n in numels)
+
+
+def test_predict_prices_wire_versions():
+    """v1 (flat) vs v2 (local) pricing: identical below the uint16 flat
+    boundary, v2 strictly cheaper past it."""
+    small = [jax.ShapeDtypeStruct((4096,), jnp.float32)]
+    big = [jax.ShapeDtypeStruct((1 << 20,), jnp.float32)]
+    for params, cmp in ((small, "eq"), (big, "lt")):
+        v1 = planner.predict(FlexConfig(scheme="demo", chunk_size=64, topk=8,
+                                        idx_layout="flat"),
+                             params, "ethernet-100g", 4)
+        v2 = planner.predict(FlexConfig(scheme="demo", chunk_size=64, topk=8),
+                             params, "ethernet-100g", 4)
+        if cmp == "eq":
+            assert v2.wire_bytes == v1.wire_bytes
+        else:
+            rows = planner.demo_rows(planner.leaf_numels(params), 64)
+            assert v1.wire_bytes - v2.wire_bytes == rows * 8 * 2
+    # solve's default search space covers both layouts and never picks a
+    # strictly-dominated v1 demo plan at scale
+    plan = planner.solve(big, "wan-10g", 8, budget_s=50e-3,
+                         schemes=("demo",))
+    assert plan.flex.idx_layout == "local"
+
+
+def test_codec_overhead_folds_into_cost_model():
+    params = _params()
+    flex = FlexConfig(scheme="demo", chunk_size=64, topk=4)
+    base = planner.predict(flex, params, "ethernet-100g", 4)
+    ov = topology.CodecOverhead(encode_s_per_byte=1e-9,
+                                decode_s_per_byte=1e-9)
+    with_ov = planner.predict(flex, params, "ethernet-100g", 4, overhead=ov)
+    assert with_ov.wire_bytes == base.wire_bytes        # bytes unchanged
+    expected = ov.step_seconds(base.wire_bytes, 4)
+    assert with_ov.comm_seconds == pytest.approx(
+        base.comm_seconds + expected)
+    # |R| = 1: no collective -> no wire encode charged either
+    assert ov.step_seconds(base.wire_bytes, 1) == 0.0
+    # a tighter budget under overhead can flip feasibility, never the bytes
+    plan = planner.solve(params, "ethernet-100g", 4, budget_s=1e-2,
+                         overhead=ov)
+    assert plan.feasible
+
+
+def test_overhead_from_bench_baseline():
+    """The committed comms bench baseline calibrates a positive overhead."""
+    ov = topology.overhead_from_bench()
+    assert ov.encode_s_per_byte > 0 and ov.decode_s_per_byte > 0
+    assert "demo:fp32" in ov.source
+    with pytest.raises((FileNotFoundError, OSError)):
+        topology.overhead_from_bench("does/not/exist.json")
 
 
 def test_predict_intra_node_rides_fast_link():

@@ -7,16 +7,12 @@ Validates the paper's core invariants:
   * full replication == data-parallel reference (mean gradient);
   * DiLoCo parameters diverge between syncs and re-converge at the sync.
 """
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FlexConfig, apply_updates
-from repro.core.flexdemo import communicate_tree
-from repro.core.optimizers import make_optimizer
+from repro.core import FlexConfig
 
 
 def _simulate(scheme, n_replicas=4, n_steps=6, sign=True):

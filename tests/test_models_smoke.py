@@ -10,8 +10,8 @@ import pytest
 from repro.configs import ASSIGNED, EXTENSIONS, PAPERS_OWN, get_config
 from repro.configs.shapes import combo_supported, get_shape
 from repro.core import FlexConfig, apply_updates, make_optimizer
-from repro.models import (decode_step, forward, init_decode_state, init_model,
-                          loss_fn, transformer)
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_model, loss_fn)
 
 ALL = ASSIGNED + PAPERS_OWN + EXTENSIONS
 

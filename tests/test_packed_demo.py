@@ -203,12 +203,20 @@ def test_packed_tree_bitcompat_single_device(impl, sign):
     step = jnp.asarray(0)
     q0, r0, w0 = communicate_tree(ref, tree, step=step, axes=(), sign=sign)
     q1, r1, w1 = communicate_tree(new, tree, step=step, axes=(), sign=sign)
-    # packed path reports the ACTUAL encoded buffer length: the modeled
-    # payload (same uint16+fp32 per-coefficient cost) plus the wire header
+    # both paths report ACTUAL encoded buffer lengths: the packed path ships
+    # ONE buffer per tree, the per-leaf reference one per leaf — identical
+    # coefficient bytes, one wire header per buffer
     layout = packing.plan_tree(tree, new.chunk_size)
     cod = codecs.PackedCodec(layout.n_rows, new.chunk_size, new.topk,
                              "fp32", signed=sign)
-    assert w1 == cod.wire_bytes == w0 + codecs.HEADER_BYTES
+    per_leaf = sum(
+        codecs.PackedCodec(slot.n_rows, new.chunk_size, new.topk,
+                           "fp32", signed=sign).wire_bytes
+        for slot in layout.slots)
+    assert w1 == cod.wire_bytes
+    assert w0 == per_leaf
+    # one header instead of N: packed is strictly cheaper on the wire
+    assert w0 - w1 == (layout.n_leaves - 1) * codecs.HEADER_BYTES
     assert _max_err(q1, q0) < 1e-5        # q_sync
     assert _max_err(r1, r0) < 1e-5        # m_residual
     # fp32 codec is exact: codec on == codec off, bit for bit

@@ -10,9 +10,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import FlexConfig, apply_updates, make_optimizer
-from repro.data.synthetic import BigramLM, Seq2Seq, make_stream
-from repro.models import (decode_step, forward, init_decode_state, init_model,
-                          loss_fn, transformer)
+from repro.data.synthetic import BigramLM, Seq2Seq
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_model, loss_fn)
 from repro.training.loop import run
 
 
