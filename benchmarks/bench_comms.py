@@ -1,13 +1,29 @@
 """Wire-codec benchmark: encode/decode throughput per amplitude dtype,
-wire format v1-vs-v2 index bytes, and actual-vs-modeled bytes per
-replication scheme.
+wire format v1-vs-v2 index bytes, actual-vs-modeled bytes per replication
+scheme, and the ring-vs-gather transport comparison.
 
 The "actual" column is the byte length of the buffer each scheme places on
 the collective (header + indices + encoded amplitudes [+ scales]); "modeled"
 is the planner's prediction (``repro.comms.planner.scheme_wire_bytes``).
-Since wire format v2 the codec is the ONLY wire path — every scheme encodes,
-so actual/modeled must be exactly 1.0 on every row (the bench is the
-regression witness for that invariant, enforced by scripts/check_bench.py).
+Since wire format v2 the codec is the ONLY wire path — every scheme encodes
+(ONE buffer per TREE: packed DeMo since PR 1, the value-stream schemes since
+the one-buffer dense packing) — so actual/modeled must be exactly 1.0 on
+every row (the bench is the regression witness for that invariant, enforced
+by scripts/check_bench.py).
+
+The ``*:gather:R8`` / ``*:ring:R8`` rows compare the two sync transports at
+|R| = 8 per scheme: measured step wall time (vmap replica simulation),
+wire bytes (identical — the transport never changes the buffer), and peak
+live bytes.  ``peak_wire_live_bytes`` is MEASURED from the per-replica
+traced program (``jax.make_jaxpr`` under an 8-wide axis env): the largest
+uint8 intermediate a replica ever holds — the gather transport materializes
+the ``(|R|, B)`` stack (``|R|*B``), the streaming ring never exceeds one
+buffer — and the bench ASSERTS ring < gather on every scheme plus the
+primitive structure itself (ring lowers to ppermute with NO all_gather),
+so a silent reroute of the ring path through a gathered collective fails
+the bench.  ``peak_live_modeled_bytes`` is the analytic transport peak
+(stack-or-2-buffers + the dense decode accumulator) the ROADMAP memory
+math promises.
 
 The demo rows also record measured encode/decode MB/s; those feed
 ``topology.overhead_from_bench`` so the planner can price codec overhead.
@@ -25,6 +41,7 @@ from repro.core import compression, packing
 from repro.core.flexdemo import FlexConfig, communicate_tree
 
 CHUNK, RATE = 64, 1 / 8
+RING_R = 8
 
 
 def _reps() -> int:
@@ -107,20 +124,130 @@ def run():
             "wire_bytes_modeled": planner.scheme_wire_bytes(flex, numels),
         })
     # diloco's wire path is the outer parameter average: measure the actual
-    # sync-step burst (one encoded buffer per leaf) against the planner's
-    # burst pricing (budget_s is a per-step ceiling).
+    # sync-step burst (ONE encoded buffer for the whole tree) against the
+    # planner's burst pricing (budget_s is a per-step ceiling).
     flex = FlexConfig(scheme="diloco", rate=RATE)
     amp = flex.resolve_codec()
-    burst = sum(int(codecs.DenseCodec(leaf.size, amp)
-                    .encode(leaf.reshape(-1)).shape[0])
-                for leaf in jax.tree_util.tree_leaves(tree))
+    leaves = jax.tree_util.tree_leaves(tree)
+    vlayout = packing.plan_values(tuple(leaf.size for leaf in leaves))
+    stream = packing.pack_values([leaf.reshape(-1) for leaf in leaves],
+                                 vlayout)
+    burst = int(codecs.DenseCodec(stream.size, amp).encode(stream).shape[0])
     rows.append({
         "scheme": "diloco",
         "wire_bytes_actual": burst,
         "wire_bytes_modeled": planner.scheme_wire_bytes(flex, numels),
     })
 
+    rows.extend(_ring_vs_gather_rows(tree, numels, n))
     rows.extend(_decode_variants(k, n))
+    return rows
+
+
+def _iter_eqns(jaxpr):
+    """Every equation of a jaxpr, recursing into call/scan/jit sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else [val]
+            for v in vals:
+                if isinstance(v, jax.core.ClosedJaxpr):
+                    yield from _iter_eqns(v.jaxpr)
+                elif isinstance(v, jax.core.Jaxpr):
+                    yield from _iter_eqns(v)
+
+
+def _wire_live_stats(f, tree):
+    """(max uint8 intermediate bytes, primitive names) of the PER-REPLICA
+    program: traced under an |R|-wide axis env, NOT vmap — the vmap
+    simulator collapses the replica-invariant gathered stack to the same
+    batched shape as the ring's in-flight buffer, so only the per-replica
+    view can witness which transport materializes (|R|, B)."""
+    import numpy as np
+
+    cj = jax.make_jaxpr(f, axis_env=[("r", RING_R)])(tree)
+    max_u8, prims = 0, set()
+    for eqn in _iter_eqns(cj.jaxpr):
+        prims.add(eqn.primitive.name)
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if getattr(aval, "dtype", None) == np.dtype(np.uint8):
+                max_u8 = max(max_u8, int(aval.size))
+    return max_u8, prims
+
+
+def _ring_vs_gather_rows(tree, numels, n):
+    """Streaming-ring vs gathered transport at |R| = 8, per scheme.
+
+    Wire bytes are transport-invariant (the same encoded buffer either rides
+    one all_gather or |R|-1 ppermute hops); what changes is the live set:
+    gather decodes from the materialized (|R|, B) stack, ring folds one
+    arriving buffer at a time into the dense accumulator.  Wall time runs
+    the vmap replica simulation; the memory witness comes from the
+    per-replica trace (:func:`_wire_live_stats`).
+    """
+    import numpy as np
+
+    step = jnp.asarray(0)
+    rng = np.random.RandomState(7)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(rng.randn(RING_R, *x.shape).astype(np.float32)),
+        tree)
+    k = compression.rate_to_topk(RATE, CHUNK)
+    layout = packing.plan_tree(tree, CHUNK)
+
+    rows = []
+    for scheme in ("demo", "random", "striding", "full"):
+        if scheme == "demo":
+            flex_kw = dict(scheme="demo", chunk_size=CHUNK, topk=k,
+                           extract_impl="packed")
+            acc_bytes = layout.n_rows_padded * CHUNK * 4   # (C_pad, s) f32
+        else:
+            flex_kw = dict(scheme=scheme, rate=RATE)
+            flex0 = FlexConfig(**flex_kw)
+            acc_bytes = (planner.scheme_wire_bytes(flex0, numels)
+                         - codecs.HEADER_BYTES)             # decoded stream
+        peak = {}
+        for impl in ("gather", "ring"):
+            flex = FlexConfig(sync_impl=impl, **flex_kw)
+            rep = flex.make()
+            wire = planner.scheme_wire_bytes(flex, numels)
+
+            def g(mm):
+                q, _, _ = communicate_tree(rep, mm, step=step,
+                                           axes=("r",), sign=True)
+                return q
+
+            jf = jax.jit(lambda m: jax.vmap(g, axis_name="r")(m))
+            wall = _time(jf, stacked, n=n)
+            measured, prims = _wire_live_stats(g, tree)
+            peak[impl] = measured
+            # analytic per-replica peak of the transport's decode stage:
+            # gather holds the full gathered stack, ring at most two buffers
+            # (arrived + in-flight), both plus the dense accumulator.
+            modeled = (RING_R * wire if impl == "gather" else 2 * wire) \
+                + acc_bytes
+            rows.append({
+                "scheme": f"{scheme}:{impl}:R{RING_R}",
+                "sync_impl": impl,
+                "n_rep": RING_R,
+                "wire_bytes_actual": wire,
+                "step_us": wall * 1e6,
+                "peak_wire_live_bytes": measured,
+                "peak_live_modeled_bytes": modeled,
+            })
+            # structural witness per transport: the ring must lower to
+            # ppermute hops with NO gathered collective and never hold more
+            # than one wire buffer; gather must show the (|R|, B) stack.
+            if impl == "ring":
+                assert "ppermute" in prims and "all_gather" not in prims, \
+                    (scheme, sorted(prims))
+                assert measured <= 2 * wire, (scheme, measured, wire)
+            else:
+                assert measured >= RING_R * wire, (scheme, measured, wire)
+        # the tentpole's memory claim, on MEASURED per-replica live bytes:
+        # the streaming ring never materializes the (|R|, B) gathered stack.
+        assert peak["ring"] < peak["gather"], (scheme, peak)
     return rows
 
 

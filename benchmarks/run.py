@@ -109,9 +109,17 @@ def main() -> None:
                   for x in r if x.get("wire_bytes_modeled")]
         fp32 = next(x for x in r if x["scheme"] == "demo:fp32")
         v1 = next(x for x in r if x["scheme"] == "demo:fp32:v1-flat")
+        # ring-vs-gather peak live bytes at |R|=8 (the streaming transport
+        # must never materialize the gathered stack; asserted in the bench)
+        peaks = {x["scheme"]: x["peak_live_modeled_bytes"]
+                 for x in r if x.get("peak_live_modeled_bytes")}
+        ring_vs_gather = max(
+            peaks[f"{s}:ring:R8"] / peaks[f"{s}:gather:R8"]
+            for s in ("demo", "random", "striding", "full"))
         return (f"actual/modeled_max={max(ratios):.3f},"
                 f"schemes={len(ratios)},"
                 f"v2/v1={fp32['wire_bytes_actual'] / v1['wire_bytes_actual']:.3f},"
+                f"ring/gather_peak_max={ring_vs_gather:.3f},"
                 f"enc={fp32['encode_MBps']:.0f}MBps,"
                 f"dec={fp32['decode_MBps']:.0f}MBps")
 

@@ -7,7 +7,11 @@ static sizing the replicators serialize with, per leaf, so the predicted
 ``wire_bytes`` equals what ``communicate_tree`` reports — predicts sync
 seconds with the topology cost model (optionally folding in measured
 encode/decode codec overhead), and returns the highest-fidelity
-:class:`~repro.core.flexdemo.FlexConfig` that fits the budget.
+:class:`~repro.core.flexdemo.FlexConfig` that fits the budget.  Every plan
+carries BOTH transport prices: ``comm_seconds`` (the serialized ring
+all-gather, the conservative feasibility basis) and
+``comm_seconds_pipelined`` (the streaming ``sync_impl="ring"`` transport:
+latency paid once, per-hop decode overlapped with the next transfer).
 
 Wire-format versions are part of the search space: DeMo candidates are
 priced under both the v2 ``local`` index layout (uint16 indices whenever
@@ -53,11 +57,14 @@ _VALUE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
 class CommPlan:
     flex: FlexConfig
     wire_bytes: int           # per replica per step (codec-actual)
-    comm_seconds: float
+    comm_seconds: float       # serialized ring model (feasibility basis)
     quality: float
     link: str                 # link class the payload rides
     n_replicas: int
     feasible: bool
+    # streaming-ring (sync_impl="ring") pricing: latency paid once, per-hop
+    # decode overlapped with the next transfer; <= comm_seconds for |R| >= 2
+    comm_seconds_pipelined: float = 0.0
 
     def describe(self) -> str:
         f = self.flex
@@ -67,6 +74,7 @@ class CommPlan:
         return (f"{f.scheme}@{f.rate:g}{extra}: {self.wire_bytes:,} B/step "
                 f"over {self.link} x{self.n_replicas} -> "
                 f"{self.comm_seconds * 1e3:.3f} ms/step "
+                f"(ring {self.comm_seconds_pipelined * 1e3:.3f} ms) "
                 f"({'fits' if self.feasible else 'OVER BUDGET'})")
 
 
@@ -96,11 +104,14 @@ def _resolve_placement(placement, topology: Topology) -> Placement:
 def scheme_wire_bytes(flex: FlexConfig, numels: Sequence[int]) -> int:
     """EXACT per-step wire bytes of one configuration.
 
-    Mirrors the replicators' serialization leaf for leaf — packed DeMo ships
-    ONE ``PackedCodec`` buffer per tree, the masked/dense schemes one
-    ``DenseCodec`` buffer per leaf (diloco priced at its sync-step burst) —
-    so the prediction equals the ``wire_bytes`` ``communicate_tree`` reports.
-    ``codec="off"`` falls back to the raw-collective planning formulas.
+    Mirrors the replicators' serialization exactly — packed DeMo ships ONE
+    ``PackedCodec`` buffer per tree, and (since the one-buffer tree packing)
+    the value-stream schemes ship ONE ``DenseCodec`` buffer per TREE: the
+    per-leaf selected values are laid end to end, so the prediction is one
+    header plus the summed amplitude bytes (diloco priced at its sync-step
+    burst) and equals the ``wire_bytes`` ``communicate_tree`` reports.
+    ``codec="off"`` falls back to the raw-collective planning formulas
+    (leaf-wise, matching the leaf-wise raw transport).
     """
     numel = sum(numels)
     amp = flex.resolve_codec()
@@ -132,15 +143,15 @@ def scheme_wire_bytes(flex: FlexConfig, numels: Sequence[int]) -> int:
             # one ceil per LEAF, matching the replicator's modeled accounting
             return sum(compression.masked_wire_bytes(n, flex.rate)
                        for n in numels)
-        return sum(codecs.dense_wire_bytes(
-            compression.random_n_sel(n, flex.rate), amp) for n in numels)
+        return codecs.dense_wire_bytes(
+            sum(compression.random_n_sel(n, flex.rate) for n in numels), amp)
     if scheme == "striding":
         if amp == "off":
             return sum(compression.masked_wire_bytes(n, flex.rate)
                        for n in numels)
         stride = compression.rate_to_stride(flex.rate)
-        return sum(codecs.dense_wire_bytes(
-            compression.striding_n_sel(n, stride), amp) for n in numels)
+        return codecs.dense_wire_bytes(
+            sum(compression.striding_n_sel(n, stride) for n in numels), amp)
     if scheme in ("diloco", "full"):
         # diloco: budget_s is a hard PER-STEP ceiling, so it is priced at its
         # sync-step BURST: every period-th step ships the FULL payload in one
@@ -148,7 +159,7 @@ def scheme_wire_bytes(flex: FlexConfig, numels: Sequence[int]) -> int:
         # whose sync steps stall period-x over the promised ceiling.
         if amp == "off":
             return compression.full_wire_bytes(numel)
-        return sum(codecs.dense_wire_bytes(n, amp) for n in numels)
+        return codecs.dense_wire_bytes(numel, amp)
     if scheme == "none":
         return 0
     raise KeyError(f"unknown scheme {scheme!r}")
@@ -181,11 +192,14 @@ def predict(flex: FlexConfig, params, topology, placement,
         raise KeyError(f"unknown scheme {flex.scheme!r}")
 
     comm = step_comm_seconds(wire, placement, topology, overhead=overhead)
+    ring = step_comm_seconds(wire, placement, topology, overhead=overhead,
+                             ring_pipelined=True)
     link = topology.link_for(placement.crosses_node).name
     return CommPlan(flex=flex, wire_bytes=int(wire), comm_seconds=comm,
                     quality=quality, link=link,
                     n_replicas=placement.n_replicas,
-                    feasible=(budget_s is None or comm <= budget_s))
+                    feasible=(budget_s is None or comm <= budget_s),
+                    comm_seconds_pipelined=ring)
 
 
 def solve(params, topology, placement, *,
@@ -246,6 +260,7 @@ def profile_sweep(flex: FlexConfig, params, placement,
         plan = predict(flex, params, topo, placement, overhead=overhead)
         out[name] = {"wire_bytes": plan.wire_bytes,
                      "comm_seconds": plan.comm_seconds,
+                     "comm_seconds_pipelined": plan.comm_seconds_pipelined,
                      "link": plan.link,
                      "n_replicas": plan.n_replicas}
     return out

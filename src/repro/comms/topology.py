@@ -189,15 +189,48 @@ def allgather_seconds(payload_bytes: float, n_replicas: int,
     return (n_replicas - 1) * link.seconds(payload_bytes)
 
 
+def ring_pipelined_seconds(payload_bytes: float, n_replicas: int,
+                           link: LinkSpec,
+                           overhead: CodecOverhead | None = None) -> float:
+    """Streaming ring gather+decode (``sync_impl="ring"``) seconds.
+
+    Models the pipelined implementation the serialized
+    :func:`allgather_seconds` model upper-bounds: hops run back-to-back on an
+    established channel, so the per-message latency is paid ONCE to fill the
+    pipeline (amortized across the ``|R| - 1`` stages) instead of per hop,
+    and each arrived buffer's decode overlaps the next hop's transfer —
+    every stage therefore costs ``max(transfer, decode)``, the encode is
+    charged once up front, and only the LAST buffer's decode has nothing
+    left to hide under.  Always <= the serialized model for ``|R| >= 2``.
+    """
+    if n_replicas <= 1 or payload_bytes <= 0:
+        return 0.0
+    transfer = payload_bytes * 8.0 / (link.bandwidth_gbps * 1e9)
+    enc = dec = 0.0
+    if overhead is not None:
+        enc = payload_bytes * overhead.encode_s_per_byte
+        dec = payload_bytes * overhead.decode_s_per_byte
+    return (enc + link.latency_s
+            + (n_replicas - 1) * max(transfer, dec) + dec)
+
+
 def step_comm_seconds(wire_bytes: int, placement: Placement,
                       topology: Topology,
-                      overhead: CodecOverhead | None = None) -> float:
+                      overhead: CodecOverhead | None = None,
+                      ring_pipelined: bool = False) -> float:
     """Predicted replication-sync seconds per optimizer step.
 
-    ``overhead`` (when supplied) adds the measured encode + |R|*decode codec
-    cost on top of the ring all-gather transfer time.
+    ``ring_pipelined=False`` prices the serialized ring all-gather (hop
+    latency per hop, decode of all |R| buffers after the last hop) —
+    ``overhead`` then adds the measured encode + |R|*decode codec cost on
+    top of the transfer time.  ``ring_pipelined=True`` prices the streaming
+    ring transport instead (:func:`ring_pipelined_seconds`): latency paid
+    once, per-hop decode overlapped with the next transfer.
     """
     link = topology.link_for(placement.crosses_node)
+    if ring_pipelined:
+        return ring_pipelined_seconds(wire_bytes, placement.n_replicas, link,
+                                      overhead=overhead)
     t = allgather_seconds(wire_bytes, placement.n_replicas, link)
     if overhead is not None:
         t += overhead.step_seconds(wire_bytes, placement.n_replicas)

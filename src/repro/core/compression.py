@@ -159,6 +159,26 @@ def packed_dct_topk(
                                                         chunks.shape)
 
 
+def accumulate_coeff(
+    acc: jnp.ndarray, vals: jnp.ndarray, idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Scatter-add ONE replica's (C, k) payload into a dense (C, s) coefficient
+    accumulator — the per-hop decode step of the streaming ring transport.
+    Folding every replica's payload with this and then applying
+    ``(acc / |R|) @ dct_basis`` reproduces :func:`decode_gathered_ref`
+    without ever materializing the gathered (|R|, C, k) stack.
+    """
+    c = vals.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(c)[:, None], idx.shape)
+    return acc.at[rows.reshape(-1), idx.reshape(-1)].add(
+        vals.reshape(-1).astype(jnp.float32))
+
+
+def coeff_mean_idct(acc: jnp.ndarray, n_rep: int, chunk_size: int) -> jnp.ndarray:
+    """(C, s) accumulated coefficients -> replica-mean decoded chunk rows."""
+    return (acc / n_rep) @ dct.dct_basis(chunk_size, jnp.float32)
+
+
 def decode_gathered_ref(
     g_vals: jnp.ndarray, g_idx: jnp.ndarray, chunk_size: int
 ) -> jnp.ndarray:

@@ -28,7 +28,16 @@ class FlexConfig:
     chunk_size: int = 64            # DeMo chunk size s
     topk: int | None = None         # DeMo k; derived from rate when None
     sign: bool = True               # sign-before-sync (appendix B: beneficial)
-    sync_impl: str = "gather"       # gather (faithful) | psum (beyond-paper)
+    # Sync transport for the replication collective:
+    #   gather (paper-faithful all_gather of the encoded buffer)
+    #   ring   (streaming ppermute ring: pipelined gather+decode, never
+    #           materializes the (|R|, B) gathered stack; needs a codec)
+    #   psum   (all-reduce of raw values; needs codec="off")
+    #   auto   (default: ring whenever a codec is on AND payloads are
+    #           sign-compressed — ternary sums are exact in any fold order,
+    #           so replicas stay bit-identical; unsigned payloads keep the
+    #           canonical-order gather. An explicit "ring" is always honoured.)
+    sync_impl: str = "auto"
     value_bytes: int = 4            # wire dtype study (fp32=4 / bf16=2 / int8=1)
     # DeMo extractor strategy — see compression.EXTRACT_IMPLS:
     #   per_leaf | packed | pallas | pallas_interpret | auto
@@ -51,27 +60,48 @@ class FlexConfig:
     idx_layout: str = "local"
 
     def __post_init__(self):
-        if self.sync_impl not in ("gather", "psum"):
+        if self.sync_impl not in rbase.SYNC_IMPLS:
             raise ValueError(f"unknown sync_impl {self.sync_impl!r}; "
-                             "have gather | psum")
+                             "have gather | psum | ring | auto")
         if self.idx_layout not in ("local", "flat"):
             raise ValueError(f"unknown idx_layout {self.idx_layout!r}; "
                              "have local (wire v2) | flat (wire v1)")
-        if self.sync_impl == "psum" and self.resolve_codec() != "off":
+        amp = self.resolve_codec()
+        if self.sync_impl == "psum" and amp != "off":
             # psum all-reduces RAW values on the collective: there is no
             # encoded buffer on the wire, so a codec cannot apply.  Resolved
             # ROADMAP open item: the combination is forbidden, not modeled.
             raise ValueError(
                 "sync_impl='psum' all-reduces raw values and bypasses the "
                 f"wire codec (codec={self.codec!r} resolves to "
-                f"{self.resolve_codec()!r}); use codec='off' with psum, or "
-                "keep sync_impl='gather' to ride the codec")
+                f"{amp!r}); use codec='off' with psum, or "
+                "keep sync_impl='gather'/'ring' to ride the codec")
+        if self.sync_impl == "ring" and amp == "off":
+            # the mirror of the psum contract: the streaming ring forwards
+            # the ENCODED byte buffer hop by hop — codec="off" leaves nothing
+            # to stream.
+            raise ValueError(
+                "sync_impl='ring' streams the encoded wire buffer around "
+                f"the ring, and codec={self.codec!r} (resolving to 'off') "
+                "leaves no byte buffer to forward; keep a codec on for "
+                "ring, or use sync_impl='gather' (or 'psum') for the raw "
+                "collectives")
+        # explicit ring + sign=False is honoured but warns: the rotated
+        # per-replica fold leaves replicas ulp-apart every sync (see
+        # rbase.resolve_sync_impl — "auto" avoids the combination).
+        rbase.resolve_sync_impl(self.sync_impl, amp, self.sign)
 
     def resolve_codec(self) -> str:
         """Amplitude encoding for the wire codec ("off" disables)."""
         from repro.comms import codecs as _codecs
 
         return _codecs.resolve_amp(self.codec, self.value_bytes)
+
+    def resolve_sync_impl(self) -> str:
+        """The transport ``sync_impl`` resolves to (``auto`` -> ring with a
+        codec on and sign compression, else gather)."""
+        return rbase.resolve_sync_impl(self.sync_impl, self.resolve_codec(),
+                                       self.sign)
 
     def make(self) -> rbase.Replicator:
         wire = compression.WireFormat(value_bytes=self.value_bytes)
@@ -82,7 +112,8 @@ class FlexConfig:
                 k = compression.rate_to_topk(self.rate, self.chunk_size, wire)
             return make_replicator("demo", chunk_size=self.chunk_size, topk=k,
                                    wire=wire, extract_impl=self.extract_impl,
-                                   codec=amp, idx_layout=self.idx_layout)
+                                   codec=amp, idx_layout=self.idx_layout,
+                                   sync_impl=self.sync_impl)
         if self.scheme == "random":
             return make_replicator("random", rate=self.rate, wire=wire,
                                    impl=self.sync_impl, codec=amp)
@@ -93,9 +124,10 @@ class FlexConfig:
         if self.scheme == "diloco":
             period = compression.rate_to_stride(self.rate)
             return make_replicator("diloco", period=period, wire=wire,
-                                   codec=amp)
+                                   codec=amp, impl=self.sync_impl)
         if self.scheme == "full":
-            return make_replicator("full", wire=wire, codec=amp)
+            return make_replicator("full", wire=wire, codec=amp,
+                                   impl=self.sync_impl)
         if self.scheme == "none":
             return make_replicator("none")
         raise KeyError(f"unknown scheme {self.scheme!r}")
@@ -112,21 +144,20 @@ def communicate_tree(
 ):
     """Synchronize a whole momentum tree. Returns (Q_tree, residual_tree, bytes).
 
-    Replicators that implement a tree-level ``communicate_tree`` method (DeMo
-    with a packed ``extract_impl``) process the ENTIRE tree in one fused
-    extraction + one collective + one decode, and (codec != "off") serialize
-    the payload into one contiguous wire buffer whose byte length IS the
-    reported ``wire_bytes``; everything else falls back to the leaf-wise map
-    below (one extraction and one collective per leaf — still codec'd per
-    leaf unless codec="off", which restores the raw collectives with modeled
-    accounting).  ``wire_bytes`` is a static python int either way (shapes
-    only), so it is safe to read outside jit.
+    Replicators that elect the tree-level path (``use_tree_path()``: DeMo
+    with a packed ``extract_impl``; the value-stream schemes whenever a codec
+    is on) process the ENTIRE tree in one fused extraction + one collective
+    + one decode, serializing the payload into one contiguous wire buffer
+    whose byte length IS the reported ``wire_bytes``; everything else falls
+    back to the leaf-wise map below (one extraction and one collective per
+    leaf — still codec'd per leaf for demo per_leaf; codec="off" restores
+    the raw collectives with modeled accounting).  ``wire_bytes`` is a
+    static python int either way (shapes only), so it is safe to read
+    outside jit.
     """
     tree_fn = getattr(replicator, "communicate_tree", None)
-    if tree_fn is not None and (
-        getattr(replicator, "extract_impl", "per_leaf") != "per_leaf"
-    ):
-        return tree_fn(momentum, step=step, axes=axes, sign=sign)
+    if tree_fn is not None and replicator.use_tree_path():
+        return tree_fn(momentum, step=step, axes=axes, sign=sign, salt=salt)
 
     wire_total = [0]
 

@@ -135,3 +135,49 @@ def slot_rows(mat: jnp.ndarray, slot: LeafSlot) -> jnp.ndarray:
     """This leaf's rows of any packed per-row tensor (chunks, vals, idx)."""
     return jax.lax.slice_in_dim(mat, slot.row_start,
                                 slot.row_start + slot.n_rows, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# bare value streams: the dense-scheme (random/striding/full/diloco) layout.
+# No chunk rows here — the per-leaf selected values are laid end to end into
+# ONE flat stream, so the whole tree rides ONE DenseCodec buffer and ONE
+# collective per sync (N leaves -> 1 launch and one wire header instead of N).
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueStreamLayout:
+    """Static placement of per-leaf value runs inside one flat stream."""
+
+    sizes: tuple[int, ...]     # per-leaf selected value counts (static)
+    offsets: tuple[int, ...]   # start of each leaf's run
+    n_total: int
+
+
+def plan_values(sizes) -> ValueStreamLayout:
+    """Layout for per-leaf value streams of the given (static) lengths."""
+    sizes = tuple(int(s) for s in sizes)
+    if not sizes:
+        raise ValueError("plan_values: empty stream list")
+    if any(s <= 0 for s in sizes):
+        raise ValueError(f"plan_values: non-positive stream size in {sizes}")
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    return ValueStreamLayout(sizes=sizes, offsets=tuple(offsets), n_total=off)
+
+
+def pack_values(parts, layout: ValueStreamLayout) -> jnp.ndarray:
+    """Concatenate per-leaf value runs into the (n_total,) f32 stream."""
+    assert len(parts) == len(layout.sizes), (len(parts), len(layout.sizes))
+    flat = [p.reshape(-1).astype(jnp.float32) for p in parts]
+    for p, size in zip(flat, layout.sizes):
+        assert p.shape == (size,), (p.shape, size)
+    return jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+
+
+def unpack_values(stream: jnp.ndarray, layout: ValueStreamLayout):
+    """Inverse of :func:`pack_values`: the per-leaf runs, in leaf order."""
+    assert stream.shape == (layout.n_total,), (stream.shape, layout.n_total)
+    return [jax.lax.slice_in_dim(stream, off, off + size, axis=0)
+            for off, size in zip(layout.offsets, layout.sizes)]

@@ -10,16 +10,81 @@ All replicators are pure functions of ``(m, step, seed)`` plus the mesh axis
 names of R, so the same code runs single-device (``axes=()``), under
 ``shard_map`` on a real mesh, and inside the vmap-based N-replica simulator
 used by the tests.
+
+Sync transports (``sync_impl`` / ``impl``):
+  * ``gather`` -- one fixed-shape ``all_gather`` of the encoded buffer over R,
+    then decode the gathered ``(|R|, B)`` stack (paper-faithful; materializes
+    the full gathered intermediate).
+  * ``ring``   -- :func:`ring_gather_decode`: a ``jax.lax.ppermute`` pipelined
+    ring that forwards the in-flight encoded buffer while decode-accumulating
+    the buffer that just arrived.  The ``(|R|, B)`` intermediate is never
+    materialized (peak live bytes drop from ``|R|*B`` to ``2*B`` plus the
+    dense accumulator) and the hop structure matches the topology cost
+    model's ring exactly.  Requires a codec (there must be a byte buffer to
+    stream).
+  * ``psum``   -- all-reduce of RAW values (no buffer on the wire, so it
+    requires ``codec="off"``); only legal when every replica contributes the
+    same index set.
+  * ``auto``   -- ``ring`` whenever a codec is on, else ``gather``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import math
+import warnings
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression import WireFormat
+SYNC_IMPLS = ("gather", "psum", "ring", "auto")
+
+
+def resolve_sync_impl(impl: str, amp: str, sign: bool = True) -> str:
+    """Resolve/validate a sync transport against the resolved codec ``amp``.
+
+    ``auto`` picks the streaming ring whenever a codec is on (there is an
+    encoded buffer to forward) AND the payload is sign-compressed: ternary
+    payloads fold to exact fp32 sums in any accumulation order, so the
+    ring's rotated per-replica fold stays bit-identical across R (the
+    params-stay-in-sync invariant).  Unsigned payloads under ``auto`` keep
+    the canonical-order ``gather`` (the ring's rotated fold would leave
+    replicas ulp-apart); an EXPLICIT ``ring`` is always honoured.  ``auto``
+    with ``codec="off"`` falls back to ``gather``.  Illegal combinations
+    raise here, so the same message fires at FlexConfig construction time
+    and at the replicator level:
+      * ``psum`` all-reduces raw values -- there is no buffer on the wire,
+        so a codec cannot apply (escape hatch: ``codec="off"``);
+      * ``ring`` streams the encoded byte buffer around the ring -- with
+        ``codec="off"`` there is nothing to stream (escape hatch: keep a
+        codec on, or use ``gather``/``psum`` for the raw collectives).
+    """
+    if impl not in SYNC_IMPLS:
+        raise ValueError(f"unknown sync_impl {impl!r}; have "
+                         "gather | psum | ring | auto")
+    if impl == "auto":
+        return "ring" if (amp != "off" and sign) else "gather"
+    if impl == "psum" and amp != "off":
+        raise ValueError("sync_impl='psum' all-reduces raw values and cannot "
+                         f"ride the wire codec (codec={amp!r}); set "
+                         "codec='off', or keep gather/ring to ride the codec")
+    if impl == "ring" and amp == "off":
+        raise ValueError("sync_impl='ring' streams the encoded wire buffer "
+                         "around the ring, and codec='off' leaves no byte "
+                         "buffer to forward; keep a codec on for ring, or "
+                         "use sync_impl='gather' (or 'psum') for the raw "
+                         "collectives")
+    if impl == "ring" and not sign:
+        # honoured, but hazardous: each replica folds arriving buffers in
+        # its own rotated ring order, and unsigned (non-ternary) fp sums are
+        # bracketing-sensitive — replicas end each sync ulp-apart and the
+        # drift compounds across steps with nothing re-synchronizing them.
+        warnings.warn(
+            "sync_impl='ring' with unsigned payloads folds in per-replica "
+            "ring order: synced results drift apart by ulps per step; use "
+            "sign=True (ternary payloads fold exactly) or sync_impl="
+            "'gather' for bit-identical replicas", stacklevel=3)
+    return impl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +111,10 @@ class Replicator:
     ) -> ReplicatorOutput:
         raise NotImplementedError
 
+    def use_tree_path(self) -> bool:
+        """True when :meth:`communicate_tree` should replace the leaf map."""
+        return False
+
     # DiLoCo overrides this to federated-average the parameters on sync steps.
     def postprocess_params(
         self, params, *, step: jnp.ndarray, axes: Sequence[str]
@@ -64,6 +133,95 @@ def mean_over(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
     return jax.lax.pmean(x, tuple(axes))
 
 
+def replica_count(axes: Sequence[str]) -> int:
+    """|R| as a static python int (``jax.lax.psum`` of a python literal
+    constant-folds to the axis size at trace time, under vmap and shard_map
+    alike)."""
+    if not axes:
+        return 1
+    return int(math.prod(jax.lax.psum(1, a) for a in axes))
+
+
+def gather_stack(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
+    """all_gather over one OR several replica axes -> one leading |R| dim.
+
+    Gathers one axis at a time (multi-axis ``all_gather`` has no nested-vmap
+    batching rule on the jax 0.4.x line) and flattens the gathered leading
+    dims, so callers always decode a single ``(|R|, ...)`` stack regardless
+    of how R factors across mesh axes.
+    """
+    g = x
+    for a in reversed(tuple(axes)):
+        g = jax.lax.all_gather(g, a, tiled=False)
+    return g.reshape((-1,) + tuple(x.shape))
+
+
+# ---------------------------------------------------------------------------
+# streaming ring collective: pipelined gather + decode
+
+
+def ring_shift(x: jnp.ndarray, axis: str, n: int | None = None) -> jnp.ndarray:
+    """Forward ``x`` one hop around the ring of ``axis`` (i -> i + 1 mod n)."""
+    if n is None:
+        n = jax.lax.psum(1, axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def _ring_schedule(axes: tuple[str, ...], sizes: dict[str, int]) -> list[str]:
+    """The ``prod(sizes) - 1`` single-axis hops that snake one buffer through
+    the full replica lattice.
+
+    One axis is a plain ring.  For nested axes the inner ring runs once per
+    outer position, with a single outer-axis hop between blocks: after each
+    outer hop the inner ring re-circulates the shifted buffers, so every
+    device decodes every (outer, inner) coordinate exactly once.
+    """
+    if not axes:
+        return []
+    if len(axes) == 1:
+        return [axes[0]] * (sizes[axes[0]] - 1)
+    inner = _ring_schedule(axes[1:], sizes)
+    return inner + (sizes[axes[0]] - 1) * ([axes[0]] + inner)
+
+
+def ring_gather_decode(
+    buf: jnp.ndarray,
+    *,
+    axes: Sequence[str],
+    accumulate: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    init: jnp.ndarray,
+) -> tuple[jnp.ndarray, int]:
+    """Pipelined ring all-gather + decode of one buffer per replica.
+
+    Each of the ``|R| - 1`` hops forwards the in-flight encoded buffer with
+    ``jax.lax.ppermute`` while ``accumulate(acc, arrived)`` decodes-and-folds
+    the buffer that just arrived, so the decode of hop ``i`` overlaps the
+    transfer of hop ``i + 1`` and the ``(|R|, B)`` gathered stack of the
+    ``all_gather`` transport is never materialized: at any instant a replica
+    holds its accumulator plus at most two ``B``-byte buffers (the arrived
+    one being decoded and the in-flight copy being forwarded).  The hop
+    structure is exactly the serialized ring of
+    ``topology.allgather_seconds`` -- and the overlap is what
+    ``topology.ring_pipelined_seconds`` prices.
+
+    Returns ``(acc, |R|)`` where ``acc`` folds every replica's buffer exactly
+    once (the caller divides by ``|R|`` for a mean).  NOTE: the fold happens
+    in ring-arrival order, which is a per-replica rotation of the canonical
+    order -- exact for sign-compressed (ternary) payloads, whose sums are
+    small integers in fp32, and ulp-close otherwise.
+    """
+    acc = accumulate(init, buf)
+    if not axes:
+        return acc, 1
+    sizes = {a: int(jax.lax.psum(1, a)) for a in axes}
+    inflight = buf
+    for ax in _ring_schedule(tuple(axes), sizes):
+        inflight = ring_shift(inflight, ax, sizes[ax])
+        acc = accumulate(acc, inflight)
+    return acc, int(math.prod(sizes.values()))
+
+
 def sync_dense_values(
     vals: jnp.ndarray,
     *,
@@ -78,29 +236,32 @@ def sync_dense_values(
     The shared transport of every index-free scheme (random / striding /
     full / diloco's outer step).  With ``codec != "off"`` the stream is
     serialized into ONE contiguous ``DenseCodec`` buffer, the collective
-    gathers THAT buffer, and the reported bytes are its length — what a
-    replica applies is always the DECODED payload (|R| = 1 included), so
-    training dynamics do not change when R scales 1 -> N under a lossy
-    amplitude codec.  ``codec == "off"`` restores the raw f32 collective
-    (gather-mean, or pmean for ``impl="psum"``) with ``modeled_bytes``
-    accounting.  Returns ``(mean_vals, wire_bytes)``.
+    moves THAT buffer -- ``impl="gather"`` stacks the ``(|R|, B)`` gathered
+    copies and decodes once, ``impl="ring"`` streams it hop by hop through
+    :func:`ring_gather_decode` without ever materializing the stack -- and
+    the reported bytes are its length.  What a replica applies is always the
+    DECODED payload (|R| = 1 included), so training dynamics do not change
+    when R scales 1 -> N under a lossy amplitude codec.  ``codec == "off"``
+    restores the raw f32 collective (gather-mean, or pmean for
+    ``impl="psum"``) with ``modeled_bytes`` accounting.  Returns
+    ``(mean_vals, wire_bytes)``.
     """
-    if impl == "psum" and codec != "off":
-        # enforce the psum-x-codec contract at the shared transport, not
-        # just in the replicators' constructors: psum all-reduces raw
-        # values, so silently substituting the encoded gather would change
-        # the collective (and |R|x the receive volume) behind the caller
-        raise ValueError("impl='psum' all-reduces raw values and cannot "
-                         "ride the wire codec; set codec='off'")
+    impl = resolve_sync_impl(impl, codec, sign)
     if codec != "off":
         from repro.comms import codecs
 
         cod = codecs.DenseCodec(vals.size, codec, signed=sign)
         buf = cod.encode(vals)
+        if impl == "ring" and axes:
+            acc, n = ring_gather_decode(
+                buf, axes=axes,
+                accumulate=lambda a, b: a + cod.decode(b),
+                init=jnp.zeros((vals.size,), jnp.float32))
+            return acc / n, cod.wire_bytes
         if not axes:
             g = buf[None]                                     # |R| = 1
         else:
-            g = jax.lax.all_gather(buf, tuple(axes), tiled=False)
+            g = gather_stack(buf, axes)
         return cod.decode(g).mean(axis=0), cod.wire_bytes
     if axes:
         ax = tuple(axes)
@@ -118,17 +279,109 @@ def maybe_sign(x: jnp.ndarray, sign: bool) -> jnp.ndarray:
     return jnp.sign(x) if sign else x
 
 
-def replica_count(axes: Sequence[str]) -> int:
-    if not axes:
-        return 1
-    import numpy as np
+# ---------------------------------------------------------------------------
+# value-stream replicators: shared transport of the index-free schemes
 
-    sizes = []
-    # inside shard_map, psum of 1 gives the axis size; but we want a static
-    # number at trace time: read it from the ambient mesh axis env.
-    for a in axes:
-        sizes.append(jax.lax.axis_size(a))
-    return int(np.prod(sizes))
+
+class ValueStreamReplicator(Replicator):
+    """Base for schemes whose wire payload is a bare value stream (random /
+    striding / full): indices are reproduced from (seed, step) or the stride
+    on every replica, so only amplitudes travel.
+
+    Subclasses implement :meth:`select_leaf` (momentum -> selected value
+    stream + static context) and :meth:`apply_leaf` (synced mean values ->
+    ``(Q, residual)``); this base provides both transports:
+
+      * leaf-wise (:meth:`communicate_leaf`): one ``DenseCodec`` buffer and
+        one collective per leaf (the reference path, and the only path for
+        ``codec="off"``);
+      * tree-level (:meth:`communicate_tree`, taken whenever a codec is on):
+        every leaf's selected values are packed into ONE contiguous stream
+        (``packing.plan_values``), encoded into ONE ``DenseCodec`` buffer,
+        and synced with ONE collective per step -- N leaves -> 1 launch and
+        one 24 B header instead of N.
+    """
+
+    # dataclass fields supplied by subclasses:
+    impl: str = "auto"
+    codec: str = "fp32"
+
+    def select_leaf(self, m: jnp.ndarray, *, step, seed: int, sign: bool):
+        """-> ``(vals, ctx)``: the leaf's selected value stream (static
+        length) plus whatever :meth:`apply_leaf` needs to scatter it back."""
+        raise NotImplementedError
+
+    def apply_leaf(self, m: jnp.ndarray, mean_vals: jnp.ndarray, ctx):
+        """-> ``(q_sync, m_residual)`` from the synced mean value stream."""
+        raise NotImplementedError
+
+    def _validate_impl(self):
+        resolve_sync_impl(self.impl, self.codec)
+
+    def _resolved_impl(self, sign: bool) -> str:
+        """The transport this scheme's ``impl``/``codec``/``sign`` resolve to
+        (subclass hook: full's raw baseline keeps the classic pmean)."""
+        return resolve_sync_impl(self.impl, self.codec, sign)
+
+    def communicate_leaf(
+        self,
+        m: jnp.ndarray,
+        *,
+        step: jnp.ndarray,
+        seed: int,
+        axes: Sequence[str],
+        sign: bool,
+    ) -> ReplicatorOutput:
+        vals, ctx = self.select_leaf(m, step=step, seed=seed, sign=sign)
+        mean_vals, wire = sync_dense_values(
+            vals, axes=axes, impl=self._resolved_impl(sign),
+            codec=self.codec, sign=sign,
+            modeled_bytes=self.wire_bytes(m.size))
+        q_sync, m_residual = self.apply_leaf(m, mean_vals, ctx)
+        return ReplicatorOutput(q_sync=q_sync, m_residual=m_residual,
+                                wire_bytes=wire)
+
+    def use_tree_path(self) -> bool:
+        return self.codec != "off"
+
+    def communicate_tree(
+        self,
+        momentum,
+        *,
+        step: jnp.ndarray,
+        axes: Sequence[str],
+        sign: bool,
+        salt: int = 0,
+    ):
+        """One ``DenseCodec`` buffer for the WHOLE tree; returns
+        ``(Q_tree, residual_tree, wire_bytes)``.
+
+        Selection is leaf-wise with the same path-derived seeds as the
+        leaf-wise transport (``utils.tree.path_seed``), so the selected
+        index sets are identical -- only the wire layout changes (one
+        buffer, one header, one collective).
+        """
+        from repro.core import packing
+        from repro.utils.tree import path_seed
+
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(momentum)
+        selected = [
+            self.select_leaf(leaf, step=step, seed=path_seed(path, salt),
+                             sign=sign)
+            for path, leaf in paths_leaves]
+        layout = packing.plan_values(tuple(v.size for v, _ in selected))
+        stream = packing.pack_values([v for v, _ in selected], layout)
+        mean_stream, wire = sync_dense_values(
+            stream, axes=axes, impl=self._resolved_impl(sign),
+            codec=self.codec, sign=sign)
+        parts = packing.unpack_values(mean_stream, layout)
+        qs, res = [], []
+        for (_, leaf), (_, ctx), part in zip(paths_leaves, selected, parts):
+            q, r = self.apply_leaf(leaf, part, ctx)
+            qs.append(q)
+            res.append(r)
+        return (jax.tree_util.tree_unflatten(treedef, qs),
+                jax.tree_util.tree_unflatten(treedef, res), wire)
 
 
 _REGISTRY: dict[str, type] = {}
@@ -147,11 +400,3 @@ def make_replicator(name: str, **kwargs) -> Replicator:
 
 def available() -> list[str]:
     return sorted(_REGISTRY)
-
-
-@dataclasses.dataclass(frozen=True)
-class WirePolicy:
-    wire: WireFormat = WireFormat()
-    # "gather"  : all_gather compressed payloads over R (paper-faithful)
-    # "psum"    : all-reduce (beyond-paper: valid when indices are shared)
-    impl: str = "gather"

@@ -2,8 +2,8 @@
 
 Wire payload per leaf: per-chunk top-k coefficient VALUES and their INDICES
 (indices differ per replica, so they must travel). The collective is a
-fixed-shape ``all_gather`` of (values, indices) over R, after which every
-replica decodes and averages -- the FlexDeMo adaptation gathers once per
+fixed-shape sync of (values, indices) over R, after which every replica
+decodes and averages -- the FlexDeMo adaptation gathers once per
 sharding-group (node) instead of once per accelerator.
 
 Two execution strategies (``extract_impl``):
@@ -18,11 +18,26 @@ Two execution strategies (``extract_impl``):
     ``(C_total, s)`` chunk matrix (``repro.core.packing``), extracted in ONE
     call (optionally the fused Pallas kernel), serialized through the
     ``repro.comms.codecs`` wire codec into ONE contiguous uint8 buffer,
-    synchronized with ONE all_gather of that buffer, and decoded in ONE
+    synchronized with ONE collective of that buffer, and decoded in ONE
     fused pass. Bit-compatible with the per-leaf path at fp32 tolerance
     (exactly, for the fp32 codec; sign-compressed payloads are exact under
     every codec). ``wire_bytes`` on this path is the encoded buffer length —
     actual bytes on the collective, not a model.
+
+Sync transports (``sync_impl``; both extract strategies honour it):
+
+  * ``gather`` -- ONE fixed-shape ``all_gather`` of the encoded buffer, then
+    decode the gathered ``(|R|, B)`` stack in one fused pass;
+  * ``ring`` (the ``auto`` default whenever a codec is on) -- the streaming
+    ``ppermute`` ring (``base.ring_gather_decode``): each of the ``|R| - 1``
+    hops forwards the in-flight buffer while decode-accumulating the arrived
+    one into a dense coefficient accumulator (Pallas: the accumulate-into
+    kernel ``decode_topk_accum``), so decode overlaps the next hop's transfer
+    and the ``(|R|, B)`` stack is never materialized;
+  * ``psum`` (requires ``codec="off"``) -- all-reduce of the locally decoded
+    component: the replica-mean of decoded payloads is linear, so
+    ``pmean(decode(vals_r, idx_r))`` equals the gathered decode without any
+    index traffic on the collective (beyond-paper, raw values only).
 """
 from __future__ import annotations
 
@@ -52,14 +67,26 @@ class DeMoReplicator(base.Replicator):
     # Wire-format index layout: "local" (v2, in-chunk j, uint16 for any tree
     # with s <= 65536) or "flat" (v1, global positions, uint32 at scale).
     idx_layout: str = "local"
+    # Sync transport: gather | psum | ring | auto (see module docstring).
+    sync_impl: str = "auto"
     # Gathered-payload decode kernel: "unrolled" (|R|*k where-accumulation)
-    # or "matmul" (one-hot matmul; better for |R| > 8). Pallas impls only.
+    # or "matmul" (one-hot matmul; better for |R| > 8). Pallas impls only;
+    # the ring transport always uses the unrolled accumulate-into kernel
+    # (one replica per hop — there is no (R, C, k) stack to contract).
     decode_impl: str = "unrolled"
+
+    def __post_init__(self):
+        # validate sync_impl x codec at construction (ring needs a buffer to
+        # stream, psum forbids one) — same contract as FlexConfig.
+        base.resolve_sync_impl(self.sync_impl, self.amp_dtype())
 
     def amp_dtype(self) -> str:
         from repro.comms import codecs
 
         return codecs.resolve_amp(self.codec, self.wire.value_bytes)
+
+    def _sync_impl(self, sign: bool = True) -> str:
+        return base.resolve_sync_impl(self.sync_impl, self.amp_dtype(), sign)
 
     def communicate_leaf(
         self,
@@ -77,6 +104,7 @@ class DeMoReplicator(base.Replicator):
         tx = base.maybe_sign(vals, sign)
 
         amp = self.amp_dtype()
+        impl = self._sync_impl(sign)
         if amp != "off":
             # codec'd reference path: ONE encoded buffer per LEAF on the
             # collective (the packed path ships one per TREE); what a replica
@@ -87,22 +115,40 @@ class DeMoReplicator(base.Replicator):
                 n_rows=vals.shape[0], chunk_size=s, k=k, amp_dtype=amp,
                 signed=sign, idx_layout=self.idx_layout)
             payload = codec.encode(tx, idx)
-            if not axes:
-                g_buf = payload[None]                          # |R| = 1
+            if impl == "ring" and axes:
+                # streaming ring: decode-accumulate each arriving buffer into
+                # a dense (C, s) coefficient accumulator while the in-flight
+                # copy rides the next hop; mean + iDCT once at the end.
+                def accum(acc, buf):
+                    v, i = codec.decode(buf)
+                    return compression.accumulate_coeff(acc, v, i)
+
+                acc, n = base.ring_gather_decode(
+                    payload, axes=axes, accumulate=accum,
+                    init=jnp.zeros((vals.shape[0], s), jnp.float32))
+                q_rows = compression.coeff_mean_idct(acc, n, s)
             else:
-                g_buf = jax.lax.all_gather(payload, tuple(axes), tiled=False)
-            g_vals, g_idx = codec.decode(g_buf)                # (|R|, C, k)
-            q_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
+                if not axes:
+                    g_buf = payload[None]                      # |R| = 1
+                else:
+                    g_buf = base.gather_stack(payload, axes)
+                g_vals, g_idx = codec.decode(g_buf)            # (|R|, C, k)
+                q_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
             q_sync = compression.unchunk(q_rows, m.shape)
             wire = codec.wire_bytes
         else:
             if not axes:
                 q_sync = compression.decode_dct_topk(tx, idx, s, m.shape)
+            elif impl == "psum":
+                # indices never travel: pmean the locally decoded component
+                # (linear, so it equals the gathered decode's replica mean).
+                q_sync = base.mean_over(
+                    compression.decode_dct_topk(tx, idx, s, m.shape),
+                    tuple(axes))
             else:
-                ax = tuple(axes)
                 # fixed-shape gather of the compressed payload over R.
-                g_vals = jax.lax.all_gather(tx, ax, tiled=False)  # (|R|,C,k)
-                g_idx = jax.lax.all_gather(idx, ax, tiled=False)
+                g_vals = base.gather_stack(tx, axes)           # (|R|, C, k)
+                g_idx = base.gather_stack(idx, axes)
                 # scatter-add every replica's coefficients, average, inverse.
                 q_rows = compression.decode_gathered_ref(g_vals, g_idx, s)
                 q_sync = compression.unchunk(q_rows, m.shape)
@@ -114,6 +160,9 @@ class DeMoReplicator(base.Replicator):
             wire_bytes=wire,
         )
 
+    def use_tree_path(self) -> bool:
+        return self.extract_impl != "per_leaf"
+
     def communicate_tree(
         self,
         momentum,
@@ -121,6 +170,7 @@ class DeMoReplicator(base.Replicator):
         step: jnp.ndarray,
         axes: Sequence[str],
         sign: bool,
+        salt: int = 0,
     ):
         """Packed whole-tree extract/sync/decode: returns (Q, residual, bytes).
 
@@ -128,7 +178,7 @@ class DeMoReplicator(base.Replicator):
         tree, instead of one of each per leaf. The layout plan is static
         (shapes only), so this traces to a fixed graph under jit/shard_map.
         """
-        del step
+        del step, salt
         s, k = self.chunk_size, self.topk
         impl = compression.resolve_extract_impl(self.extract_impl)
         kernel = impl in ("pallas", "pallas_interpret")
@@ -144,6 +194,8 @@ class DeMoReplicator(base.Replicator):
         tx = base.maybe_sign(vals, sign)
 
         amp = self.amp_dtype()
+        sync = self._sync_impl(sign)
+        pad = layout.n_rows_padded - layout.n_rows
         if amp != "off":
             # real wire path: ONE contiguous encoded buffer on the collective.
             # Pallas pad rows (extract to zero values) are sliced off before
@@ -157,23 +209,67 @@ class DeMoReplicator(base.Replicator):
                 n_rows=layout.n_rows, chunk_size=s, k=k, amp_dtype=amp,
                 signed=sign, idx_layout=self.idx_layout)
             payload = codec.encode(tx[:layout.n_rows], idx[:layout.n_rows])
+            wire = codec.wire_bytes
+            if sync == "ring" and axes:
+                # streaming ring: the (|R|, B) gathered stack is never built.
+                # Each hop decodes ONE buffer into the (C_pad, s) coefficient
+                # accumulator — the fused accumulate-into Pallas kernel when
+                # a kernel impl is selected — while ppermute forwards the
+                # in-flight copy; the mean + iDCT run once after the last
+                # hop with the same tiling as the gathered kernel.
+                if kernel:
+                    from repro.kernels.dct_topk.ops import (decode_topk_accum,
+                                                            idct_mean)
+
+                def accum(acc, buf):
+                    v, i = codec.decode(buf)                   # (C, k)
+                    if pad:
+                        v = jnp.pad(v, ((0, pad), (0, 0)))
+                        i = jnp.pad(i, ((0, pad), (0, 0)))
+                    if kernel:
+                        return decode_topk_accum(v, i, acc,
+                                                 interpret=interpret)
+                    return compression.accumulate_coeff(acc, v, i)
+
+                acc, n = base.ring_gather_decode(
+                    payload, axes=axes, accumulate=accum,
+                    init=jnp.zeros((layout.n_rows_padded, s), jnp.float32))
+                if kernel:
+                    q_sync_rows = idct_mean(acc, s, n, interpret=interpret)
+                else:
+                    q_sync_rows = compression.coeff_mean_idct(acc, n, s)
+                q_sync = jax.tree_util.tree_map(
+                    lambda m, q: q.astype(m.dtype), momentum,
+                    packing.unpack_tree(q_sync_rows, layout))
+                return q_sync, residual, wire
             if not axes:
                 g_buf = payload[None]                          # |R| = 1
             else:
-                g_buf = jax.lax.all_gather(payload, tuple(axes), tiled=False)
+                g_buf = base.gather_stack(payload, axes)
             g_vals, g_idx = codec.decode(g_buf)                # (|R|, C, k)
-            pad = layout.n_rows_padded - layout.n_rows
             if pad:
                 g_vals = jnp.pad(g_vals, ((0, 0), (0, pad), (0, 0)))
                 g_idx = jnp.pad(g_idx, ((0, 0), (0, pad), (0, 0)))
-            wire = codec.wire_bytes
         else:
             if not axes:
                 g_vals, g_idx = tx[None], idx[None]            # |R| = 1
+            elif sync == "psum":
+                # pmean of the locally decoded rows == gathered decode
+                # (linear).  Decode from tx, NOT q_rows: the extraction's
+                # q_rows predate sign compression, and the wire ships the
+                # (possibly ternarized) tx exactly like the leaf-wise path.
+                wire = sum(self.wire_bytes(slot.numel)
+                           for slot in layout.slots)
+                q_sync_rows = base.mean_over(
+                    compression.decode_dct_topk(tx, idx, s, chunks.shape),
+                    tuple(axes))
+                q_sync = jax.tree_util.tree_map(
+                    lambda m, q: q.astype(m.dtype), momentum,
+                    packing.unpack_tree(q_sync_rows, layout))
+                return q_sync, residual, wire
             else:
-                ax = tuple(axes)
-                g_vals = jax.lax.all_gather(tx, ax, tiled=False)  # (|R|,C,k)
-                g_idx = jax.lax.all_gather(idx, ax, tiled=False)
+                g_vals = base.gather_stack(tx, axes)           # (|R|, C, k)
+                g_idx = base.gather_stack(idx, axes)
             wire = sum(self.wire_bytes(slot.numel) for slot in layout.slots)
         if kernel:
             from repro.kernels.dct_topk.ops import decode_topk_gathered

@@ -6,10 +6,12 @@ parameters diverge across R (``params_diverge = True``); on sync steps the
 parameters are federated-averaged over R (the outer step). Compression rate
 is 1/period.
 
-Wire path: the outer parameter average rides the dense value-stream codec
-(one contiguous encoded buffer per leaf on an all_gather); the per-step
-``wire_bytes`` a leaf reports is that buffer's length amortized over the
-period — on sync steps the BURST is the full buffer, which is what the
+Wire path: with a codec on, the outer parameter average packs the WHOLE
+param tree into ONE contiguous ``DenseCodec`` buffer (``packing.plan_values``)
+and syncs it with one collective — ``impl="ring"`` streams it around the
+pipelined ppermute ring, ``"gather"`` stacks the gathered copies.  The
+per-step ``wire_bytes`` reported is that one buffer's length amortized over
+the period — on sync steps the BURST is the full buffer, which is what the
 planner prices against a per-step budget.  ``codec="off"`` restores the raw
 pmean outer step with modeled accounting.
 """
@@ -34,8 +36,13 @@ class DiLoCoReplicator(base.Replicator):
     # dense value-stream codec for the outer parameter average:
     # fp32 | bf16 | int8 | off (raw pmean)
     codec: str = "fp32"
+    # outer-step transport: gather | psum | ring | auto (ring with codec on)
+    impl: str = "auto"
 
     params_diverge = True
+
+    def __post_init__(self):
+        base.resolve_sync_impl(self.impl, self.codec)
 
     def communicate_leaf(
         self,
@@ -54,6 +61,8 @@ class DiLoCoReplicator(base.Replicator):
             from repro.comms import codecs
 
             # amortized accounting of the outer step's encoded-buffer burst
+            # (leaf-wise view: one buffer per leaf; the tree path below
+            # accounts the real ONE-buffer-per-tree burst)
             wire = codecs.dense_wire_bytes(m.size, self.codec) // self.period
         else:
             wire = self.wire_bytes(m.size)
@@ -63,20 +72,58 @@ class DiLoCoReplicator(base.Replicator):
             wire_bytes=wire,
         )
 
+    def use_tree_path(self) -> bool:
+        return self.codec != "off"
+
+    def communicate_tree(
+        self,
+        momentum,
+        *,
+        step: jnp.ndarray,
+        axes: Sequence[str],
+        sign: bool,
+        salt: int = 0,
+    ):
+        """Tree-level inner step: per-step updates stay local (no collective);
+        the reported per-step bytes amortize the outer step's ONE-buffer
+        burst (``postprocess_params``) over the period."""
+        del step, salt
+        q = jax.tree_util.tree_map(lambda m: base.maybe_sign(m, sign),
+                                   momentum)
+        from repro.comms import codecs
+        from repro.utils.tree import tree_numel
+
+        wire = codecs.dense_wire_bytes(tree_numel(momentum),
+                                       self.codec) // self.period
+        return q, momentum, wire
+
     def postprocess_params(self, params, *, step: jnp.ndarray, axes: Sequence[str]):
         if not axes:
             return params
 
-        def avg(p):
-            if self.codec != "off":
-                vals, _ = base.sync_dense_values(
-                    p.reshape(-1), axes=axes, codec=self.codec)
-                synced = vals.reshape(p.shape).astype(p.dtype)
-            else:
-                synced = jax.lax.pmean(p, tuple(axes))
-            return jnp.where(step % self.period == self.period - 1, synced, p)
+        if self.codec != "off":
+            # outer step: ONE DenseCodec buffer for the whole param tree.
+            from repro.core import packing
 
-        return jax.tree_util.tree_map(avg, params)
+            leaves = jax.tree_util.tree_leaves(params)
+            # 0-d leaves flatten to size 1; a genuinely empty leaf raises
+            # plan_values' ValueError rather than mis-packing the stream.
+            layout = packing.plan_values(tuple(p.size for p in leaves))
+            stream = packing.pack_values(
+                [p.reshape(-1) for p in leaves], layout)
+            vals, _ = base.sync_dense_values(
+                stream, axes=axes, impl=self.impl, codec=self.codec)
+            parts = packing.unpack_values(vals, layout)
+            synced_leaves = [part.reshape(p.shape).astype(p.dtype)
+                             for p, part in zip(leaves, parts)]
+            synced = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(params), synced_leaves)
+        else:
+            synced = jax.tree_util.tree_map(
+                lambda p: jax.lax.pmean(p, tuple(axes)), params)
+        gate = step % self.period == self.period - 1
+        return jax.tree_util.tree_map(
+            lambda p, sp: jnp.where(gate, sp, p), params, synced)
 
     def wire_bytes(self, numel: int) -> int:
         return compression.full_wire_bytes(numel, self.wire) // self.period

@@ -4,10 +4,13 @@ Every step the whole momentum/gradient is synchronized (mean) over R. With
 the AdamW optimizer on top this is exactly the paper's "conventional
 Hybrid-FSDP with AdamW" baseline.
 
-Wire path: the flattened momentum rides the dense value-stream codec (one
-contiguous encoded buffer per leaf on an all_gather; ``wire_bytes`` is its
-length).  ``codec="off"`` restores the classic raw pmean all-reduce with
-modeled byte accounting — the memory-lean transport for real meshes.
+Wire path (``base.ValueStreamReplicator``): with a codec on, the flattened
+momentum of the WHOLE tree rides ONE ``DenseCodec`` buffer per step
+(``impl="ring"`` streams it around the pipelined ppermute ring without ever
+materializing the ``(|R|, B)`` gathered stack; ``"gather"`` stacks it);
+``wire_bytes`` is its length.  ``codec="off"`` restores the raw collectives
+with modeled byte accounting — ``impl="psum"`` gives the classic pmean
+all-reduce, the memory-lean transport for real meshes.
 """
 from __future__ import annotations
 
@@ -22,38 +25,34 @@ from repro.core.replicators import base
 
 @base.register
 @dataclasses.dataclass(frozen=True)
-class FullReplicator(base.Replicator):
+class FullReplicator(base.ValueStreamReplicator):
     name = "full"
     wire: compression.WireFormat = compression.WireFormat()
-    # dense value-stream codec: fp32 | bf16 | int8 | off (raw pmean)
+    impl: str = "auto"
+    # dense value-stream codec: fp32 | bf16 | int8 | off (raw collective)
     codec: str = "fp32"
 
-    def communicate_leaf(
-        self,
-        m: jnp.ndarray,
-        *,
-        step: jnp.ndarray,
-        seed: int,
-        axes: Sequence[str],
-        sign: bool,
-    ) -> base.ReplicatorOutput:
+    def __post_init__(self):
+        self._validate_impl()
+
+    def _resolved_impl(self, sign: bool) -> str:
+        if self.impl == "auto" and self.codec == "off":
+            # the raw full-sync baseline stays the classic pmean all-reduce
+            # (memory-lean: never stacks the (|R|, numel) raw momenta) —
+            # explicit impl="gather" still selects the gathered raw mean.
+            return "psum"
+        return super()._resolved_impl(sign)
+
+    def select_leaf(self, m, *, step, seed, sign):
         del step, seed
-        q = base.maybe_sign(m, sign)
-        if self.codec != "off":
-            vals, wire = base.sync_dense_values(
-                q.reshape(-1), axes=axes, codec=self.codec, sign=sign)
-            q = vals.reshape(m.shape).astype(m.dtype)
-        else:
-            q = base.mean_over(q, tuple(axes))
-            wire = self.wire_bytes(m.size)
+        return base.maybe_sign(m.reshape(-1), sign), None
+
+    def apply_leaf(self, m, mean_vals, ctx):
+        del ctx
         # full sync transmits the momentum but does NOT consume it: this is
         # classic synchronized momentum-SGD (mean of per-replica momenta ==
         # momentum of the mean gradient).
-        return base.ReplicatorOutput(
-            q_sync=q,
-            m_residual=m,
-            wire_bytes=wire,
-        )
+        return mean_vals.reshape(m.shape).astype(m.dtype), m
 
     def wire_bytes(self, numel: int) -> int:
         return compression.full_wire_bytes(numel, self.wire)

@@ -5,17 +5,20 @@ folded with the step, so *no indices travel* -- at equal bandwidth Random ships
 2x the values of DeMo. We draw a fixed-size subset (top-k of uniform noise) so
 payload shapes stay static for XLA.
 
-Wire path: the selected values are serialized through the dense value-stream
-codec (``repro.comms.codecs.DenseCodec``) into one contiguous uint8 buffer
-per leaf, the collective gathers THAT buffer, and ``wire_bytes`` is its byte
-length.  ``codec="off"`` restores the raw f32 collective with modeled
-accounting; ``impl="psum"`` (all-reduce of raw values) requires it — there is
-no buffer on the wire to encode, so the combination codec+psum is rejected.
+Wire path (``base.ValueStreamReplicator``): with a codec on, the selected
+values of the WHOLE tree are packed into one contiguous stream and serialized
+into ONE ``DenseCodec`` buffer per step (N leaves -> 1 collective, one
+header); the collective moves that buffer -- ``impl="ring"`` streams it
+hop-by-hop through the pipelined ``ppermute`` ring, ``"gather"`` stacks the
+gathered copies -- and ``wire_bytes`` is its byte length.  ``codec="off"``
+restores the raw f32 per-leaf collectives with modeled accounting;
+``impl="psum"`` (all-reduce of raw values) requires it — there is no buffer
+on the wire to encode, so codec+psum is rejected (and ring requires the
+opposite: a buffer to forward).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,53 +36,35 @@ def _fixed_random_indices(n: int, n_sel: int, seed: int, step) -> jnp.ndarray:
 
 @base.register
 @dataclasses.dataclass(frozen=True)
-class RandomReplicator(base.Replicator):
+class RandomReplicator(base.ValueStreamReplicator):
     name = "random"
     rate: float = 1 / 16
     wire: compression.WireFormat = compression.WireFormat()
     # indices are shared -> an all-reduce of the values is legal; "gather" is
-    # the paper-faithful transport, "psum" the beyond-paper scalable one
+    # the paper-faithful transport, "ring" the streaming one (the "auto"
+    # default with a codec on), "psum" the beyond-paper scalable one
     # (raw values only: psum cannot ride the codec).
-    impl: str = "gather"
+    impl: str = "auto"
     # dense value-stream codec: fp32 | bf16 | int8 | off (raw collective)
     codec: str = "fp32"
 
     def __post_init__(self):
-        if self.impl == "psum" and self.codec != "off":
-            raise ValueError("impl='psum' all-reduces raw values; "
-                             "set codec='off' (or use impl='gather')")
+        self._validate_impl()
 
     def _n_sel(self, numel: int) -> int:
         return compression.random_n_sel(numel, self.rate)
 
-    def communicate_leaf(
-        self,
-        m: jnp.ndarray,
-        *,
-        step: jnp.ndarray,
-        seed: int,
-        axes: Sequence[str],
-        sign: bool,
-    ) -> base.ReplicatorOutput:
-        n = m.size
-        n_sel = self._n_sel(n)
+    def select_leaf(self, m, *, step, seed, sign):
         flat = m.reshape(-1)
-        idx = _fixed_random_indices(n, n_sel, seed, step)
-        vals = base.maybe_sign(flat[idx], sign)
-        vals, wire = base.sync_dense_values(
-            vals, axes=axes, impl=self.impl, codec=self.codec, sign=sign,
-            modeled_bytes=self.wire_bytes(n))
+        idx = _fixed_random_indices(m.size, self._n_sel(m.size), seed, step)
+        return base.maybe_sign(flat[idx], sign), idx
 
-        q_sync = jnp.zeros_like(flat).at[idx].set(vals).reshape(m.shape)
+    def apply_leaf(self, m, mean_vals, idx):
+        flat = m.reshape(-1)
+        q_sync = jnp.zeros_like(flat).at[idx].set(mean_vals).reshape(m.shape)
         # residual: drop the selected (local) components from the momentum.
-        m_residual = (
-            flat.at[idx].set(0.0).reshape(m.shape)
-        )
-        return base.ReplicatorOutput(
-            q_sync=q_sync,
-            m_residual=m_residual,
-            wire_bytes=wire,
-        )
+        m_residual = flat.at[idx].set(0.0).reshape(m.shape)
+        return q_sync, m_residual
 
     def wire_bytes(self, numel: int) -> int:
         return compression.masked_wire_bytes(numel, self.rate, self.wire)

@@ -2,14 +2,16 @@
 
 The offset rotates with the training step so all entries are visited every
 ``stride`` steps. Indices are derivable on every replica -> no index traffic:
-only the selected values travel, serialized through the dense value-stream
-codec (one contiguous buffer per leaf; ``wire_bytes`` is its length).
-``codec="off"`` restores the raw collective; ``impl="psum"`` requires it.
+only the selected values travel.  With a codec on the whole tree's selected
+values ride ONE ``DenseCodec`` buffer per step (``base.ValueStreamReplicator``;
+``impl="ring"`` streams it around the pipelined ppermute ring, ``"gather"``
+stacks the gathered copies); ``wire_bytes`` is that buffer's length.
+``codec="off"`` restores the raw per-leaf collectives; ``impl="psum"``
+requires it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax.numpy as jnp
 
@@ -19,46 +21,31 @@ from repro.core.replicators import base
 
 @base.register
 @dataclasses.dataclass(frozen=True)
-class StridingReplicator(base.Replicator):
+class StridingReplicator(base.ValueStreamReplicator):
     name = "striding"
     stride: int = 16          # compression rate = 1/stride
     wire: compression.WireFormat = compression.WireFormat()
-    impl: str = "gather"
+    impl: str = "auto"
     # dense value-stream codec: fp32 | bf16 | int8 | off (raw collective)
     codec: str = "fp32"
 
     def __post_init__(self):
-        if self.impl == "psum" and self.codec != "off":
-            raise ValueError("impl='psum' all-reduces raw values; "
-                             "set codec='off' (or use impl='gather')")
+        self._validate_impl()
 
-    def communicate_leaf(
-        self,
-        m: jnp.ndarray,
-        *,
-        step: jnp.ndarray,
-        seed: int,
-        axes: Sequence[str],
-        sign: bool,
-    ) -> base.ReplicatorOutput:
+    def select_leaf(self, m, *, step, seed, sign):
         del seed
-        n = m.size
-        n_sel = compression.striding_n_sel(n, self.stride)
+        n_sel = compression.striding_n_sel(m.size, self.stride)
         flat = compression.pad_to_multiple(m, self.stride)
         offset = step % self.stride
         idx = jnp.arange(n_sel) * self.stride + offset
-        vals = base.maybe_sign(flat[idx], sign)
-        vals, wire = base.sync_dense_values(
-            vals, axes=axes, impl=self.impl, codec=self.codec, sign=sign,
-            modeled_bytes=self.wire_bytes(n))
+        return base.maybe_sign(flat[idx], sign), idx
 
-        q_flat = jnp.zeros_like(flat).at[idx].set(vals)
+    def apply_leaf(self, m, mean_vals, idx):
+        n = m.size
+        flat = compression.pad_to_multiple(m, self.stride)
+        q_flat = jnp.zeros_like(flat).at[idx].set(mean_vals)
         m_flat = flat.at[idx].set(0.0)
-        return base.ReplicatorOutput(
-            q_sync=q_flat[:n].reshape(m.shape),
-            m_residual=m_flat[:n].reshape(m.shape),
-            wire_bytes=wire,
-        )
+        return (q_flat[:n].reshape(m.shape), m_flat[:n].reshape(m.shape))
 
     def wire_bytes(self, numel: int) -> int:
         return compression.masked_wire_bytes(numel, 1.0 / self.stride, self.wire)

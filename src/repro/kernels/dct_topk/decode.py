@@ -16,6 +16,13 @@ chunk are distinct by construction.
 VMEM per program (f32): payload 2 * R * TILE_C * k + coeff/out 2 * TILE_C * s
 + basis s^2 floats; R=8, k=32, TILE_C=256, s=256 -> ~2.6 MiB, within budget.
 
+The streaming ring transport (``sync_impl="ring"``) decodes one replica's
+payload per hop instead of all |R| at once: :func:`decode_accum_call` folds a
+single (C, k) payload into the dense (C, s) coefficient accumulator (same
+compare+select accumulation, no mean/iDCT), and :func:`idct_mean_call` runs
+the trailing ``(coeff / |R|) @ basis`` contraction once after the last hop
+with the same tiling as the gathered kernel.
+
 Two accumulation strategies (``matmul`` flag):
   * unrolled (default) -- the |R| * k loop emits one (TILE_C, s) compare +
     select per coefficient; fine for R <= ~8, k <= 32 (the paper's sweep).
@@ -65,6 +72,77 @@ def _decode_matmul_kernel(vals_ref, idx_ref, basis_ref, q_ref, *,
         v2, onehot, dimension_numbers=(((1,), (1,)), ((0,), (0,))))
     q_ref[...] = jnp.dot(coeff / n_rep, basis,
                          preferred_element_type=jnp.float32)
+
+
+def _accum_kernel(vals_ref, idx_ref, acc_ref, out_ref, *, k: int):
+    """Fold ONE replica's (TILE_C, k) payload into the (TILE_C, s) coefficient
+    accumulator — the per-hop decode of the streaming ring transport.  Same
+    one-hot compare+select accumulation as :func:`_decode_kernel`, same
+    within-replica j order (so ternary sign payloads fold bit-identically to
+    the gathered kernel regardless of replica arrival order), but without the
+    trailing mean/iDCT: those run ONCE after the last hop (:func:`_idct_kernel`).
+    """
+    tc, s = out_ref.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tc, s), 1)
+    coeff = acc_ref[...]
+    for j in range(k):
+        idx = idx_ref[:, j]                                 # (TC,) i32
+        val = vals_ref[:, j]                                # (TC,) f32
+        coeff = coeff + jnp.where(cols == idx[:, None], val[:, None], 0.0)
+    out_ref[...] = coeff
+
+
+def _idct_kernel(coeff_ref, basis_ref, q_ref, *, n_rep: int):
+    """Replica-mean + iDCT of a fully-accumulated coefficient tile.  Emits the
+    SAME per-tile ``(coeff / |R|) @ basis`` contraction as the tail of
+    :func:`_decode_kernel`, so the ring path's final transform is
+    op-for-op identical to the gathered kernel's."""
+    q_ref[...] = jnp.dot(coeff_ref[...] / n_rep, basis_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def decode_accum_call(vals: jnp.ndarray, idx: jnp.ndarray, acc: jnp.ndarray,
+                      tile_c: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """vals/idx: (C, k) one replica's payload; acc: (C, s). Returns acc with
+    the payload scatter-added (duplicates accumulate, like the reference)."""
+    c, k = vals.shape
+    s = acc.shape[1]
+    tile_c = min(tile_c, c)
+    assert c % tile_c == 0, (c, tile_c)
+    grid = (c // tile_c,)
+    return pl.pallas_call(
+        functools.partial(_accum_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_c, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_c, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_c, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_c, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, s), jnp.float32),
+        interpret=interpret,
+    )(vals.astype(jnp.float32), idx.astype(jnp.int32), acc)
+
+
+def idct_mean_call(coeff: jnp.ndarray, basis: jnp.ndarray, n_rep: int,
+                   tile_c: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """coeff: (C, s) accumulated coefficients; basis: (s, s). Returns the
+    replica-mean decoded chunk rows (C, s) f32."""
+    c, s = coeff.shape
+    tile_c = min(tile_c, c)
+    assert c % tile_c == 0, (c, tile_c)
+    grid = (c // tile_c,)
+    return pl.pallas_call(
+        functools.partial(_idct_kernel, n_rep=n_rep),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_c, s), lambda i: (i, 0)),
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_c, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, s), jnp.float32),
+        interpret=interpret,
+    )(coeff.astype(jnp.float32), basis)
 
 
 # one-hot tensor VMEM budget for the matmul variant (f32 elements)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.core import dct
 from repro.kernels.dct_topk.dct_topk import dct_topk_call
-from repro.kernels.dct_topk.decode import decode_topk_call
+from repro.kernels.dct_topk.decode import (decode_accum_call,
+                                           decode_topk_call, idct_mean_call)
 
 
 def _tile_rows(c: int, cap: int = 256) -> int:
@@ -72,3 +73,34 @@ def decode_topk_gathered(g_vals: jnp.ndarray, g_idx: jnp.ndarray,
     return decode_topk_call(g_vals, g_idx, basis,
                             tile_c=_tile_rows(g_vals.shape[1]),
                             interpret=interpret, matmul=matmul)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_topk_accum(vals: jnp.ndarray, idx: jnp.ndarray, acc: jnp.ndarray,
+                      interpret: bool = False):
+    """Accumulate-into decode for the streaming ring: fold ONE replica's
+    (C, k) payload into the dense (C, s) coefficient accumulator.
+
+    The per-hop work of ``sync_impl="ring"``: each arriving wire buffer is
+    decoded and scatter-added here while the in-flight copy rides the next
+    ppermute hop.  After the last hop, :func:`idct_mean` (or a plain
+    ``(acc / |R|) @ basis``) produces the replica-mean decoded rows — between
+    them exactly what one :func:`decode_topk_gathered` launch computes from
+    the full (R, C, k) stack, without ever materializing it.
+    """
+    return decode_accum_call(vals, idx, acc, tile_c=_tile_rows(vals.shape[0]),
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size", "n_rep",
+                                             "interpret"))
+def idct_mean(acc: jnp.ndarray, chunk_size: int, n_rep: int,
+              interpret: bool = False):
+    """Replica-mean + iDCT of fully-accumulated coefficients: (C, s) -> (C, s).
+
+    The ring transport's final transform; tiled identically to the gathered
+    decode kernel so the two paths run the same per-tile contraction.
+    """
+    basis = dct.dct_basis(chunk_size, jnp.float32)
+    return idct_mean_call(acc, basis, n_rep, tile_c=_tile_rows(acc.shape[0]),
+                          interpret=interpret)

@@ -23,6 +23,11 @@ def main():
                              "pallas_interpret"],
                     help="DeMo extractor: packed tree-level (one fused call "
                          "+ one collective per step) vs per-leaf reference")
+    ap.add_argument("--sync-impl", default="auto",
+                    choices=["auto", "gather", "ring", "psum"],
+                    help="replication-sync transport: streaming ppermute "
+                         "ring (pipelined gather+decode, the auto default "
+                         "with a codec on) vs all_gather vs raw all-reduce")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route model AND extractor hot paths through the "
                          "fused Pallas kernels")
@@ -98,10 +103,12 @@ def main():
         print(f"comm planner [{args.topology}, budget "
               f"{args.comm_budget * 1e3:g} ms/step]: {comm_plan.describe()}")
         flex = dataclasses.replace(comm_plan.flex,
-                                   extract_impl=args.extract_impl)
+                                   extract_impl=args.extract_impl,
+                                   sync_impl=args.sync_impl)
     else:
         flex = FlexConfig(scheme=args.scheme, rate=args.rate,
-                          extract_impl=args.extract_impl)
+                          extract_impl=args.extract_impl,
+                          sync_impl=args.sync_impl)
     opt = make_optimizer(args.optimizer,
                          schedules.warmup_cosine(args.lr, args.steps),
                          **({} if args.optimizer == "adamw" else

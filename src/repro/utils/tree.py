@@ -33,10 +33,19 @@ def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
     )
 
 
-def _path_seed(path, salt: int) -> int:
-    """Deterministic 31-bit seed from a pytree key path + salt."""
+def path_seed(path, salt: int) -> int:
+    """Deterministic 31-bit seed from a pytree key path + salt.
+
+    Identical across replicas/processes (it depends only on the pytree
+    structure), so seeded replication schemes can reproduce index sets
+    without transmitting them — the tree-level value-stream transport derives
+    the SAME per-leaf seeds as :func:`tree_map_with_path_rng` through this.
+    """
     s = jax.tree_util.keystr(path).encode() + salt.to_bytes(8, "little", signed=False)
     return int.from_bytes(hashlib.blake2s(s, digest_size=4).digest(), "little") & 0x7FFFFFFF
+
+
+_path_seed = path_seed
 
 
 def tree_map_with_path_rng(fn, tree, *rest, salt: int = 0):

@@ -99,19 +99,20 @@ def test_predict_demo_uses_actual_codec_bytes():
 
 
 def test_predict_other_schemes_codec_sizing():
-    """Dense schemes are priced with the SAME per-leaf DenseCodec sizing the
-    replicators serialize with: amplitude bytes plus one header per leaf."""
+    """Dense schemes are priced with the SAME one-buffer-per-TREE DenseCodec
+    sizing the replicators serialize with: the per-leaf selected values laid
+    end to end behind a single 24 B header."""
     params = _params()
     numels = planner.leaf_numels(params)
     numel = sum(numels)
     full = planner.predict(FlexConfig(scheme="full"), params, "wan-10g", 2)
-    assert full.wire_bytes == sum(codecs.dense_wire_bytes(n) for n in numels)
-    assert full.wire_bytes == numel * 4 + len(numels) * codecs.HEADER_BYTES
+    assert full.wire_bytes == codecs.dense_wire_bytes(numel)
+    assert full.wire_bytes == numel * 4 + codecs.HEADER_BYTES
     assert full.quality == 1.0
     rnd = planner.predict(FlexConfig(scheme="random", rate=1 / 4), params,
                           "wan-10g", 2)
-    assert rnd.wire_bytes == sum(
-        codecs.dense_wire_bytes(max(1, round(n / 4))) for n in numels)
+    assert rnd.wire_bytes == codecs.dense_wire_bytes(
+        sum(max(1, round(n / 4)) for n in numels))
     none = planner.predict(FlexConfig(scheme="none"), params, "wan-10g", 2)
     assert none.wire_bytes == 0 and none.comm_seconds == 0.0
     # diloco is priced at its sync-step BURST (budget_s is a hard per-step

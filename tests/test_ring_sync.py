@@ -1,0 +1,532 @@
+"""Streaming ring collectives (sync_impl="ring"): ring-vs-gather parity on
+every scheme x codec x |R|, the snake hop schedule, the accumulate-into
+decode kernel, one-buffer-per-tree dense packing, hostile-buffer validation
+of the packed dense header, and the pipelined-ring cost model.
+
+Replicas are simulated with vmap over a named axis (no devices needed), so
+the whole suite runs on a single-CPU host; the shard_map test at the bottom
+additionally exercises the real collective lowering and is skipped unless
+the process sees >= 8 devices (the CI ``multidevice`` job runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import codecs, planner, topology
+from repro.core import compression, packing
+from repro.core.flexdemo import FlexConfig, communicate_tree
+from repro.core.replicators import base as rbase
+from repro.core.replicators import make_replicator
+
+SCHEMES = ("demo", "random", "striding", "full")
+AMPS = ("fp32", "bf16", "int8")
+_VALUE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "emb": jnp.asarray(rng.randn(300).astype(np.float32)),
+        "blk": {
+            "w": jnp.asarray(rng.randn(37, 11).astype(np.float32)),
+            "scalar": jnp.asarray(np.float32(rng.randn())),
+        },
+    }
+
+
+def _stacked(n_rep, seed=0):
+    rng = np.random.RandomState(seed)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.asarray(rng.randn(n_rep, *x.shape).astype(np.float32)),
+        _tree())
+
+
+def _max_err(a, b):
+    return max(float(jnp.abs(x - y).max()) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _flex(scheme, **kw):
+    if scheme == "demo":
+        return FlexConfig(scheme="demo", rate=1 / 8, **kw)
+    return FlexConfig(scheme=scheme, rate=1 / 8, **kw)
+
+
+def _run_vmap(flex, stacked, sign=True, axes=("r",)):
+    rep = flex.make()
+    wire = []
+
+    def f(m):
+        q, res, w = communicate_tree(rep, m, step=jnp.asarray(0), axes=axes,
+                                     sign=sign)
+        wire.append(w)
+        return q, res
+
+    q, res = jax.vmap(f, axis_name=axes[0])(stacked)
+    return q, res, wire[0]
+
+
+# ---------------------------------------------------------------------------
+# the parity suite: ring == gather, bit for bit
+
+
+@pytest.mark.parametrize("n_rep", [2, 4, 8])
+@pytest.mark.parametrize("amp", AMPS)
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_ring_bit_identical_to_gather(scheme, amp, n_rep):
+    """Acceptance: sync_impl="ring" reproduces "gather" exactly on every
+    scheme x codec x |R| in {2, 4, 8}.  Sign-compressed payloads (the
+    paper's default) decode to ternary values whose fp32 sums are exact in
+    any accumulation order, so the rotated ring fold is bit-identical."""
+    stacked = _stacked(n_rep, seed=n_rep)
+    kw = dict(codec=amp, value_bytes=_VALUE_BYTES[amp])
+    qg, rg, wg = _run_vmap(_flex(scheme, sync_impl="gather", **kw), stacked)
+    qr, rr, wr = _run_vmap(_flex(scheme, sync_impl="ring", **kw), stacked)
+    assert _max_err(qr, qg) == 0.0
+    assert _max_err(rr, rg) == 0.0
+    # the transport never changes the buffer: identical wire bytes
+    assert wr == wg
+    # Q identical on every member of R (params stay in sync under ring)
+    for leaf in jax.tree_util.tree_leaves(qr):
+        for i in range(1, n_rep):
+            np.testing.assert_array_equal(np.asarray(leaf[i]),
+                                          np.asarray(leaf[0]))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_ring_close_to_gather_unsigned(scheme):
+    """Without sign compression the ring's rotated fold can differ from the
+    canonical gather order by float addition bracketing only — ulp-level.
+    The hazardous (explicitly requested) combination warns."""
+    stacked = _stacked(4, seed=17)
+    qg, rg, _ = _run_vmap(_flex(scheme, sync_impl="gather"), stacked,
+                          sign=False)
+    with pytest.warns(UserWarning, match="ring order|drift"):
+        qr, rr, _ = _run_vmap(_flex(scheme, sync_impl="ring"), stacked,
+                              sign=False)
+    assert _max_err(qr, qg) < 1e-5
+    assert _max_err(rr, rg) < 1e-5
+
+
+def test_demo_per_leaf_ring_parity():
+    """The per-leaf reference transport honours ring too: its distinct
+    decode-accumulate branch (one codec per LEAF) must match gather bit for
+    bit on every codec, like the packed tree path."""
+    stacked = _stacked(4, seed=51)
+    for amp in AMPS:
+        kw = dict(codec=amp, value_bytes=_VALUE_BYTES[amp],
+                  extract_impl="per_leaf")
+        qg, rg, wg = _run_vmap(_flex("demo", sync_impl="gather", **kw),
+                               stacked)
+        qr, rr, wr = _run_vmap(_flex("demo", sync_impl="ring", **kw),
+                               stacked)
+        assert _max_err(qr, qg) == 0.0, amp
+        assert _max_err(rr, rg) == 0.0, amp
+        assert wr == wg
+
+
+def test_ring_single_replica_is_identity():
+    """axes=(): ring degenerates to the |R| = 1 codec round-trip, exactly."""
+    tree = _tree(3)
+    for scheme in SCHEMES:
+        (qg, rg, wg), (qr, rr, wr) = [
+            communicate_tree(_flex(scheme, sync_impl=s).make(), tree,
+                             step=jnp.asarray(0), axes=(), sign=True)
+            for s in ("gather", "ring")]
+        assert _max_err(qr, qg) == 0.0
+        assert _max_err(rr, rg) == 0.0
+        assert wr == wg
+
+
+def test_ring_multi_axis_lattice():
+    """Nested replica axes (2 x 3): the snake schedule covers the full
+    lattice, so ring == gather over BOTH axes."""
+    rng = np.random.RandomState(5)
+    stacked = {"w": jnp.asarray(rng.randn(2, 3, 96).astype(np.float32))}
+
+    def run(sync):
+        rep = _flex("demo", sync_impl=sync, extract_impl="packed").make()
+
+        def inner(m):
+            q, res, _ = communicate_tree(rep, m, step=jnp.asarray(0),
+                                         axes=("a", "b"), sign=True)
+            return q, res
+
+        return jax.vmap(jax.vmap(inner, axis_name="b"), axis_name="a")(stacked)
+
+    qg, rg = run("gather")
+    qr, rr = run("ring")
+    assert _max_err(qr, qg) == 0.0
+    assert _max_err(rr, rg) == 0.0
+
+
+@pytest.mark.parametrize("sizes", [(2,), (5,), (2, 3), (2, 3, 2)])
+def test_ring_schedule_covers_lattice(sizes):
+    """The hop schedule visits every replica's buffer exactly once on every
+    device: |hops| = prod(sizes) - 1 and the replayed shift sequence decodes
+    the full lattice."""
+    axes = tuple(f"ax{i}" for i in range(len(sizes)))
+    sched = rbase._ring_schedule(axes, dict(zip(axes, sizes)))
+    assert len(sched) == int(np.prod(sizes)) - 1
+    # replay: held[device] = source coordinate currently in flight
+    held = np.indices(sizes).reshape(len(sizes), -1).T
+    seen = [{tuple(c)} for c in held]
+    for ax in sched:
+        d = axes.index(ax)
+        grid = held.reshape(*sizes, len(sizes))
+        grid = np.roll(grid, 1, axis=d)        # i -> i + 1 around that ring
+        held = grid.reshape(-1, len(sizes))
+        for dev, c in enumerate(held):
+            seen[dev].add(tuple(c))
+    full = set(map(tuple, np.indices(sizes).reshape(len(sizes), -1).T))
+    assert all(s == full for s in seen)
+
+
+def test_ring_replica_count_static():
+    assert rbase.replica_count(()) == 1
+
+    def f(x):
+        n = rbase.replica_count(("r",))
+        assert isinstance(n, int) and n == 4
+        return x * n
+
+    jax.vmap(f, axis_name="r")(jnp.ones((4,)))
+
+
+# ---------------------------------------------------------------------------
+# the accumulate-into kernel path
+
+
+def test_pallas_ring_matches_gather_and_reference():
+    """extract_impl="pallas_interpret" + ring: the accumulate-into kernel +
+    tiled iDCT reproduce both the gathered kernel and the jnp reference."""
+    stacked = _stacked(4, seed=23)
+    outs = {}
+    for impl, sync in (("pallas_interpret", "ring"),
+                       ("pallas_interpret", "gather"),
+                       ("packed", "ring")):
+        outs[(impl, sync)] = _run_vmap(
+            _flex("demo", sync_impl=sync, extract_impl=impl), stacked)
+    q_ref, r_ref, _ = outs[("packed", "ring")]
+    for key, (q, r, _) in outs.items():
+        assert _max_err(q, q_ref) < 1e-5, key
+        assert _max_err(r, r_ref) < 1e-5, key
+    # kernel ring vs kernel gather: bit identical (sign payloads)
+    assert _max_err(outs[("pallas_interpret", "ring")][0],
+                    outs[("pallas_interpret", "gather")][0]) == 0.0
+
+
+def test_decode_accum_kernel_matches_gathered_decode():
+    """Folding |R| payloads one hop at a time through decode_topk_accum and
+    finishing with idct_mean == one decode_topk_gathered launch."""
+    from repro.kernels.dct_topk.ops import (decode_topk_accum,
+                                            decode_topk_gathered, idct_mean)
+
+    n_rep, c, s, k = 5, 32, 64, 8
+    rng = np.random.RandomState(0)
+    g_vals = jnp.asarray(rng.randn(n_rep, c, k).astype(np.float32))
+    g_idx = jnp.asarray(rng.randint(0, s, (n_rep, c, k)).astype(np.int32))
+    acc = jnp.zeros((c, s), jnp.float32)
+    for r in range(n_rep):
+        acc = decode_topk_accum(g_vals[r], g_idx[r], acc, interpret=True)
+    ring = idct_mean(acc, s, n_rep, interpret=True)
+    gathered = decode_topk_gathered(g_vals, g_idx, s, interpret=True)
+    ref = compression.decode_gathered_ref(g_vals, g_idx, s)
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(gathered),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# one-buffer-per-tree dense packing
+
+
+@pytest.mark.parametrize("sizes", [(7,), (1, 1), (5, 129, 3), (256, 300)])
+def test_value_stream_layout_roundtrip(sizes):
+    rng = np.random.RandomState(sum(sizes))
+    parts = [jnp.asarray(rng.randn(s).astype(np.float32)) for s in sizes]
+    layout = packing.plan_values(sizes)
+    assert layout.n_total == sum(sizes)
+    stream = packing.pack_values(parts, layout)
+    back = packing.unpack_values(stream, layout)
+    for p, b in zip(parts, back):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(b))
+    with pytest.raises(ValueError):
+        packing.plan_values(())
+    with pytest.raises(ValueError):
+        packing.plan_values((4, 0))
+
+
+@pytest.mark.parametrize("scheme", ["random", "striding", "full"])
+def test_dense_schemes_ship_one_buffer_per_tree(scheme):
+    """N leaves -> ONE DenseCodec buffer: the reported bytes are one header
+    plus the summed amplitude bytes, the planner predicts them exactly, and
+    the decoded result matches the raw (codec="off") leaf-wise reference bit
+    for bit under the fp32 codec."""
+    tree = _tree(2)
+    step = jnp.asarray(0)
+    flex = _flex(scheme)
+    q1, r1, w1 = communicate_tree(flex.make(), tree, step=step, axes=(),
+                                  sign=True)
+    q0, r0, w0 = communicate_tree(_flex(scheme, codec="off").make(), tree,
+                                  step=step, axes=(), sign=True)
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0
+    numels = [leaf.size for leaf in jax.tree_util.tree_leaves(tree)]
+    if scheme == "random":
+        n_sel = sum(compression.random_n_sel(n, 1 / 8) for n in numels)
+    elif scheme == "striding":
+        n_sel = sum(compression.striding_n_sel(n, 8) for n in numels)
+    else:
+        n_sel = sum(numels)
+    assert w1 == codecs.dense_wire_bytes(n_sel)
+    assert w1 == planner.scheme_wire_bytes(flex, numels)
+    # exactly ONE 24 B header: (n_leaves - 1) fewer than the per-leaf layout
+    per_leaf = (sum(codecs.dense_wire_bytes(compression.random_n_sel(n, 1 / 8)
+                                            if scheme == "random" else
+                                            compression.striding_n_sel(n, 8)
+                                            if scheme == "striding" else n)
+                    for n in numels))
+    assert per_leaf - w1 == (len(numels) - 1) * codecs.HEADER_BYTES
+
+
+@pytest.mark.parametrize("amp", AMPS)
+@pytest.mark.parametrize("scheme", ["random", "striding", "full"])
+def test_dense_tree_roundtrip_sweep(scheme, amp):
+    """One-buffer round trip per codec: sign payloads exact under every amp,
+    and the selected index sets match the leaf-wise path (same path seeds)."""
+    tree = _tree(4)
+    step = jnp.asarray(0)
+    on = _flex(scheme, codec=amp, value_bytes=_VALUE_BYTES[amp]).make()
+    off = _flex(scheme, codec="off").make()
+    q1, r1, _ = communicate_tree(on, tree, step=step, axes=(), sign=True)
+    q0, r0, _ = communicate_tree(off, tree, step=step, axes=(), sign=True)
+    assert _max_err(q1, q0) == 0.0          # ternary: exact under every amp
+    assert _max_err(r1, r0) == 0.0
+    # unsigned int8 quantizes per 256-group: bounded, not exact
+    q1, _, _ = communicate_tree(on, tree, step=step, axes=(), sign=False)
+    q0, _, _ = communicate_tree(off, tree, step=step, axes=(), sign=False)
+    scale = max(float(jnp.abs(leaf).max())
+                for leaf in jax.tree_util.tree_leaves(tree))
+    assert _max_err(q1, q0) <= (0.0 if amp == "fp32" else
+                                0.01 * scale if amp == "bf16" else
+                                scale / 127.0)
+
+
+def test_diloco_outer_average_one_buffer():
+    """DiLoCo's outer step packs the whole param tree into one DenseCodec
+    buffer; on sync steps the codec'd (ring) average == the raw pmean."""
+    R = 4
+    stacked = _stacked(R, seed=9)
+    period = 8
+    sync_step = jnp.asarray(period - 1)
+
+    def run(codec, impl):
+        rep = make_replicator("diloco", period=period, codec=codec, impl=impl)
+
+        def f(p):
+            return rep.postprocess_params(p, step=sync_step, axes=("r",))
+
+        return jax.vmap(f, axis_name="r")(stacked)
+
+    ring = run("fp32", "ring")
+    gth = run("fp32", "gather")
+    raw = run("off", "psum")
+    # params are raw floats (never ternary), so the explicitly-requested
+    # ring's rotated fold is ulp-close, not bit-identical — which is exactly
+    # why "auto" resolves the unsigned outer average to gather.
+    assert _max_err(ring, gth) < 1e-6
+    assert _max_err(gth, raw) < 1e-6
+    auto = run("fp32", "auto")
+    assert _max_err(auto, gth) == 0.0
+    # every member of R holds the identical average after a gathered sync
+    for leaf in jax.tree_util.tree_leaves(gth):
+        for i in range(1, R):
+            np.testing.assert_array_equal(np.asarray(leaf[i]),
+                                          np.asarray(leaf[0]))
+    # off the sync step, params pass through untouched
+    rep = make_replicator("diloco", period=period)
+
+    def g(p):
+        return rep.postprocess_params(p, step=jnp.asarray(0), axes=("r",))
+
+    passthrough = jax.vmap(g, axis_name="r")(stacked)
+    assert _max_err(passthrough, stacked) == 0.0
+    # and the amortized tree accounting reports the one-buffer burst / period
+    _, _, wire = communicate_tree(rep, _tree(9), step=jnp.asarray(0),
+                                  axes=(), sign=True)
+    total = sum(leaf.size for leaf in jax.tree_util.tree_leaves(_tree(9)))
+    assert wire == codecs.dense_wire_bytes(total) // period
+
+
+def test_hostile_packed_dense_header():
+    """The one-buffer dense stream stays a valid self-describing wire object:
+    decode_buffer round-trips it, and tampering (truncation, padding, a
+    nonzero k, a bogus scale-group) raises instead of mis-decoding."""
+    rng = np.random.RandomState(0)
+    stream = jnp.asarray(rng.randn(333).astype(np.float32))
+    cod = codecs.DenseCodec(stream.size, "int8")
+    buf = np.asarray(cod.encode(stream), dtype=np.uint8)
+    vals, idx, h = codecs.decode_buffer(buf)
+    assert idx is None and h.dense and h.n_rows == 333
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(stream),
+                               atol=float(jnp.abs(stream).max()) / 127.0)
+    with pytest.raises(ValueError):
+        codecs.decode_buffer(buf[:-1])              # truncated
+    with pytest.raises(ValueError):
+        codecs.decode_buffer(np.concatenate([buf, buf[:4]]))  # padded
+    bad = buf.copy()
+    bad[16] = 7                                     # k must be 0 for dense
+    with pytest.raises(ValueError):
+        codecs.decode_buffer(bad)
+    bad = buf.copy()
+    bad[12:16] = 0                                  # zero scale group
+    with pytest.raises(ValueError):
+        codecs.decode_buffer(bad)
+
+
+def test_demo_psum_tree_syncs_signed_component():
+    """codec="off" + psum on the packed tree path must pmean the SIGNED
+    decoded component — identical to the leaf-wise psum reference and to the
+    gathered raw transport (the decode is linear in the payload)."""
+    stacked = _stacked(4, seed=31)
+    kw = dict(codec="off", sync_impl="psum")
+    q_t, r_t, _ = _run_vmap(_flex("demo", extract_impl="packed", **kw),
+                            stacked)
+    q_l, r_l, _ = _run_vmap(_flex("demo", extract_impl="per_leaf", **kw),
+                            stacked)
+    q_g, r_g, _ = _run_vmap(_flex("demo", extract_impl="packed", codec="off",
+                                  sync_impl="gather"), stacked)
+    assert _max_err(q_t, q_l) < 1e-5
+    assert _max_err(r_t, r_l) < 1e-5
+    assert _max_err(q_t, q_g) < 1e-5
+    # discriminator: syncing the UNSIGNED q_rows by mistake is not a small
+    # perturbation — the signed and unsigned averages genuinely differ
+    q_u, _, _ = _run_vmap(_flex("demo", extract_impl="packed", **kw),
+                          stacked, sign=False)
+    assert _max_err(q_t, q_u) > 1e-2
+
+
+def test_full_raw_baseline_keeps_pmean():
+    """full + codec="off" under the auto transport stays the classic pmean
+    all-reduce (memory-lean: no (|R|, numel) raw stack), matching the
+    pre-ring behaviour; explicit gather still selects the gathered mean."""
+    rep = make_replicator("full", codec="off")
+    assert rep._resolved_impl(True) == "psum"
+    assert rep._resolved_impl(False) == "psum"
+    assert make_replicator("full", codec="off",
+                           impl="gather")._resolved_impl(True) == "gather"
+    # codec on keeps the streaming default
+    assert make_replicator("full")._resolved_impl(True) == "ring"
+    stacked = _stacked(4, seed=41)
+    q0, r0, _ = _run_vmap(_flex("full", codec="off"), stacked)
+    q1, r1, _ = _run_vmap(_flex("full"), stacked)
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# validation: ring x codec="off" is rejected with the escape hatch named
+
+
+def test_ring_requires_codec():
+    with pytest.raises(ValueError, match="ring.*codec|codec.*ring"):
+        FlexConfig(scheme="demo", sync_impl="ring", codec="off")
+    with pytest.raises(ValueError, match="gather"):
+        FlexConfig(scheme="random", sync_impl="ring", codec="off")
+    # replicator-level mirror of the same contract
+    with pytest.raises(ValueError, match="ring"):
+        make_replicator("random", impl="ring", codec="off")
+    with pytest.raises(ValueError, match="ring"):
+        make_replicator("demo", sync_impl="ring", codec="off")
+    # auto resolves ring only when a codec is on
+    assert FlexConfig(scheme="demo").resolve_sync_impl() == "ring"
+    assert FlexConfig(scheme="demo", codec="off").resolve_sync_impl() \
+        == "gather"
+    assert rbase.resolve_sync_impl("auto", "off") == "gather"
+    assert rbase.resolve_sync_impl("auto", "int8") == "ring"
+    with pytest.raises(ValueError, match="sync_impl"):
+        rbase.resolve_sync_impl("carrier-pigeon", "fp32")
+
+
+# ---------------------------------------------------------------------------
+# pipelined-ring cost model
+
+
+def test_ring_pipelined_cost_model():
+    """The pipelined price is <= the serialized ring on every profile (the
+    latency term is paid once, not per hop) and collapses to zero without a
+    collective; predict() reports both."""
+    for profile in ("nvlink", "ethernet-100g", "wan-10g"):
+        link = topology.get_topology(profile).inter_node
+        for b in (1 << 10, 1 << 20):
+            for r in (2, 4, 8):
+                pipe = topology.ring_pipelined_seconds(b, r, link)
+                serial = topology.allgather_seconds(b, r, link)
+                assert 0 < pipe <= serial
+        assert topology.ring_pipelined_seconds(1 << 20, 1, link) == 0.0
+        assert topology.ring_pipelined_seconds(0, 8, link) == 0.0
+    # latency amortization: on the WAN the serialized model pays (R-1) RTTs,
+    # the pipelined one a single pipeline fill
+    wan = topology.get_topology("wan-10g").inter_node
+    assert (topology.allgather_seconds(1, 8, wan)
+            >= 7 * wan.latency_s)
+    assert topology.ring_pipelined_seconds(1, 8, wan) < 2 * wan.latency_s
+    # decode overlap: when decode dominates transfer, stages cost decode
+    ov = topology.CodecOverhead(encode_s_per_byte=0.0,
+                                decode_s_per_byte=1e-6)
+    t = topology.ring_pipelined_seconds(1000, 4, wan, overhead=ov)
+    assert t == pytest.approx(wan.latency_s + 4 * 1e-3, rel=1e-6)
+    # the planner carries both prices
+    params = [jax.ShapeDtypeStruct((4096,), jnp.float32)]
+    plan = planner.predict(FlexConfig(scheme="demo", chunk_size=64, topk=4),
+                           params, "wan-10g", 8)
+    assert 0 < plan.comm_seconds_pipelined <= plan.comm_seconds
+    assert "ring" in plan.describe()
+
+
+# ---------------------------------------------------------------------------
+# real collective lowering (the CI multidevice job)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (run under XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("scheme", ["demo", "random", "full"])
+def test_ring_matches_gather_under_shard_map(scheme):
+    """shard_map on a real 8-device mesh: the ppermute ring lowering must
+    reproduce the all_gather transport bit for bit (sign payloads)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.utils import compat
+
+    mesh = compat.make_mesh((8,), ("r",))
+    rng = np.random.RandomState(3)
+    stacked = {"w": jnp.asarray(rng.randn(8, 64, 5).astype(np.float32)),
+               "b": jnp.asarray(rng.randn(8, 130).astype(np.float32))}
+
+    def run(sync):
+        rep = _flex(scheme, sync_impl=sync).make()
+
+        def f(m):
+            q, res, _ = communicate_tree(
+                rep, jax.tree_util.tree_map(lambda x: x[0], m),
+                step=jnp.asarray(0), axes=("r",), sign=True)
+            return (jax.tree_util.tree_map(lambda x: x[None], q),
+                    jax.tree_util.tree_map(lambda x: x[None], res))
+
+        spec = jax.tree_util.tree_map(lambda _: P("r"), stacked)
+        return compat.shard_map(f, mesh=mesh, in_specs=(spec,),
+                                out_specs=(spec, spec))(stacked)
+
+    qg, rg = jax.jit(lambda: run("gather"))()
+    qr, rr = jax.jit(lambda: run("ring"))()
+    assert _max_err(qr, qg) == 0.0
+    assert _max_err(rr, rg) == 0.0
+    # Q identical across the replica group
+    for leaf in jax.tree_util.tree_leaves(qr):
+        arr = np.asarray(leaf)
+        for i in range(1, 8):
+            np.testing.assert_array_equal(arr[i], arr[0])
