@@ -1,0 +1,36 @@
+"""Convergence-harness liveness bench (``run.py --only convergence``).
+
+A short run of both paper domains through repro.experiments.convergence on a
+1x1 mesh (the bench process keeps a single device; the full 2x4 runs live in
+scripts/run_convergence.py): the AdamW full-sync reference vs the flexdemo
+row, reporting the parity ratio and the (static) wire bytes."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.experiments import convergence as C
+from repro.launch.mesh import make_mesh
+
+N_STEPS = 8
+
+
+def run():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rows = []
+    for domain in ("lm", "vit"):
+        wl = dataclasses.replace(C.WORKLOADS[domain], steps=N_STEPS,
+                                 eval_every=N_STEPS // 2, eval_batches=1)
+        by = {}
+        for name in ("adamw-full-sync", "demo-fp32-sign"):
+            s = next(x for x in C.SETTINGS if x.name == name)
+            by[name] = C.run_setting(wl, s, mesh, log=lambda *_: None)
+        ref, demo = by["adamw-full-sync"], by["demo-fp32-sign"]
+        rows.append({
+            "setting": domain,
+            "final_val_ref": ref["final_val"],
+            "final_val_demo": demo["final_val"],
+            "parity_ratio": demo["final_val"] / ref["final_val"],
+            "wire_bytes_demo": demo["wire_bytes_per_step"],
+            "wire_bytes_ref": ref["wire_bytes_per_step"],
+        })
+    return rows

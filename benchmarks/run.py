@@ -67,9 +67,9 @@ def main() -> None:
                         "derived": derived, "rows": rows})
 
     from benchmarks import (bench_chunk, bench_comm, bench_comms,
-                            bench_dtype, bench_encdec, bench_kernels,
-                            bench_packed, bench_replicators, bench_scaling,
-                            bench_sign, bench_topk, roofline)
+                            bench_convergence, bench_dtype, bench_encdec,
+                            bench_kernels, bench_packed, bench_replicators,
+                            bench_scaling, bench_sign, bench_topk, roofline)
 
     bench("fig1_replicators_sgd_vs_adamw",
           lambda: bench_replicators.run(
@@ -124,6 +124,12 @@ def main() -> None:
                 f"dec={fp32['decode_MBps']:.0f}MBps")
 
     bench("comms", bench_comms.run, _comms_derived)
+
+    # liveness for the convergence-parity harness (the gated 8-device runs
+    # live in scripts/run_convergence.py; see scripts/check_convergence.py)
+    bench("convergence", bench_convergence.run,
+          lambda r: "parity=" + ",".join(
+              f"{x['setting']}:{x['parity_ratio']:.2f}" for x in r))
 
     def _roofline():
         rows = roofline.run()

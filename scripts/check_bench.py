@@ -76,10 +76,13 @@ def compare_rows(name: str, current: list, baseline: list,
         for field, bval in brow.items():
             cval = crow.get(field)
             if field.startswith(EXACT_PREFIX):
-                if bval is None or cval is None:
+                if not isinstance(bval, (int, float)) \
+                        or not isinstance(cval, (int, float)):
                     if bval != cval:
                         failures.append(
-                            f"{name}[{key}].{field}: {bval!r} -> {cval!r}")
+                            f"{name}[{key}].{field}: {bval!r} -> {cval!r} "
+                            "(field absent or non-numeric in the current "
+                            "run)")
                 elif int(cval) != int(bval):
                     failures.append(
                         f"{name}[{key}].{field}: wire bytes changed "
@@ -103,13 +106,29 @@ def compare_rows(name: str, current: list, baseline: list,
     return failures
 
 
+class CheckError(Exception):
+    """Malformed input (usage error, exit 2) — never a traceback."""
+
+
 def load_current(path: str) -> dict:
     """{bench name: rows} from a ``run.py --json`` summary (or a bare row
     set saved by ``run.py`` under experiments/bench/, keyed by filename)."""
-    with open(path) as f:
-        data = json.load(f)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        raise CheckError(f"{path}: cannot read ({e})")
+    except json.JSONDecodeError as e:
+        raise CheckError(f"{path}: not valid JSON ({e})")
     if isinstance(data, dict) and "results" in data:
-        return {r["name"]: r["rows"] for r in data["results"]}
+        out = {}
+        for i, r in enumerate(data["results"]):
+            if not isinstance(r, dict) or "name" not in r or "rows" not in r:
+                raise CheckError(
+                    f"{path}: results[{i}] lacks the 'name'/'rows' fields a "
+                    "benchmarks/run.py --json summary always has")
+            out[r["name"]] = r["rows"]
+        return out
     name = os.path.splitext(os.path.basename(path))[0]
     return {name: data}
 
@@ -133,8 +152,17 @@ def run_check(current_path: str, baseline_dir: str, throughput_tol: float,
         if not os.path.exists(bpath):
             print(f"note: no baseline for {name!r} ({bpath}); skipping")
             continue
-        with open(bpath) as f:
-            baseline = json.load(f)
+        try:
+            with open(bpath) as f:
+                baseline = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"{name}: baseline {bpath} unreadable ({e}); "
+                            "re-create it with --update")
+            continue
+        if not isinstance(baseline, list):
+            failures.append(f"{name}: baseline {bpath} is not a row list; "
+                            "re-create it with --update")
+            continue
         failures += compare_rows(name, rows, baseline, throughput_tol,
                                  err_tol)
         checked += 1
@@ -160,8 +188,12 @@ def main(argv=None) -> int:
     if not os.path.exists(args.current):
         print(f"error: {args.current} not found", file=sys.stderr)
         return 2
-    failures = run_check(args.current, args.baseline_dir,
-                         args.throughput_tol, args.err_tol, args.update)
+    try:
+        failures = run_check(args.current, args.baseline_dir,
+                             args.throughput_tol, args.err_tol, args.update)
+    except CheckError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     if failures:
         print(f"PERF REGRESSION: {len(failures)} check(s) failed")
         for f in failures:

@@ -1,0 +1,269 @@
+#!/usr/bin/env python
+"""Convergence gate: compare fresh ``run_convergence.py`` trajectories
+against the committed baselines under ``experiments/convergence/``.
+
+Three classes of check, per domain file (rows matched by ``setting``):
+
+  * exact      -- rows whose BASELINE marks ``deterministic`` (fp32
+                  amplitudes + sign payloads: the ternary ring fold is exact
+                  in any order) must reproduce the committed train/val
+                  trajectory on the overlapping step prefix.  ``--exact-tol``
+                  (relative, default 0 = bit-exact) exists solely to absorb
+                  cross-machine float codegen differences on CI runners.
+                  ``wire_bytes_per_step`` is exact for EVERY row, always —
+                  wire formats are static functions of shapes and codecs.
+  * tolerance  -- when the current run is full-length, every row's final
+                  train/val loss must stay within ``--loss-tol`` (relative)
+                  of its baseline, and its final-loss ratio vs the AdamW
+                  full-sync reference must not drift by more than
+                  ``--loss-tol`` either.
+  * parity     -- the paper-parity acceptance: every ``flexdemo`` row must
+                  satisfy ``final_val <= (1 + eps) * final_val(reference)``.
+                  Checked on the COMMITTED baselines every run (a refresh
+                  that regresses parity cannot ship) and on the current run
+                  when it is full-length.
+
+A ``--smoke`` current run (shorter step budget) is a strict PREFIX of the
+full trajectory (constant lr, (seed, step)-pure streams), so the exact
+checks still bite; the final-loss checks only apply at full length.
+
+Usage:
+  python scripts/check_convergence.py CURRENT_DIR_OR_FILE
+      [--baseline-dir experiments/convergence] [--exact-tol 0]
+      [--loss-tol 0.25] [--parity-eps 0.1] [--update]
+
+``--update`` rewrites the baseline files from CURRENT instead of comparing.
+
+Exit status: 0 = no regressions, 1 = at least one regression (printed),
+2 = usage / missing or malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+class CheckError(Exception):
+    """Malformed input (usage error, exit 2) — never a traceback."""
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-12)
+
+
+def _load_json(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        raise CheckError(f"{path}: cannot read ({e})")
+    except json.JSONDecodeError as e:
+        raise CheckError(f"{path}: not valid JSON ({e})")
+    if not isinstance(data, dict) or "domain" not in data \
+            or "rows" not in data:
+        raise CheckError(f"{path}: expected a run_convergence.py payload "
+                         "with 'domain' and 'rows' fields")
+    return data
+
+
+def load_current(path: str) -> dict:
+    """{domain: payload} from a run_convergence.py output dir or file."""
+    if os.path.isdir(path):
+        files = sorted(glob.glob(os.path.join(path, "*.json")))
+        if not files:
+            raise CheckError(f"{path}: no *.json trajectory files inside")
+    else:
+        files = [path]
+    out = {}
+    for f in files:
+        data = _load_json(f)
+        out[data["domain"]] = data
+    return out
+
+
+def _check_parity(tag: str, rows: list, eps: float,
+                  failures: list[str]) -> None:
+    ref = next((r for r in rows if r.get("reference")), None)
+    if ref is None:
+        failures.append(f"{tag}: no reference (AdamW full-sync) row — "
+                        "parity cannot be checked")
+        return
+    ref_val = ref.get("final_val")
+    if not isinstance(ref_val, (int, float)):
+        failures.append(f"{tag}[{ref.get('setting')}]: reference row lacks "
+                        "a numeric final_val — parity cannot be checked")
+        return
+    for r in rows:
+        if not r.get("flexdemo"):
+            continue
+        val = r.get("final_val")
+        if not isinstance(val, (int, float)):
+            failures.append(f"{tag}[{r.get('setting')}]: flexdemo row lacks "
+                            "a numeric final_val — parity cannot be checked")
+            continue
+        if not (val <= (1.0 + eps) * ref_val):
+            failures.append(
+                f"{tag}[{r.get('setting')}]: paper-parity violated — "
+                f"final_val {val:.4f} > (1+{eps:g}) x reference "
+                f"{ref_val:.4f}")
+
+
+def _check_trajectory(tag: str, cur: dict, base: dict, exact_tol: float,
+                      failures: list[str]) -> None:
+    for field in ("train_losses",):
+        c, b = cur.get(field) or [], base.get(field) or []
+        n = min(len(c), len(b))
+        if n == 0:
+            failures.append(f"{tag}.{field}: empty trajectory")
+            continue
+        for i in range(n):
+            if _rel(c[i], b[i]) > exact_tol:
+                failures.append(
+                    f"{tag}.{field}[{i}]: deterministic trajectory drifted "
+                    f"{b[i]!r} -> {c[i]!r} (exact check, tol {exact_tol:g}; "
+                    "refresh baselines with --update if intentional)")
+                break
+    bvals = {int(s): v for s, v in base.get("val_losses") or []}
+    for s, v in cur.get("val_losses") or []:
+        bv = bvals.get(int(s))
+        if bv is not None and _rel(v, bv) > exact_tol:
+            failures.append(
+                f"{tag}.val_losses[step {s}]: deterministic eval loss "
+                f"drifted {bv!r} -> {v!r} (exact check, tol {exact_tol:g})")
+            break
+
+
+def compare_domain(domain: str, cur: dict, base: dict, exact_tol: float,
+                   loss_tol: float, parity_eps: float) -> list[str]:
+    failures: list[str] = []
+    ccfg = {k: v for k, v in (cur.get("config") or {}).items()
+            if k != "steps"}
+    bcfg = {k: v for k, v in (base.get("config") or {}).items()
+            if k != "steps"}
+    if ccfg != bcfg:
+        diff = sorted(k for k in set(ccfg) | set(bcfg)
+                      if ccfg.get(k) != bcfg.get(k))
+        failures.append(
+            f"{domain}.config: workload changed ({', '.join(diff)}) — "
+            "trajectories are not comparable; refresh baselines with "
+            "--update if intentional")
+        return failures
+    crows = {r.get("setting"): r for r in cur.get("rows", [])}
+    brows = {r.get("setting"): r for r in base.get("rows", [])}
+    base_steps = (base.get("config") or {}).get("steps")
+    full_length = bool(crows) and all(r.get("steps") == base_steps
+                                      for r in crows.values())
+    for name, brow in brows.items():
+        crow = crows.get(name)
+        tag = f"{domain}[{name}]"
+        if crow is None:
+            failures.append(f"{tag}: row disappeared from the run")
+            continue
+        # wire bytes are static functions of shapes x codec: exact, always
+        if float(crow.get("wire_bytes_per_step", -1.0)) != \
+                float(brow.get("wire_bytes_per_step", -1.0)):
+            failures.append(
+                f"{tag}.wire_bytes_per_step: "
+                f"{brow.get('wire_bytes_per_step')} -> "
+                f"{crow.get('wire_bytes_per_step')} (exact check)")
+        if brow.get("deterministic"):
+            _check_trajectory(tag, crow, brow, exact_tol, failures)
+        if full_length:
+            for field in ("final_train", "final_val",
+                          "final_val_ratio_vs_ref"):
+                cv, bv = crow.get(field), brow.get(field)
+                if not isinstance(bv, (int, float)):
+                    continue
+                if not isinstance(cv, (int, float)) \
+                        or _rel(cv, bv) > loss_tol:
+                    failures.append(
+                        f"{tag}.{field}: {bv!r} -> {cv!r} exceeds the "
+                        f"{loss_tol:g} relative tolerance band")
+    # the parity criterion must hold on the COMMITTED baselines every run,
+    # and on the current run whenever it trained to full length
+    _check_parity(f"{domain}(baseline)", list(brows.values()), parity_eps,
+                  failures)
+    if full_length:
+        _check_parity(f"{domain}(current)", list(crows.values()), parity_eps,
+                      failures)
+    return failures
+
+
+def run_check(current_path: str, baseline_dir: str, exact_tol: float,
+              loss_tol: float, parity_eps: float,
+              update: bool = False) -> list[str]:
+    current = load_current(current_path)
+    if update:
+        os.makedirs(baseline_dir, exist_ok=True)
+        for domain, data in current.items():
+            path = os.path.join(baseline_dir, f"{domain}.json")
+            with open(path, "w") as f:
+                json.dump(data, f, indent=1)
+            print(f"updated baseline {domain}.json "
+                  f"({len(data.get('rows', []))} rows)")
+        return []
+    failures: list[str] = []
+    checked = 0
+    for domain, data in sorted(current.items()):
+        bpath = os.path.join(baseline_dir, f"{domain}.json")
+        if not os.path.exists(bpath):
+            failures.append(
+                f"{domain}: no committed baseline at {bpath} — run "
+                "scripts/run_convergence.py and commit via --update")
+            continue
+        baseline = _load_json(bpath)
+        failures += compare_domain(domain, data, baseline, exact_tol,
+                                   loss_tol, parity_eps)
+        checked += 1
+    if checked == 0 and not failures:
+        failures.append(f"no baselines under {baseline_dir!r} matched "
+                        f"{sorted(current)} — nothing was actually checked")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("current",
+                    help="dir (or single file) written by run_convergence.py")
+    ap.add_argument("--baseline-dir", default="experiments/convergence")
+    ap.add_argument("--exact-tol", type=float, default=0.0,
+                    help="relative tolerance for the deterministic "
+                         "trajectory checks (0 = bit-exact; CI passes a "
+                         "tiny value to absorb cross-runner float codegen)")
+    ap.add_argument("--loss-tol", type=float, default=0.25,
+                    help="relative band on final losses / vs-ref ratios "
+                         "for full-length runs")
+    ap.add_argument("--parity-eps", type=float, default=0.1,
+                    help="paper-parity slack: flexdemo final_val must be "
+                         "<= (1+eps) x the AdamW full-sync reference")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from CURRENT instead of "
+                         "comparing")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"error: {args.current} not found", file=sys.stderr)
+        return 2
+    try:
+        failures = run_check(args.current, args.baseline_dir,
+                             args.exact_tol, args.loss_tol,
+                             args.parity_eps, args.update)
+    except CheckError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if failures:
+        print(f"CONVERGENCE REGRESSION: {len(failures)} check(s) failed")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    if not args.update:
+        print("convergence gate: OK (deterministic trajectories exact, "
+              "loss bands within tolerance, paper parity holds)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Run the seeded convergence-parity experiments (LM + ViT x all schemes).
+
+Trains the reduced paper-domain workloads on a simulated 8-device mesh
+(2x4 data x model) through the REAL shard_map train step and writes one
+trajectory file per domain:
+
+  python scripts/run_convergence.py                 # full runs -> committed
+                                                    # experiments/convergence/
+  python scripts/run_convergence.py --smoke \
+      --out /tmp/conv_current                       # CI: short PREFIX runs,
+                                                    # rows to a scratch dir
+
+Gate the output with ``scripts/check_convergence.py`` (exact trajectory
+prefixes where determinism is promised, tolerance bands and the paper-parity
+criterion elsewhere).  Refreshing baselines after an INTENTIONAL optimizer
+change:
+
+  python scripts/run_convergence.py --out /tmp/conv_full
+  python scripts/check_convergence.py /tmp/conv_full --update
+  git add experiments/convergence/*.json
+
+``--out`` defaults to $CONV_OUT, falling back to experiments/convergence
+(the committed baseline dir) — CI MUST redirect it, mirroring BENCH_OUT.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="seeded convergence-parity experiment runner")
+    ap.add_argument("--domains", default="lm,vit",
+                    help="comma-separated subset of: lm, vit")
+    ap.add_argument("--settings", default="",
+                    help="run only settings whose name contains SUBSTR")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short-step-budget runs (a strict PREFIX of the "
+                         "full trajectory; the gate compares the overlap)")
+    ap.add_argument("--out", default=os.environ.get("CONV_OUT", ""),
+                    help="output dir (default $CONV_OUT or "
+                         "experiments/convergence)")
+    ap.add_argument("--mesh", default="2x4", help="DxM (data x model)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake host devices to force BEFORE importing jax "
+                         "(0 = leave XLA_FLAGS alone)")
+    args = ap.parse_args()
+
+    if args.devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.experiments import convergence
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    out_dir = args.out or convergence.DEFAULT_OUT
+    for domain in [s for s in args.domains.split(",") if s]:
+        data = convergence.run_domain(
+            domain, mesh_shape=(d, m), smoke=args.smoke,
+            settings_filter=args.settings)
+        path = convergence.save_domain(data, out_dir)
+        rows = data["rows"]
+        ref = next((r for r in rows if r["reference"]), None)
+        for r in rows:
+            vs = (f" vs_ref {r['final_val_ratio_vs_ref']:.3f}"
+                  if ref is not None else "")
+            print(f"{domain:>4}/{r['setting']:<18} "
+                  f"train {r['final_train']:.4f} val {r['final_val']:.4f}"
+                  f"{vs} wire {r['wire_bytes_per_step']:,.0f}B/step")
+        print(f"# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

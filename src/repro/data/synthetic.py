@@ -126,6 +126,64 @@ class ClusteredEmbeddings:
         }
 
 
+@dataclasses.dataclass
+class SyntheticImages:
+    """Seeded synthetic VISION stream (ViT convergence workloads).
+
+    Unlike ClusteredEmbeddings (which fabricates the embeddings directly),
+    this generates class-conditional IMAGES — each class owns a fixed random
+    template (H, W, C); a sample is template + pixel noise — then patchifies
+    them and projects each patch with a fixed random matrix to d_model: the
+    precomputed patch-embedding frontend that the vit_b config stubs.
+    Pure function of (seed, step), like every generator in this module.
+    """
+
+    n_classes: int
+    d_model: int
+    batch_size: int
+    image_size: int = 16
+    patch_size: int = 4
+    channels: int = 3
+    seed: int = 0
+    noise: float = 0.5
+
+    def __post_init__(self):
+        assert self.image_size % self.patch_size == 0, \
+            (self.image_size, self.patch_size)
+        rng = np.random.RandomState(self.seed + 31)
+        h = w = self.image_size
+        self.templates = rng.randn(
+            self.n_classes, h, w, self.channels).astype(np.float32)
+        d_patch = self.patch_size * self.patch_size * self.channels
+        self.proj = (rng.randn(d_patch, self.d_model).astype(np.float32)
+                     / np.sqrt(d_patch))
+
+    @property
+    def grid(self) -> int:
+        return self.image_size // self.patch_size
+
+    @property
+    def seq_len(self) -> int:
+        return self.grid * self.grid
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.RandomState(self.seed * 131071 + step)
+        b, h, c, p, g = (self.batch_size, self.image_size, self.channels,
+                         self.patch_size, self.grid)
+        labels = rng.randint(0, self.n_classes, b).astype(np.int32)
+        imgs = self.templates[labels] + \
+            rng.randn(b, h, h, c).astype(np.float32) * self.noise
+        patches = imgs.reshape(b, g, p, g, p, c).transpose(0, 1, 3, 2, 4, 5)
+        patches = patches.reshape(b, self.seq_len, p * p * c)
+        x = patches @ self.proj
+        s = self.seq_len
+        return {
+            "inputs": x.astype(np.float32),
+            "labels": labels,
+            "positions": np.broadcast_to(np.arange(s)[None], (b, s)).copy(),
+        }
+
+
 class Seq2SeqEncDec:
     """Seq2Seq reshaped for the TRUE encoder-decoder: separate src / tgt
     streams with teacher forcing (tgt_in = [SEP; tgt[:-1]])."""

@@ -1,0 +1,10 @@
+"""Seeded, deterministic paper-claim experiments (convergence parity).
+
+Unlike ``benchmarks/`` (timing + wire accounting), these runners gate
+optimizer QUALITY: loss trajectories under every replication scheme vs the
+AdamW full-sync reference, serialized to committed baselines under
+``experiments/convergence/`` and enforced by ``scripts/check_convergence.py``.
+"""
+from repro.experiments import convergence
+
+__all__ = ["convergence"]

@@ -1,0 +1,219 @@
+"""Convergence-parity harness: seeded loss-trajectory experiments.
+
+The paper's headline claim is that FlexDeMo "attains similar validation loss
+as hybrid sharded data parallel training employing AdamW and full gradient
+synchronization" — in BOTH studied domains (language modelling and vision).
+This module reproduces that comparison as a deterministic, CI-gated
+experiment: reduced models from both domains train on a simulated 8-device
+mesh (2x4 data x model) through the REAL ``shard_map`` train step — FSDP
+gathers, decoupled momentum over the replication axis, the streaming-ring /
+gather codec wire path — NOT the in-process vmap/replica simulator that the
+paper-figure benchmarks use.
+
+Every (workload x setting) run is a pure function of the committed config:
+constant learning rate (no total-step-dependent schedule), synthetic streams
+that are pure functions of (seed, step), and seeded init — so a shorter
+"--smoke" run reproduces the PREFIX of the committed full trajectory
+bit-for-bit wherever determinism is promised (fp32 amplitudes + sign
+payloads: the ternary ring fold is exact in any order, per the PR 4
+guarantees).  ``scripts/check_convergence.py`` enforces exactly that, plus
+tolerance bands and the paper-parity acceptance
+``final_loss(flexdemo) <= (1 + eps) * final_loss(full_sync)`` per domain.
+
+Entry points:
+  * ``scripts/run_convergence.py``   — CLI (sets the fake-device flag
+    before importing jax, writes ``experiments/convergence/<domain>.json``)
+  * ``run_domain`` / ``run_setting`` — in-process API (tests, benchmarks)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.core import FlexConfig, make_optimizer
+from repro.data.synthetic import BigramLM, SyntheticImages
+from repro.launch.mesh import make_mesh
+from repro.training import loop as train_loop
+from repro.training.state import init_state, make_train_plan
+from repro.training.step import build_eval_step, build_train_step
+
+DEFAULT_OUT = "experiments/convergence"
+DEFAULT_MESH = (2, 4)          # data x model on 8 simulated devices
+
+
+@dataclasses.dataclass(frozen=True)
+class Setting:
+    """One optimizer x replication x codec point of the comparison."""
+
+    name: str
+    optimizer: str = "demo_sgd"     # demo_sgd | adamw
+    scheme: str = "demo"
+    codec: str = "fp32"
+    sign: bool = True
+    rate: float = 1 / 8
+    # bit-exact trajectory promise: fp32 amplitudes + sign payloads ride the
+    # exact-in-any-fold-order ring; the gate compares these rows exactly.
+    deterministic: bool = False
+    reference: bool = False          # the AdamW full-sync baseline row
+    flexdemo: bool = False           # row the paper-parity criterion gates
+
+    def flex(self) -> FlexConfig:
+        return FlexConfig(scheme=self.scheme, rate=self.rate,
+                          codec=self.codec, sign=self.sign)
+
+    def build_optimizer(self, lr):
+        if self.optimizer == "adamw":
+            return make_optimizer("adamw", lr)
+        return make_optimizer("demo_sgd", lr, self.flex(),
+                              momentum_decay=0.9)
+
+
+# Representative coverage: every replication scheme, each amplitude codec at
+# least once, sign on and off, the deterministic (fp32+sign) promise on two
+# schemes.  The reference row is the paper's "conventional Hybrid-FSDP with
+# AdamW" (full gradient pmean every step).
+SETTINGS = (
+    Setting("adamw-full-sync", optimizer="adamw", scheme="full",
+            reference=True),
+    Setting("demo-fp32-sign", scheme="demo", codec="fp32", sign=True,
+            deterministic=True, flexdemo=True),
+    Setting("demo-bf16-nosign", scheme="demo", codec="bf16", sign=False),
+    Setting("random-int8-sign", scheme="random", codec="int8", sign=True),
+    Setting("striding-fp32-sign", scheme="striding", codec="fp32", sign=True,
+            deterministic=True),
+    Setting("diloco-fp32-sign", scheme="diloco", codec="fp32", sign=True),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A reduced paper-domain training problem (pure function of its seed)."""
+
+    domain: str
+    arch: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    batch: int
+    seq: int
+    steps: int
+    eval_every: int
+    eval_batches: int
+    lr: float                       # CONSTANT: smoke prefixes must match
+    seed: int = 0
+    n_classes: int | None = None    # vision head override
+    lm_temperature: float = 2.0     # bigram sharpness (lower entropy floor)
+
+    def config(self):
+        cfg = get_config(self.arch).reduced(
+            n_layers=self.n_layers, d_model=self.d_model, vocab=self.vocab)
+        if self.n_classes is not None:
+            cfg = dataclasses.replace(cfg, n_classes=self.n_classes)
+        return cfg
+
+    def stream(self):
+        if self.domain == "vit":
+            s = SyntheticImages(n_classes=self.n_classes,
+                                d_model=self.d_model,
+                                batch_size=self.batch, seed=self.seed)
+            assert s.seq_len == self.seq, (s.seq_len, self.seq)
+            return s
+        return BigramLM(self.vocab, self.seq, self.batch, self.seed,
+                        temperature=self.lm_temperature)
+
+
+# Both paper domains: a qwen2.5-3b-derived reduced transformer LM on a
+# synthetic token stream, and a reduced vit_b on a synthetic image stream.
+WORKLOADS = {
+    "lm": Workload(domain="lm", arch="qwen2.5-3b", n_layers=2, d_model=64,
+                   vocab=64, batch=8, seq=32, steps=40, eval_every=10,
+                   eval_batches=2, lr=0.02, seed=0),
+    "vit": Workload(domain="vit", arch="vit-b", n_layers=2, d_model=64,
+                    vocab=128, batch=8, seq=16, steps=30, eval_every=10,
+                    eval_batches=2, lr=0.01, seed=0, n_classes=8),
+}
+
+# --smoke runs the SAME workload for a short step budget: a strict prefix of
+# the committed trajectory (constant lr, (seed, step)-pure streams).
+SMOKE_STEPS = {"lm": 10, "vit": 10}
+
+
+def run_setting(wl: Workload, setting: Setting, mesh, log=print) -> dict:
+    """Train one (workload x setting) through the real sharded step; return
+    the serializable trajectory row."""
+    cfg = wl.config()
+    plan = make_train_plan(cfg, mesh, wl.batch, wl.seq)
+    opt = setting.build_optimizer(wl.lr)
+    step, shardings, _ = build_train_step(cfg, mesh, opt, plan)
+    eval_step = build_eval_step(cfg, mesh, opt, plan)
+    state = init_state(jax.random.PRNGKey(wl.seed), cfg, opt, plan)
+    stream = wl.stream()
+    eval_fn = train_loop.make_eval_fn(eval_step, n_batches=wl.eval_batches)
+    _, res = train_loop.run(
+        step, state, stream, wl.steps,
+        eval_fn=eval_fn, eval_stream=stream, eval_every=wl.eval_every,
+        log_every=0, shardings=shardings[0][1], log=log)
+    return {
+        "setting": setting.name,
+        "optimizer": setting.optimizer,
+        "scheme": setting.scheme,
+        "codec": setting.codec,
+        "sign": setting.sign,
+        "rate": setting.rate,
+        "deterministic": setting.deterministic,
+        "reference": setting.reference,
+        "flexdemo": setting.flexdemo,
+        "steps": res.steps,
+        "train_losses": res.train_losses,
+        "val_losses": [[int(s), float(v)] for s, v in res.val_losses],
+        "wire_bytes_per_step": res.wire_bytes_per_step,
+        "final_train": res.final_train(),
+        "final_val": res.final_val(),
+    }
+
+
+def run_domain(domain: str, mesh_shape=DEFAULT_MESH, smoke: bool = False,
+               settings=SETTINGS, settings_filter: str = "",
+               log=print) -> dict:
+    """All settings of one domain on one mesh -> the baseline-file payload."""
+    wl = WORKLOADS[domain]
+    if smoke:
+        wl = dataclasses.replace(wl, steps=SMOKE_STEPS[domain])
+    n_dev = int(mesh_shape[0]) * int(mesh_shape[1])
+    if len(jax.devices()) < n_dev:
+        raise RuntimeError(
+            f"mesh {mesh_shape} needs {n_dev} devices but jax sees "
+            f"{len(jax.devices())}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_dev} BEFORE the "
+            "first jax import (scripts/run_convergence.py does)")
+    mesh = make_mesh(tuple(mesh_shape), ("data", "model"))
+    rows = []
+    for s in settings:
+        if settings_filter and settings_filter not in s.name:
+            continue
+        log(f"[convergence] {domain}/{s.name} "
+            f"({wl.steps} steps, mesh {mesh_shape[0]}x{mesh_shape[1]})")
+        rows.append(run_setting(wl, s, mesh, log=log))
+    ref = next((r for r in rows if r["reference"]), None)
+    if ref is not None:
+        for r in rows:
+            r["final_val_ratio_vs_ref"] = r["final_val"] / ref["final_val"]
+            r["final_train_ratio_vs_ref"] = \
+                r["final_train"] / ref["final_train"]
+    cfg = dataclasses.asdict(wl)
+    cfg["mesh"] = [int(mesh_shape[0]), int(mesh_shape[1])]
+    return {"domain": domain, "smoke": bool(smoke), "config": cfg,
+            "rows": rows}
+
+
+def save_domain(data: dict, out_dir: str = DEFAULT_OUT) -> str:
+    import json
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{data['domain']}.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    return path

@@ -44,6 +44,14 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="eval-loss cadence (0 = off): the sharded loss-only "
+                         "step on held-out batches, recorded in the "
+                         "LoopResult trajectory")
+    ap.add_argument("--eval-batches", type=int, default=2)
+    ap.add_argument("--json", default="",
+                    help="write the LoopResult trajectory (train/val losses, "
+                         "wire bytes, wall times) to PATH")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="2x4", help="DxM (data x model)")
     ap.add_argument("--multi-pod", action="store_true")
@@ -59,15 +67,15 @@ def main():
     import time
 
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.core import FlexConfig, make_optimizer
     from repro.data.synthetic import make_stream
     from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.training import loop as train_loop
     from repro.training import schedules
     from repro.training.state import init_state, make_train_plan
-    from repro.training.step import build_train_step
+    from repro.training.step import build_eval_step, build_train_step
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -119,14 +127,31 @@ def main():
     stream = make_stream(cfg, args.batch, args.seq)
     print(f"launch: {cfg.name} on {mesh.devices.shape} "
           f"S={plan.fsdp_axes} R={plan.repl_axes} {opt.name}")
+
+    eval_fn = None
+    if args.eval_every:
+        eval_fn = train_loop.make_eval_fn(
+            build_eval_step(cfg, mesh, opt, plan,
+                            use_kernel=args.use_kernel),
+            n_batches=args.eval_batches)
+
     t0 = time.perf_counter()
-    for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
-        state, m = step(state, batch)
-        if (i + 1) % 10 == 0 or i == 0:
-            print(f"step {i+1:5d} loss {float(m['loss']):.4f} "
-                  f"wire {float(m['wire_bytes']):,.0f}B "
-                  f"{(time.perf_counter()-t0)/(i+1):.2f}s/step", flush=True)
+    state, result = train_loop.run(
+        step, state, stream, args.steps,
+        eval_fn=eval_fn, eval_stream=stream, eval_every=args.eval_every,
+        log_every=10, shardings=shardings[0][1])
+    dt = (time.perf_counter() - t0) / max(args.steps, 1)
+    print(f"done: final_train {result.final_train():.4f}"
+          + (f" final_val {result.final_val():.4f}" if args.eval_every
+             else "")
+          + f" wire {result.wire_bytes_per_step:,.0f}B/step {dt:.2f}s/step",
+          flush=True)
+    if args.json:
+        import json as _json
+
+        with open(args.json, "w") as f:
+            _json.dump(result.to_json(), f, indent=1)
+        print(f"# wrote {args.json}")
     if args.ckpt_dir:
         from repro.checkpoint import io as ckpt
 

@@ -14,6 +14,7 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+from repro.utils import compat
 
 
 # ---------------------------------------------------------------------------
@@ -228,20 +229,20 @@ class DistCtx:
 
         if not self.fsdp_axes:
             return 1
-        return int(np.prod([jax.lax.axis_size(a) for a in self.fsdp_axes]))
+        return int(np.prod([compat.axis_size(a) for a in self.fsdp_axes]))
 
     def fsdp_index(self):
         """Flattened linear index over the fsdp axes (row-major)."""
         idx = 0
         for a in self.fsdp_axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         return idx
 
     def axes_index(self, axes) -> Any:
         """Flattened linear index over the given axes (row-major)."""
         idx = 0
         for a in axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         return idx
 
     def mm(self, x, w):
@@ -304,7 +305,7 @@ class DistCtx:
     def seq_shards(self) -> int:
         if self.seq_axis is None:
             return 1
-        return jax.lax.axis_size(self.seq_axis)
+        return compat.axis_size(self.seq_axis)
 
     def seq_index(self):
         if self.seq_axis is None:
@@ -333,7 +334,7 @@ class DistCtx:
 
         if not self.batch_axes:
             return 1
-        return int(np.prod([jax.lax.axis_size(a) for a in self.batch_axes]))
+        return int(np.prod([compat.axis_size(a) for a in self.batch_axes]))
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys
 from repro.models.layers.rope import apply_rope
+from repro.utils import compat
 
 NEG_INF = -1e30
 
@@ -95,7 +96,7 @@ def attention_forward(
     q, k = apply_rope(q, k, positions, cfg)
 
     if (cfg.attn_mode == "ulysses" and ctx.seq_axis is not None):
-        n_sh = jax.lax.axis_size(ctx.seq_axis)
+        n_sh = compat.axis_size(ctx.seq_axis)
         if h % n_sh == 0 and kvh % n_sh == 0:
             out = _ulysses_attention(q, k, v, positions, cfg, ctx, window)
             out = out.reshape(b, s_local, h * hd)
@@ -275,7 +276,7 @@ def attention_decode(
         b = b_loc
 
     s_loc = cache["k"].shape[1]
-    n_shards = 1 if ctx.seq_axis is None else jax.lax.axis_size(ctx.seq_axis)
+    n_shards = 1 if ctx.seq_axis is None else compat.axis_size(ctx.seq_axis)
     s_total = s_loc * n_shards
     shard = ctx.seq_index()
     ring = window is not None  # ring buffer of size s_total (== window cap)

@@ -57,7 +57,21 @@ def _n_vocab_chunks(cfg: ArchConfig) -> int:
 def embed_input(p, inp: jnp.ndarray, cfg: ArchConfig, ctx: DistCtx = DistCtx()):
     """tokens (B,S) int32 OR stub embeddings (B,S,D) -> (B,S,D) compute dtype."""
     if cfg.input_mode != "tokens":
-        return ctx.mm(inp.astype(cfg.compute_dtype), p["in_proj"])
+        w = p["in_proj"]
+        if isinstance(w, PartParam) and not ctx.tp:
+            # train layout: ctx.mm's TP path would slice/psum the ACTIVATIONS,
+            # which are seq/batch-sharded here — gather the (small) WEIGHT
+            # over its sharded dims instead (weights are identical across
+            # devices; gathering them never mixes positions).
+            full = w.x
+            for d in range(full.ndim):
+                axes = w.dim_axes(d)
+                if axes:
+                    full = jax.lax.all_gather(full, tuple(axes), axis=d,
+                                              tiled=True)
+            return inp.astype(cfg.compute_dtype) @ \
+                full.astype(cfg.compute_dtype)
+        return ctx.mm(inp.astype(cfg.compute_dtype), w)
     w = p["tok_embed"]
     if not isinstance(w, PartParam) or all(a is None for a in w.spec):
         return _unwrap(w)[inp].astype(cfg.compute_dtype)

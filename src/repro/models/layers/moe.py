@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys, _unwrap
+from repro.utils import compat
 
 
 def init_moe(key, cfg: ArchConfig):
@@ -156,7 +157,7 @@ def _ep_dispatch(p, xt, w, idx, cfg: ArchConfig, ctx: DistCtx):
     """
     t, d = xt.shape
     e, k = cfg.moe.n_experts, cfg.moe.top_k
-    n_dev = jax.lax.axis_size(ctx.ep_axis)
+    n_dev = compat.axis_size(ctx.ep_axis)
     e_loc = e // n_dev
     cap = int(cfg.moe.capacity_factor * t * k / e)
     cap = max(cap, 4)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys
+from repro.utils import compat
 
 _C = 8.0  # Griffin's fixed gate temperature
 
@@ -57,7 +58,7 @@ def _causal_conv(u: jnp.ndarray, kernel: jnp.ndarray, carry: jnp.ndarray | None,
         carry = jnp.zeros((b, w - 1, r), u.dtype)
         if ctx.seq_axis is not None:
             # receive the last W-1 tokens of the left neighbour
-            n = jax.lax.axis_size(ctx.seq_axis)
+            n = compat.axis_size(ctx.seq_axis)
             left = jax.lax.ppermute(
                 u[:, -(w - 1):, :], ctx.seq_axis,
                 [(i, (i + 1) % n) for i in range(n)],
@@ -105,7 +106,7 @@ def rglru_forward(
 
     if ctx.seq_axis is not None:
         # cross-shard prefix fix: gather (decay product, last state) summaries
-        n = jax.lax.axis_size(ctx.seq_axis)
+        n = compat.axis_size(ctx.seq_axis)
         me = jax.lax.axis_index(ctx.seq_axis)
         a_prod = jnp.exp(log_a.sum(axis=1))               # (B,R)
         summaries = jax.lax.all_gather(

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ArchConfig, DistCtx, dense_init, split_keys, _unwrap
+from repro.utils import compat
 
 _LORA_RANK = 64
 # Per-step log-decay floor. The chunked (and Pallas) path factorizes the
@@ -68,7 +69,7 @@ def _boundary(x: jnp.ndarray, ctx: DistCtx) -> jnp.ndarray:
     b, _, d2 = x.shape
     if ctx.seq_axis is None:
         return jnp.zeros((b, 1, d2), x.dtype)
-    n = jax.lax.axis_size(ctx.seq_axis)
+    n = compat.axis_size(ctx.seq_axis)
     left = jax.lax.ppermute(x[:, -1:, :], ctx.seq_axis,
                             [(i, (i + 1) % n) for i in range(n)])
     first = jax.lax.axis_index(ctx.seq_axis) == 0
@@ -186,7 +187,7 @@ def rwkv6_forward(
 
     if ctx.seq_axis is not None:
         # cross-shard state pass: diagonal-decay combine, same trick as RG-LRU.
-        n = jax.lax.axis_size(ctx.seq_axis)
+        n = compat.axis_size(ctx.seq_axis)
         me = jax.lax.axis_index(ctx.seq_axis)
         logw = jnp.maximum(
             jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30)), _LOGW_MIN)

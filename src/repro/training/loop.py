@@ -1,6 +1,8 @@
 """Training loop: drives a (possibly distributed) step function over a data
-stream with logging, eval, and checkpointing. Used by the examples and the
-paper-figure benchmarks."""
+stream with logging, eval, and checkpointing. Used by the examples, the
+paper-figure benchmarks, and the convergence-parity harness
+(repro.experiments.convergence), which serializes LoopResult trajectories
+into the committed baselines under experiments/convergence/."""
 from __future__ import annotations
 
 import dataclasses
@@ -14,13 +16,33 @@ from repro.data.pipeline import to_device
 @dataclasses.dataclass
 class LoopResult:
     train_losses: list
-    val_losses: list
+    val_losses: list               # [(step, loss), ...]
     wall_times: list
     wire_bytes_per_step: float
     steps: int
+    # per-step trajectories of every OTHER scalar the step emitted
+    # (e.g. wire_bytes): metric name -> list of floats, one per step.
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "LoopResult":
+        d = dict(d)
+        d["val_losses"] = [tuple(v) for v in d.get("val_losses", [])]
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+    def final_train(self, k: int = 5) -> float:
+        if not self.train_losses:
+            return float("nan")
+        tail = self.train_losses[-k:]
+        return float(sum(tail) / len(tail))
+
+    def final_val(self) -> float:
+        return float(self.val_losses[-1][1]) if self.val_losses \
+            else float("nan")
 
 
 def run(
@@ -37,27 +59,45 @@ def run(
     bandwidth_bps: float | None = None,
 ) -> tuple[Any, LoopResult]:
     """``bandwidth_bps``: when set, wall-times are augmented with the MODELED
-    inter-node transfer time (paper Fig. 10 bandwidth-constrained study)."""
-    train_losses, val_losses, walls = [], [], []
-    wire = 0.0
+    inter-node transfer time (paper Fig. 10 bandwidth-constrained study).
+
+    Per-step scalars are kept as device values inside the loop and pulled to
+    host in ONE pass at the end, so recording full trajectories does not
+    block async dispatch every step; the host only syncs on log/eval steps
+    (where the loss is printed anyway).
+    """
+    losses_dev, extras_dev = [], {}
+    val_losses, walls = [], []
     t0 = time.perf_counter()
     for step in range(n_steps):
         batch = to_device(stream.batch(step), shardings)
         state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        wire = float(metrics.get("wire_bytes", 0.0))
-        train_losses.append(loss)
-        wall = time.perf_counter() - t0
-        if bandwidth_bps:
-            wall += (step + 1) * wire * 8.0 / bandwidth_bps
-        walls.append(wall)
+        losses_dev.append(metrics["loss"])
+        for k, v in metrics.items():
+            if k != "loss":
+                extras_dev.setdefault(k, []).append(v)
+        walls.append(time.perf_counter() - t0)
         if eval_fn is not None and eval_every and (step + 1) % eval_every == 0:
             val = eval_fn(state, eval_stream)
             val_losses.append((step + 1, float(val)))
-            log(f"step {step+1:5d} loss {loss:.4f} val {float(val):.4f}")
+            log(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
+                f"val {float(val):.4f}")
         elif log_every and (step + 1) % log_every == 0:
-            log(f"step {step+1:5d} loss {loss:.4f}")
-    return state, LoopResult(train_losses, val_losses, walls, wire, n_steps)
+            log(f"step {step+1:5d} loss {float(metrics['loss']):.4f}")
+
+    train_losses = [float(x) for x in losses_dev]
+    extra: dict[str, list] = {}
+    for k, vs in extras_dev.items():
+        try:
+            extra[k] = [float(v) for v in vs]
+        except (TypeError, ValueError):
+            pass   # non-scalar metric: not part of the trajectory record
+    wire = extra.get("wire_bytes", [0.0])[-1] if n_steps else 0.0
+    if bandwidth_bps:
+        walls = [w + (i + 1) * wire * 8.0 / bandwidth_bps
+                 for i, w in enumerate(walls)]
+    return state, LoopResult(train_losses, val_losses, walls, wire, n_steps,
+                             extra)
 
 
 def make_eval_fn(loss_step_fn, n_batches: int = 4):

@@ -35,6 +35,35 @@ def _add_lead(tree):
     return jax.tree_util.tree_map(lambda x: x[None], tree)
 
 
+def _loss_setup(cfg: ArchConfig, optimizer: Optimizer, plan: TrainPlan,
+                params_shapes=None):
+    """Everything the sharded train AND eval steps share: param/state/batch
+    partition specs, the layer DistCtx, and the global loss denominator —
+    defined ONCE so train and eval losses can never normalize differently."""
+    if params_shapes is None:
+        params_shapes = jax.eval_shape(
+            functools.partial(transformer.init_model, cfg=cfg),
+            jax.random.PRNGKey(0))
+    param_specs = sp.build_specs(params_shapes, cfg, plan.mesh_axes, "train")
+    pspecs = state_pspecs(plan, params_shapes, param_specs, optimizer)
+    b_ps = batch_pspecs(plan)
+    ctx = DistCtx(
+        fsdp_axes=plan.fsdp_axes,
+        seq_axis=plan.seq_axis,
+        batch_axes=plan.batch_axes,
+        ep_axis=("model" if (cfg.moe is not None and "model" in
+                             plan.mesh_axes and plan.seq_axis) else None),
+    )
+    all_axes = tuple(plan.mesh_axes)
+    # each replication-group member normalizes by ITS OWN token count (the
+    # paper's per-node batch-mean gradient); the replicator then MEANS the
+    # (compressed) contributions over R.
+    count = float(plan.global_tokens) if not (
+        cfg.kind == "encoder" and cfg.n_classes and cfg.family != "audio"
+    ) else float(plan.global_batch)
+    return param_specs, pspecs, b_ps, ctx, all_axes, count / plan.n_repl
+
+
 def build_train_step(
     cfg: ArchConfig,
     mesh,
@@ -55,29 +84,8 @@ def build_train_step(
     """
     if use_kernel and optimizer.with_use_kernel is not None:
         optimizer = optimizer.with_use_kernel(True)
-    if params_shapes is None:
-        params_shapes = jax.eval_shape(
-            functools.partial(transformer.init_model, cfg=cfg),
-            jax.random.PRNGKey(0))
-    param_specs = sp.build_specs(params_shapes, cfg, plan.mesh_axes, "train")
-    pspecs = state_pspecs(plan, params_shapes, param_specs, optimizer)
-    b_ps = batch_pspecs(plan)
-
-    ctx = DistCtx(
-        fsdp_axes=plan.fsdp_axes,
-        seq_axis=plan.seq_axis,
-        batch_axes=plan.batch_axes,
-        ep_axis=("model" if (cfg.moe is not None and "model" in
-                             plan.mesh_axes and plan.seq_axis) else None),
-    )
-    all_axes = tuple(plan.mesh_axes)
-    # each replication-group member normalizes by ITS OWN token count (the
-    # paper's per-node batch-mean gradient); the replicator then MEANS the
-    # (compressed) contributions over R.
-    count = float(plan.global_tokens) if not (
-        cfg.kind == "encoder" and cfg.n_classes and cfg.family != "audio"
-    ) else float(plan.global_batch)
-    global_denom = count / plan.n_repl
+    param_specs, pspecs, b_ps, ctx, all_axes, global_denom = _loss_setup(
+        cfg, optimizer, plan, params_shapes)
 
     def local_loss(params, batch):
         return transformer.loss_fn(
@@ -159,3 +167,44 @@ def build_train_step(
         is_leaf=lambda x: isinstance(x, P))
     jitted = jax.jit(mapped, donate_argnums=(0,) if donate else ())
     return jitted, shardings, param_specs
+
+
+def build_eval_step(
+    cfg: ArchConfig,
+    mesh,
+    optimizer: Optimizer,
+    plan: TrainPlan,
+    params_shapes=None,
+    use_kernel: bool = False,
+):
+    """Loss-only counterpart of ``build_train_step``: the SAME sharded
+    forward (FSDP gathers, seq parallel, global-denominator loss) on a
+    held-out batch, with no optimizer update and no state mutation.
+
+    Returns ``eval_fn(state, batch) -> loss`` (jitted, scalar f32).  For
+    params-divergent optimizers (DiLoCo) each replica evaluates its OWN
+    drifted params; the psum'd loss is then the mean over replicas' models.
+    Used by the convergence-parity harness (repro.experiments.convergence)
+    to plumb eval losses through ``training.loop.run``.
+    """
+    param_specs, pspecs, b_ps, ctx, all_axes, global_denom = _loss_setup(
+        cfg, optimizer, plan, params_shapes)
+
+    def eval_fn(state, batch):
+        params = state["params"]
+        if optimizer.params_diverge:
+            params = _strip_lead(params)
+        (loss, metrics) = transformer.loss_fn(
+            params, batch, cfg, ctx, specs=param_specs,
+            global_denom=global_denom, use_kernel=use_kernel)
+        nll, den = metrics["nll_sum"], metrics["denom"]
+        if all_axes:
+            nll = jax.lax.psum(nll, all_axes)
+            den = jax.lax.psum(den, all_axes)
+        return nll / jnp.maximum(den, 1.0)
+
+    in_specs = ({"params": pspecs["params"], "opt": pspecs["opt"],
+                 "step": pspecs["step"]}, b_ps)
+    mapped = compat.shard_map(eval_fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=P(), check_vma=False)
+    return jax.jit(mapped)

@@ -27,6 +27,19 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
                       check_rep=check_vma)
 
 
+def axis_size(name) -> int:
+    """Static size of a named mesh axis from inside shard_map.
+
+    ``jax.lax.axis_size`` on new jax; on the 0.4.x line the same static int
+    comes from ``jax.core.axis_frame`` (yes — it returns the SIZE there).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    import jax.core
+
+    return jax.core.axis_frame(name)
+
+
 def make_mesh(shape, axes):
     """``jax.make_mesh`` passing ``axis_types`` only where it exists."""
     try:

@@ -4,7 +4,6 @@ must pass, and --update must refresh baselines."""
 import importlib.util
 import json
 import os
-import sys
 
 import pytest
 
@@ -124,6 +123,56 @@ def test_duplicate_row_keys_fail_loudly(tmp_path):
 
 def test_missing_current_file_is_usage_error(tmp_path):
     assert check_bench.main([str(tmp_path / "nope.json")]) == 2
+
+
+def test_malformed_current_json_is_usage_error_not_traceback(tmp_path):
+    path = tmp_path / "current.json"
+    path.write_text("{not json")
+    assert check_bench.main([str(path)]) == 2
+
+
+def test_summary_missing_rows_field_is_usage_error(tmp_path):
+    """A results entry without 'rows' (a truncated/hand-edited summary) must
+    produce a clear exit-2 message, not a KeyError traceback."""
+    path = tmp_path / "current.json"
+    path.write_text(json.dumps({"results": [{"name": "comms"}]}))
+    assert check_bench.main([str(path)]) == 2
+
+
+def test_unreadable_baseline_file_is_a_clear_failure(tmp_path):
+    """A corrupt committed baseline must fail with a message naming the
+    file (not a JSONDecodeError traceback)."""
+    cur = _summary(tmp_path, ROWS)
+    bdir = tmp_path / "baselines"
+    bdir.mkdir()
+    (bdir / "comms.json").write_text("{truncated")
+    rc = check_bench.main([cur, "--baseline-dir", str(bdir)])
+    assert rc == 1
+    failures = check_bench.run_check(cur, str(bdir), 0.1, 1e-5)
+    assert any("unreadable" in f and "comms" in f for f in failures)
+
+
+def test_current_field_absent_is_a_clear_failure(tmp_path):
+    """A wire_bytes field that vanished from the current run (renamed or
+    dropped by a bench refactor) is a regression, not a crash."""
+    missing = json.loads(json.dumps(ROWS))
+    del missing[0]["wire_bytes_actual"]
+    cur = _summary(tmp_path, missing)
+    bdir = _baseline(tmp_path, ROWS)
+    rc = check_bench.main([cur, "--baseline-dir", bdir])
+    assert rc == 1
+    failures = check_bench.run_check(cur, bdir, 0.1, 1e-5)
+    assert any("wire_bytes_actual" in f and "absent" in f for f in failures)
+
+
+def test_update_creates_new_baseline_file(tmp_path):
+    """--update must CREATE baselines that do not exist yet (first commit of
+    a new bench), after which the comparison passes."""
+    cur = _summary(tmp_path, ROWS, name="novel_bench")
+    bdir = str(tmp_path / "fresh_baselines")   # dir does not exist either
+    assert check_bench.main([cur, "--baseline-dir", bdir, "--update"]) == 0
+    assert os.path.exists(os.path.join(bdir, "novel_bench.json"))
+    assert check_bench.main([cur, "--baseline-dir", bdir]) == 0
 
 
 def test_gate_passes_on_repo_baselines(tmp_path):

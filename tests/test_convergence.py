@@ -1,0 +1,278 @@
+"""Convergence-parity harness: the seeded runner (real shard_map path), the
+synthetic vision stream, and the scripts/check_convergence.py gate (ISSUE
+acceptance: an injected loss-trajectory regression must exit non-zero; the
+committed baselines must pass and satisfy paper parity)."""
+import copy
+import dataclasses
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                       "check_convergence.py")
+_spec = importlib.util.spec_from_file_location("check_convergence", _SCRIPT)
+check_conv = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_conv)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+BASELINE_DIR = os.path.join(REPO, "experiments", "convergence")
+
+
+# ---------------------------------------------------------------------------
+# synthetic vision stream
+
+
+def test_synthetic_images_shapes_and_determinism():
+    from repro.data.synthetic import SyntheticImages
+
+    s = SyntheticImages(n_classes=8, d_model=64, batch_size=4, seed=3)
+    b = s.batch(5)
+    assert b["inputs"].shape == (4, s.seq_len, 64)
+    assert b["labels"].shape == (4,)
+    assert b["positions"].shape == (4, s.seq_len)
+    b2 = SyntheticImages(n_classes=8, d_model=64, batch_size=4, seed=3).batch(5)
+    np.testing.assert_array_equal(b["inputs"], b2["inputs"])
+    np.testing.assert_array_equal(b["labels"], b2["labels"])
+    # different steps / seeds decorrelate
+    assert not np.array_equal(b["inputs"], s.batch(6)["inputs"])
+    assert not np.array_equal(
+        b["inputs"],
+        SyntheticImages(n_classes=8, d_model=64, batch_size=4, seed=4)
+        .batch(5)["inputs"])
+
+
+def test_synthetic_images_are_class_separable():
+    """Same-class samples must sit closer than cross-class ones (else the
+    ViT workload has nothing to learn)."""
+    from repro.data.synthetic import SyntheticImages
+
+    s = SyntheticImages(n_classes=4, d_model=32, batch_size=64, seed=0,
+                        noise=0.25)
+    b = s.batch(0)
+    flat = b["inputs"].reshape(64, -1)
+    lab = b["labels"]
+    same, cross = [], []
+    for i in range(16):
+        for j in range(i + 1, 16):
+            d = float(np.linalg.norm(flat[i] - flat[j]))
+            (same if lab[i] == lab[j] else cross).append(d)
+    if same and cross:
+        assert np.mean(same) < np.mean(cross)
+
+
+# ---------------------------------------------------------------------------
+# the in-process runner (1x1 mesh: the real shard_map step, single device)
+
+
+def _tiny_workload(domain):
+    from repro.experiments import convergence as C
+
+    return dataclasses.replace(C.WORKLOADS[domain], steps=4, eval_every=2,
+                               eval_batches=1)
+
+
+def test_runner_trains_and_serializes_lm():
+    from repro.experiments import convergence as C
+    from repro.launch.mesh import make_mesh
+
+    wl = _tiny_workload("lm")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    row = C.run_setting(wl, C.SETTINGS[0], mesh, log=lambda *_: None)
+    assert row["setting"] == "adamw-full-sync"
+    assert len(row["train_losses"]) == 4
+    assert [s for s, _ in row["val_losses"]] == [2, 4]
+    assert all(np.isfinite(row["train_losses"]))
+    json.dumps(row)   # fully serializable
+
+
+def test_runner_deterministic_for_fp32_sign_demo():
+    """The determinism promise the gate's exact check leans on: two fresh
+    builds of the same (workload x setting) produce bit-identical train AND
+    eval trajectories."""
+    from repro.experiments import convergence as C
+    from repro.launch.mesh import make_mesh
+
+    wl = _tiny_workload("vit")
+    demo = next(s for s in C.SETTINGS if s.name == "demo-fp32-sign")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    r1 = C.run_setting(wl, demo, mesh, log=lambda *_: None)
+    r2 = C.run_setting(wl, demo, mesh, log=lambda *_: None)
+    assert r1["train_losses"] == r2["train_losses"]
+    assert r1["val_losses"] == r2["val_losses"]
+    assert r1["wire_bytes_per_step"] == r2["wire_bytes_per_step"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the gate
+
+
+def _payload(steps=6):
+    ref_traj = [5.0 - 0.5 * i for i in range(steps)]
+    demo_traj = [5.0 - 0.45 * i for i in range(steps)]
+    rows = [
+        {"setting": "adamw-full-sync", "optimizer": "adamw", "scheme": "full",
+         "deterministic": False, "reference": True, "flexdemo": False,
+         "steps": steps, "train_losses": ref_traj,
+         "val_losses": [[steps // 2, 3.0], [steps, 2.0]],
+         "wire_bytes_per_step": 1000.0, "final_train": ref_traj[-1],
+         "final_val": 2.0, "final_val_ratio_vs_ref": 1.0},
+        {"setting": "demo-fp32-sign", "optimizer": "demo_sgd",
+         "scheme": "demo", "deterministic": True, "reference": False,
+         "flexdemo": True, "steps": steps, "train_losses": demo_traj,
+         "val_losses": [[steps // 2, 3.1], [steps, 2.1]],
+         "wire_bytes_per_step": 100.0, "final_train": demo_traj[-1],
+         "final_val": 2.1, "final_val_ratio_vs_ref": 1.05},
+    ]
+    return {"domain": "lm", "smoke": False,
+            "config": {"domain": "lm", "steps": steps, "batch": 8,
+                       "seed": 0, "mesh": [2, 4]},
+            "rows": rows}
+
+
+def _write(tmp_path, payload, sub):
+    d = tmp_path / sub
+    d.mkdir(parents=True, exist_ok=True)
+    with open(d / f"{payload['domain']}.json", "w") as f:
+        json.dump(payload, f)
+    return str(d)
+
+
+def test_gate_passes_on_identical_runs(tmp_path):
+    cur = _write(tmp_path, _payload(), "cur")
+    base = _write(tmp_path, _payload(), "base")
+    assert check_conv.main([cur, "--baseline-dir", base]) == 0
+
+
+def test_injected_trajectory_regression_fails(tmp_path):
+    """ISSUE acceptance: a drifted deterministic loss trajectory exits 1."""
+    bad = _payload()
+    bad["rows"][1]["train_losses"][3] += 0.25
+    cur = _write(tmp_path, bad, "cur")
+    base = _write(tmp_path, _payload(), "base")
+    rc = check_conv.main([cur, "--baseline-dir", base])
+    assert rc == 1
+    failures = check_conv.run_check(cur, base, 0.0, 0.25, 0.1)
+    assert any("train_losses[3]" in f for f in failures)
+
+
+def test_nondeterministic_rows_use_tolerance_not_exactness(tmp_path):
+    ok = _payload()
+    ok["rows"][0]["train_losses"][2] += 1e-3       # ref is NOT deterministic
+    ok["rows"][0]["final_train"] *= 1.01
+    cur = _write(tmp_path, ok, "cur")
+    base = _write(tmp_path, _payload(), "base")
+    assert check_conv.main([cur, "--baseline-dir", base]) == 0
+    worse = _payload()
+    worse["rows"][0]["final_val"] *= 2.0           # outside the band
+    cur2 = _write(tmp_path / "w", worse, "cur")
+    assert check_conv.main([cur2, "--baseline-dir", base]) == 1
+
+
+def test_smoke_prefix_is_compared_exactly(tmp_path):
+    """A --smoke run (shorter trajectory) still trips the exact check on the
+    overlapping prefix of deterministic rows."""
+    base = _write(tmp_path, _payload(steps=6), "base")
+
+    def smoke(perturb):
+        p = _payload(steps=6)
+        for r in p["rows"]:
+            r["steps"] = 3
+            r["train_losses"] = r["train_losses"][:3]
+            r["val_losses"] = [v for v in r["val_losses"] if v[0] <= 3]
+        if perturb:
+            p["rows"][1]["train_losses"][1] += 0.5
+        return p
+
+    cur_ok = _write(tmp_path / "ok", smoke(False), "cur")
+    assert check_conv.main([cur_ok, "--baseline-dir", base]) == 0
+    cur_bad = _write(tmp_path / "bad", smoke(True), "cur")
+    assert check_conv.main([cur_bad, "--baseline-dir", base]) == 1
+
+
+def test_paper_parity_violation_in_baseline_fails(tmp_path):
+    regressed = _payload()
+    regressed["rows"][1]["final_val"] = \
+        regressed["rows"][0]["final_val"] * 1.5    # 50% worse than full sync
+    cur = _write(tmp_path, copy.deepcopy(regressed), "cur")
+    base = _write(tmp_path, regressed, "base")
+    rc = check_conv.main([cur, "--baseline-dir", base])
+    assert rc == 1
+    failures = check_conv.run_check(cur, base, 0.0, 0.25, 0.1)
+    assert any("paper-parity" in f for f in failures)
+
+
+def test_wire_bytes_drift_fails_even_on_smoke(tmp_path):
+    bad = _payload()
+    bad["rows"][1]["wire_bytes_per_step"] += 24.0
+    cur = _write(tmp_path, bad, "cur")
+    base = _write(tmp_path, _payload(), "base")
+    assert check_conv.main([cur, "--baseline-dir", base]) == 1
+
+
+def test_workload_config_change_fails_loudly(tmp_path):
+    changed = _payload()
+    changed["config"]["batch"] = 16
+    cur = _write(tmp_path, changed, "cur")
+    base = _write(tmp_path, _payload(), "base")
+    rc = check_conv.main([cur, "--baseline-dir", base])
+    assert rc == 1
+    failures = check_conv.run_check(cur, base, 0.0, 0.25, 0.1)
+    assert any("workload changed" in f and "batch" in f for f in failures)
+
+
+def test_row_disappearance_fails(tmp_path):
+    short = _payload()
+    short["rows"] = short["rows"][:1]
+    cur = _write(tmp_path, short, "cur")
+    base = _write(tmp_path, _payload(), "base")
+    assert check_conv.main([cur, "--baseline-dir", base]) == 1
+
+
+def test_missing_baseline_is_a_failure(tmp_path):
+    cur = _write(tmp_path, _payload(), "cur")
+    base = str(tmp_path / "empty")
+    os.makedirs(base)
+    assert check_conv.main([cur, "--baseline-dir", base]) == 1
+
+
+def test_malformed_current_is_usage_error(tmp_path):
+    d = tmp_path / "cur"
+    d.mkdir()
+    (d / "lm.json").write_text("{nope")
+    assert check_conv.main([str(d), "--baseline-dir", str(tmp_path)]) == 2
+    assert check_conv.main([str(tmp_path / "missing"),
+                            "--baseline-dir", str(tmp_path)]) == 2
+
+
+def test_update_writes_baselines(tmp_path):
+    cur = _write(tmp_path, _payload(), "cur")
+    base = str(tmp_path / "fresh")
+    assert check_conv.main([cur, "--baseline-dir", base, "--update"]) == 0
+    assert os.path.exists(os.path.join(base, "lm.json"))
+    assert check_conv.main([cur, "--baseline-dir", base]) == 0
+
+
+def test_gate_passes_on_committed_baselines():
+    """End-to-end on the real committed artifacts: each baseline compared
+    against itself must pass every check INCLUDING paper parity — i.e. the
+    committed trajectories actually reproduce the paper's claim."""
+    if not os.path.isdir(BASELINE_DIR) or not os.listdir(BASELINE_DIR):
+        pytest.skip("no committed convergence baselines")
+    assert check_conv.main([BASELINE_DIR, "--baseline-dir",
+                            BASELINE_DIR]) == 0
+
+
+def test_committed_baselines_cover_both_domains_and_all_schemes():
+    if not os.path.isdir(BASELINE_DIR) or not os.listdir(BASELINE_DIR):
+        pytest.skip("no committed convergence baselines")
+    domains = {}
+    for fn in os.listdir(BASELINE_DIR):
+        with open(os.path.join(BASELINE_DIR, fn)) as f:
+            data = json.load(f)
+        domains[data["domain"]] = {r["scheme"] for r in data["rows"]}
+    assert set(domains) == {"lm", "vit"}
+    for schemes in domains.values():
+        assert {"full", "demo", "random", "striding", "diloco"} <= schemes
