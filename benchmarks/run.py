@@ -68,8 +68,9 @@ def main() -> None:
 
     from benchmarks import (bench_chunk, bench_comm, bench_comms,
                             bench_convergence, bench_dtype, bench_encdec,
-                            bench_kernels, bench_packed, bench_replicators,
-                            bench_scaling, bench_sign, bench_topk, roofline)
+                            bench_kernels, bench_overlap, bench_packed,
+                            bench_replicators, bench_scaling, bench_sign,
+                            bench_topk, roofline)
 
     bench("fig1_replicators_sgd_vs_adamw",
           lambda: bench_replicators.run(
@@ -124,6 +125,16 @@ def main() -> None:
                 f"dec={fp32['decode_MBps']:.0f}MBps")
 
     bench("comms", bench_comms.run, _comms_derived)
+
+    def _overlap_derived(r):
+        demo = next(x for x in r if x["scheme"] == "demo:staged")
+        return (f"chains={demo['ring_chains_off']}->{demo['ring_chains_on']},"
+                f"hdr_bytes={demo['wire_bytes_bucket_overhead']},"
+                f"speedup=" + ",".join(
+                    f"{x['scheme']}:{x['speedup_on_vs_off']:.2f}x"
+                    for x in r))
+
+    bench("overlap", bench_overlap.run, _overlap_derived)
 
     # liveness for the convergence-parity harness (the gated 8-device runs
     # live in scripts/run_convergence.py; see scripts/check_convergence.py)

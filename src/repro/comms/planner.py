@@ -39,9 +39,11 @@ import jax
 
 from repro.comms import codecs
 from repro.comms.topology import (CodecOverhead, Placement, Topology,
-                                  get_topology, step_comm_seconds)
+                                  bucketed_overlap_seconds, get_topology,
+                                  step_comm_seconds)
 from repro.core import compression
 from repro.core.flexdemo import FlexConfig
+from repro.core.packing import DEFAULT_N_BUCKETS
 
 DEFAULT_SCHEMES = ("demo", "random", "striding", "diloco")
 DEFAULT_CHUNKS = (32, 64, 128, 256)
@@ -65,6 +67,12 @@ class CommPlan:
     # streaming-ring (sync_impl="ring") pricing: latency paid once, per-hop
     # decode overlapped with the next transfer; <= comm_seconds for |R| >= 2
     comm_seconds_pipelined: float = 0.0
+    # bucketed-engine pricing (overlap="on"): seconds left EXPOSED after
+    # hiding behind ``compute_s`` of backprop with ``n_buckets`` buckets
+    # (topology.bucketed_overlap_seconds); == comm_seconds_pipelined when
+    # priced with no compute to hide under and one bucket
+    comm_seconds_overlapped: float = 0.0
+    n_buckets: int = 1
 
     def describe(self) -> str:
         f = self.flex
@@ -74,7 +82,9 @@ class CommPlan:
         return (f"{f.scheme}@{f.rate:g}{extra}: {self.wire_bytes:,} B/step "
                 f"over {self.link} x{self.n_replicas} -> "
                 f"{self.comm_seconds * 1e3:.3f} ms/step "
-                f"(ring {self.comm_seconds_pipelined * 1e3:.3f} ms) "
+                f"(ring {self.comm_seconds_pipelined * 1e3:.3f} ms, "
+                f"overlap x{self.n_buckets} exposes "
+                f"{self.comm_seconds_overlapped * 1e3:.3f} ms) "
                 f"({'fits' if self.feasible else 'OVER BUDGET'})")
 
 
@@ -167,8 +177,16 @@ def scheme_wire_bytes(flex: FlexConfig, numels: Sequence[int]) -> int:
 
 def predict(flex: FlexConfig, params, topology, placement,
             budget_s: float | None = None,
-            overhead: CodecOverhead | None = None) -> CommPlan:
-    """Price ONE configuration (the planner's scorer, also used standalone)."""
+            overhead: CodecOverhead | None = None,
+            compute_s: float = 0.0,
+            n_buckets: int = 0) -> CommPlan:
+    """Price ONE configuration (the planner's scorer, also used standalone).
+
+    ``compute_s``/``n_buckets`` feed the bucketed-engine price
+    (``comm_seconds_overlapped``): the seconds left exposed after hiding the
+    bucketed collectives behind ``compute_s`` of backprop.  ``n_buckets=0``
+    prices the engine at its :data:`~repro.core.packing.DEFAULT_N_BUCKETS`.
+    """
     topology = get_topology(topology) if isinstance(topology, str) else topology
     placement = _resolve_placement(placement, topology)
     numels = leaf_numels(params)
@@ -194,12 +212,20 @@ def predict(flex: FlexConfig, params, topology, placement,
     comm = step_comm_seconds(wire, placement, topology, overhead=overhead)
     ring = step_comm_seconds(wire, placement, topology, overhead=overhead,
                              ring_pipelined=True)
-    link = topology.link_for(placement.crosses_node).name
+    link_spec = topology.link_for(placement.crosses_node)
+    buckets = n_buckets if n_buckets else DEFAULT_N_BUCKETS
+    # the bucketed wire adds one header per extra bucket (exact, matching
+    # the replicators' per-bucket codecs)
+    bucketed_wire = wire + (buckets - 1) * codecs.HEADER_BYTES
+    overlapped = bucketed_overlap_seconds(
+        bucketed_wire, placement.n_replicas, link_spec, n_buckets=buckets,
+        compute_s=compute_s, overhead=overhead)
     return CommPlan(flex=flex, wire_bytes=int(wire), comm_seconds=comm,
-                    quality=quality, link=link,
+                    quality=quality, link=link_spec.name,
                     n_replicas=placement.n_replicas,
                     feasible=(budget_s is None or comm <= budget_s),
-                    comm_seconds_pipelined=ring)
+                    comm_seconds_pipelined=ring,
+                    comm_seconds_overlapped=overlapped, n_buckets=buckets)
 
 
 def solve(params, topology, placement, *,
@@ -211,14 +237,33 @@ def solve(params, topology, placement, *,
           ks: Sequence[int] = DEFAULT_KS,
           amp_dtypes: Sequence[str] = DEFAULT_AMPS,
           idx_layouts: Sequence[str] = DEFAULT_IDX_LAYOUTS,
-          overhead: CodecOverhead | None = None) -> CommPlan:
-    """Best-fidelity plan under the budget; min-comm plan if nothing fits."""
-    if budget_s is None:
+          overhead: CodecOverhead | None = None,
+          n_buckets: int = 0) -> CommPlan:
+    """Best-fidelity plan under the budget; min-comm plan if nothing fits.
+
+    The two budget forms check feasibility against DIFFERENT transports:
+
+      * ``budget_s`` -- the serialized ring all-gather (``comm_seconds``),
+        the conservative hard per-step ceiling;
+      * ``target_overlap`` + ``compute_s`` -- the BUCKETED overlap engine:
+        feasible iff ``comm_seconds_overlapped`` (seconds left exposed after
+        hiding ``n_buckets`` per-bucket collectives behind ``compute_s`` of
+        backprop) fits in ``target_overlap * compute_s``.  The monolithic
+        chain depends on the whole packed tree, so its floor is the full
+        pipeline drain — targets the serialized model calls infeasible
+        become feasible once buckets shrink the drain 1/B-fold.  The chosen
+        plan's flex is emitted with ``overlap="on"`` so the engine the
+        feasibility check priced is the one the trainer runs.
+    """
+    overlap_mode = budget_s is None
+    if overlap_mode:
         if target_overlap is None or compute_s is None:
             raise ValueError("need budget_s, or target_overlap + compute_s")
         budget_s = target_overlap * compute_s
     topology = get_topology(topology) if isinstance(topology, str) else topology
     placement = _resolve_placement(placement, topology)
+    kw = dict(overhead=overhead, n_buckets=n_buckets,
+              compute_s=compute_s if overlap_mode else 0.0)
 
     candidates: list[CommPlan] = []
     for scheme in schemes:
@@ -235,14 +280,25 @@ def solve(params, topology, placement, *,
                                 codec=amp, idx_layout=layout)
                             candidates.append(predict(
                                 flex, params, topology, placement, budget_s,
-                                overhead=overhead))
+                                **kw))
         else:
             for rate in (1 / 2, 1 / 4, 1 / 8, 1 / 16, 1 / 32, 1 / 64,
                          1 / 128, 1 / 256):
                 flex = FlexConfig(scheme=scheme, rate=rate)
                 candidates.append(predict(flex, params, topology, placement,
-                                          budget_s, overhead=overhead))
+                                          budget_s, **kw))
 
+    if overlap_mode:
+        # re-judge feasibility against the bucketed engine and emit configs
+        # that actually switch it on (a plan is its own witness: the flex it
+        # carries runs the transport its price modeled)
+        candidates = [
+            dataclasses.replace(
+                c, feasible=c.comm_seconds_overlapped <= budget_s,
+                flex=dataclasses.replace(
+                    c.flex, overlap="on" if c.flex.resolve_codec() != "off"
+                    else "off", n_buckets=c.n_buckets))
+            for c in candidates]
     feasible = [c for c in candidates if c.feasible]
     if feasible:
         return max(feasible, key=lambda c: (c.quality, -c.comm_seconds))

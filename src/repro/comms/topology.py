@@ -214,6 +214,49 @@ def ring_pipelined_seconds(payload_bytes: float, n_replicas: int,
             + (n_replicas - 1) * max(transfer, dec) + dec)
 
 
+def bucketed_overlap_seconds(payload_bytes: float, n_replicas: int,
+                             link: LinkSpec, *, n_buckets: int = 1,
+                             compute_s: float = 0.0,
+                             overhead: CodecOverhead | None = None) -> float:
+    """EXPOSED (not hidden behind backprop) seconds of the bucketed engine.
+
+    The overlap engine splits the payload into ``n_buckets`` leaf-group
+    buckets, each with its own collective, launched as soon as its rows are
+    ready during backprop.  The link still serializes every transfer, so the
+    engine's total busy time matches the monolithic streaming ring
+    (:func:`ring_pipelined_seconds`) up to per-bucket granularity::
+
+        total = enc + latency + (R-1) * B * max(transfer_b, decode_b)
+                    + decode_b
+
+    What changes is how much of it can HIDE: all buckets except the last
+    launch while backprop still runs, so only the LAST bucket's drain is
+    structurally exposed after the final gradient::
+
+        tail    = latency + (R-1) * max(transfer_b, decode_b) + decode_b
+        exposed = max(tail, total - compute_s)
+
+    With ``n_buckets=1`` and ``compute_s=0`` this reduces exactly to the
+    monolithic streaming-ring price (the whole chain depends on the packed
+    tree, so nothing starts before backprop ends and nothing hides).  More
+    buckets shrink the achievable floor 1/B-fold — the mechanism that makes
+    previously-infeasible ``target_overlap`` budgets feasible.
+    """
+    if n_replicas <= 1 or payload_bytes <= 0:
+        return 0.0
+    b = max(1, int(n_buckets))
+    bucket = payload_bytes / b
+    transfer_b = bucket * 8.0 / (link.bandwidth_gbps * 1e9)
+    enc = dec_b = 0.0
+    if overhead is not None:
+        enc = payload_bytes * overhead.encode_s_per_byte
+        dec_b = bucket * overhead.decode_s_per_byte
+    stage = max(transfer_b, dec_b)
+    total = enc + link.latency_s + (n_replicas - 1) * b * stage + dec_b
+    tail = link.latency_s + (n_replicas - 1) * stage + dec_b
+    return max(tail, total - max(0.0, compute_s))
+
+
 def step_comm_seconds(wire_bytes: int, placement: Placement,
                       topology: Topology,
                       overhead: CodecOverhead | None = None,

@@ -58,6 +58,20 @@ class FlexConfig:
     # only, uint16 whenever s <= 65536 regardless of tree size) or "flat"
     # (v1: global flat positions, uint32 past C*s > 65535).
     idx_layout: str = "local"
+    # Bucketed overlap engine (rbase.resolve_overlap): "on" splits every
+    # scheme's packed payload into n_buckets contiguous leaf groups, each
+    # with its OWN encoded buffer and collective, so a bucket's transfer
+    # hides under another bucket's decode (ring hops are double-buffered
+    # ACROSS buckets).  "auto" = on iff a codec is on AND n_buckets >= 2 is
+    # explicitly requested (conservative: buckets add one 24 B header per
+    # extra bucket to the wire).  n_buckets=0 means DEFAULT_N_BUCKETS when
+    # the engine is on.
+    overlap: str = "auto"
+    n_buckets: int = 0
+    # DeMo wire encode: "staged" (extract kernel + jnp codec serialization)
+    # or "fused" (single-launch Pallas DCT + top-k + sign + byte pack;
+    # requires a codec and the "local" idx layout).  "auto" -> staged.
+    encode_impl: str = "auto"
 
     def __post_init__(self):
         if self.sync_impl not in rbase.SYNC_IMPLS:
@@ -90,6 +104,19 @@ class FlexConfig:
         # per-replica fold leaves replicas ulp-apart every sync (see
         # rbase.resolve_sync_impl — "auto" avoids the combination).
         rbase.resolve_sync_impl(self.sync_impl, amp, self.sign)
+        # overlap engine + fused encode validate at config construction so
+        # the same messages fire here and at the replicator level.
+        rbase.resolve_overlap(self.overlap, amp=amp, n_buckets=self.n_buckets)
+        encode = rbase.resolve_encode_impl(self.encode_impl, amp)
+        if encode == "fused" and self.scheme != "demo":
+            raise ValueError(
+                "encode_impl='fused' is the DeMo DCT+top-k+pack kernel; "
+                f"scheme={self.scheme!r} has no packed top-k payload to "
+                "fuse (its dense wire encode is already a single bitcast)")
+        if encode == "fused" and self.idx_layout != "local":
+            raise ValueError(
+                "encode_impl='fused' emits wire v2 in-chunk positions; "
+                f"idx_layout={self.idx_layout!r} needs encode_impl='staged'")
 
     def resolve_codec(self) -> str:
         """Amplitude encoding for the wire codec ("off" disables)."""
@@ -106,6 +133,7 @@ class FlexConfig:
     def make(self) -> rbase.Replicator:
         wire = compression.WireFormat(value_bytes=self.value_bytes)
         amp = self.resolve_codec()
+        lap = dict(overlap=self.overlap, n_buckets=self.n_buckets)
         if self.scheme == "demo":
             k = self.topk
             if k is None:
@@ -113,21 +141,22 @@ class FlexConfig:
             return make_replicator("demo", chunk_size=self.chunk_size, topk=k,
                                    wire=wire, extract_impl=self.extract_impl,
                                    codec=amp, idx_layout=self.idx_layout,
-                                   sync_impl=self.sync_impl)
+                                   sync_impl=self.sync_impl,
+                                   encode_impl=self.encode_impl, **lap)
         if self.scheme == "random":
             return make_replicator("random", rate=self.rate, wire=wire,
-                                   impl=self.sync_impl, codec=amp)
+                                   impl=self.sync_impl, codec=amp, **lap)
         if self.scheme == "striding":
             stride = compression.rate_to_stride(self.rate)
             return make_replicator("striding", stride=stride, wire=wire,
-                                   impl=self.sync_impl, codec=amp)
+                                   impl=self.sync_impl, codec=amp, **lap)
         if self.scheme == "diloco":
             period = compression.rate_to_stride(self.rate)
             return make_replicator("diloco", period=period, wire=wire,
-                                   codec=amp, impl=self.sync_impl)
+                                   codec=amp, impl=self.sync_impl, **lap)
         if self.scheme == "full":
             return make_replicator("full", wire=wire, codec=amp,
-                                   impl=self.sync_impl)
+                                   impl=self.sync_impl, **lap)
         if self.scheme == "none":
             return make_replicator("none")
         raise KeyError(f"unknown scheme {self.scheme!r}")

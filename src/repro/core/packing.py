@@ -138,6 +138,118 @@ def slot_rows(mat: jnp.ndarray, slot: LeafSlot) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# leaf-group buckets: the overlap engine's unit of pipelining.
+#
+# A bucket is a CONTIGUOUS run of leaf slots — its rows are one slice
+# [row_start, row_start + n_rows) of the packed chunk matrix, so per-bucket
+# extraction/encode/decode touch disjoint row ranges and the bucketed result
+# is row-for-row identical to the monolithic one (DCT, top-k, sign, and the
+# codec are all row-local).  Buckets exist so each one's encoded collective
+# forms an INDEPENDENT dependency chain: the scheduler can launch bucket b's
+# transfer while bucket b-1's payload is still decoding (see
+# replicators.base.ring_gather_decode_buckets).
+
+
+DEFAULT_N_BUCKETS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One contiguous leaf group of a :class:`PackedLayout`."""
+
+    index: int
+    row_start: int            # first chunk row of the group
+    n_rows: int               # valid rows (sum of member slots' n_rows)
+    n_rows_padded: int        # rows after per-bucket Pallas tile padding
+    slots: tuple[LeafSlot, ...]
+
+
+def resolve_n_buckets(requested: int, n_leaves: int) -> int:
+    """Bucket count for a tree of ``n_leaves``: ``requested`` (0 = the
+    :data:`DEFAULT_N_BUCKETS` default) clamped to the leaf count — a bucket
+    boundary can only sit on a leaf boundary, so a tree can never split into
+    more buckets than it has leaves."""
+    if requested < 0:
+        raise ValueError(f"n_buckets must be >= 0, got {requested}")
+    want = requested if requested else DEFAULT_N_BUCKETS
+    return max(1, min(want, n_leaves))
+
+
+def plan_buckets(layout: PackedLayout, n_buckets: int) -> tuple[Bucket, ...]:
+    """Split ``layout``'s slots into ``n_buckets`` contiguous leaf groups.
+
+    Boundary rule: walk the slots in packing order, closing a bucket once it
+    holds at least ``ceil(remaining_rows / remaining_buckets)`` rows — a
+    greedy balance that keeps per-bucket payloads within one (largest) leaf
+    of each other without ever splitting a leaf across buckets.  Deriving
+    boundaries from the static ``row_start`` offsets keeps the plan a pure
+    function of (treedef, shapes, chunk_size, n_buckets): identical on every
+    replica and static under jit/shard_map.
+    """
+    n_buckets = resolve_n_buckets(n_buckets, layout.n_leaves)
+    buckets: list[Bucket] = []
+    slots = list(layout.slots)
+    i = 0
+    rows_left = layout.n_rows
+    for b in range(n_buckets):
+        target = math.ceil(rows_left / (n_buckets - b))
+        group: list[LeafSlot] = []
+        rows = 0
+        # leave at least one slot per remaining bucket
+        while i < len(slots) and (rows < target or not group):
+            if len(slots) - i <= (n_buckets - b - 1) - (0 if group else 1):
+                break
+            group.append(slots[i])
+            rows += slots[i].n_rows
+            i += 1
+        buckets.append(Bucket(index=b, row_start=group[0].row_start,
+                              n_rows=rows, n_rows_padded=_pad_rows(rows),
+                              slots=tuple(group)))
+        rows_left -= rows
+    assert i == len(slots) and rows_left == 0, (i, len(slots), rows_left)
+    return tuple(buckets)
+
+
+def bucket_rows(mat: jnp.ndarray, bucket: Bucket,
+                pad: bool = False) -> jnp.ndarray:
+    """One bucket's slice of a packed per-row tensor; ``pad`` appends the
+    zero rows that bring the slice to the bucket's Pallas tile padding."""
+    rows = jax.lax.slice_in_dim(mat, bucket.row_start,
+                                bucket.row_start + bucket.n_rows, axis=0)
+    tail = bucket.n_rows_padded - bucket.n_rows
+    if pad and tail:
+        rows = jnp.pad(rows, ((0, tail),) + ((0, 0),) * (rows.ndim - 1))
+    return rows
+
+
+def plan_value_buckets(layout: ValueStreamLayout,
+                       n_buckets: int) -> tuple[tuple[int, int], ...]:
+    """Contiguous ``(offset, size)`` leaf-group runs of one value stream.
+
+    The dense-scheme analogue of :func:`plan_buckets`: the same greedy
+    leaf-boundary balance, over selected-value counts instead of chunk rows.
+    """
+    n_buckets = resolve_n_buckets(n_buckets, len(layout.sizes))
+    runs: list[tuple[int, int]] = []
+    i = 0
+    left = layout.n_total
+    n = len(layout.sizes)
+    for b in range(n_buckets):
+        target = math.ceil(left / (n_buckets - b))
+        start = layout.offsets[i]
+        size = 0
+        while i < n and (size < target or size == 0):
+            if n - i <= (n_buckets - b - 1) - (0 if size else 1):
+                break
+            size += layout.sizes[i]
+            i += 1
+        runs.append((start, size))
+        left -= size
+    assert i == n and left == 0, (i, n, left)
+    return tuple(runs)
+
+
+# ---------------------------------------------------------------------------
 # bare value streams: the dense-scheme (random/striding/full/diloco) layout.
 # No chunk rows here — the per-leaf selected values are laid end to end into
 # ONE flat stream, so the whole tree rides ONE DenseCodec buffer and ONE

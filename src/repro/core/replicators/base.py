@@ -39,6 +39,63 @@ import jax.numpy as jnp
 
 SYNC_IMPLS = ("gather", "psum", "ring", "auto")
 
+OVERLAP_MODES = ("auto", "on", "off")
+ENCODE_IMPLS = ("auto", "staged", "fused")
+
+
+def resolve_overlap(overlap: str, *, amp: str, n_buckets: int = 0) -> bool:
+    """Resolve an ``overlap`` mode to the bucketed-engine on/off decision.
+
+    ``on``   -- bucketed overlap engine: the packed payload splits into
+                leaf-group buckets, each with its OWN encoded buffer and its
+                own collective (one extra 24 B header per bucket on the
+                wire).  Requires a codec: the buckets are slices of the
+                encoded byte stream, so ``codec="off"`` leaves nothing to
+                bucket (same contract as ``sync_impl="ring"``).
+    ``off``  -- today's monolithic one-buffer-per-tree path.
+    ``auto`` -- ``on`` iff the caller EXPLICITLY requested a bucket split
+                (``n_buckets >= 2``) and a codec is on.  Conservative by
+                design: turning buckets on changes the wire byte count (the
+                extra headers), so the committed wire contracts — bench and
+                convergence baselines — only move when a config opts in.
+    """
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(f"unknown overlap mode {overlap!r}; "
+                         "have auto | on | off")
+    if overlap == "on":
+        if amp == "off":
+            raise ValueError(
+                "overlap='on' buckets the ENCODED wire buffer, and "
+                "codec='off' leaves no byte stream to bucket; keep a codec "
+                "on for the overlap engine, or set overlap='off'")
+        return True
+    if overlap == "auto":
+        return amp != "off" and n_buckets >= 2
+    return False
+
+
+def resolve_encode_impl(impl: str, amp: str) -> str:
+    """Resolve/validate an ``encode_impl``.
+
+    ``staged`` -- extraction kernel, then the jnp codec serialization
+                  (bitcasts + concat) as separate stages.
+    ``fused``  -- the single-launch Pallas encode (DCT + top-k + sign + byte
+                  pack in one kernel; see ``kernels.dct_topk.encode``).
+                  Requires a codec — the kernel WRITES the wire payload.
+    ``auto``   -- ``staged`` (the fused kernel is opt-in: it subsumes the
+                  extraction kernel, so selecting it also pins the Pallas
+                  extract path).
+    """
+    if impl not in ENCODE_IMPLS:
+        raise ValueError(f"unknown encode_impl {impl!r}; "
+                         "have auto | staged | fused")
+    if impl == "fused" and amp == "off":
+        raise ValueError("encode_impl='fused' writes the encoded wire "
+                         "payload inside the kernel, and codec='off' has no "
+                         "wire payload; keep a codec on, or use "
+                         "encode_impl='staged'")
+    return "staged" if impl == "auto" else impl
+
 
 def resolve_sync_impl(impl: str, amp: str, sign: bool = True) -> str:
     """Resolve/validate a sync transport against the resolved codec ``amp``.
@@ -222,6 +279,54 @@ def ring_gather_decode(
     return acc, int(math.prod(sizes.values()))
 
 
+def ring_gather_decode_buckets(
+    bufs: Sequence[jnp.ndarray],
+    *,
+    axes: Sequence[str],
+    accumulates: Sequence[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]],
+    inits: Sequence[jnp.ndarray],
+) -> tuple[list[jnp.ndarray], int]:
+    """Double-buffered multi-bucket ring: B independent pipelined rings whose
+    hops are interleaved so transfers overlap decodes ACROSS buckets.
+
+    :func:`ring_gather_decode` already overlaps within one buffer — hop
+    ``k+1``'s ``ppermute`` consumes the in-flight buffer, not the
+    accumulator, so it can start while hop ``k``'s decode runs.  But a
+    single buffer gives the scheduler exactly ONE hop of slack.  With
+    per-bucket buffers the engine emits, per hop, ALL B ``ppermute``s and
+    THEN the B decode-accumulates: bucket ``b``'s hop-``k`` transfer has no
+    data dependence on any other bucket's decode chain, so the scheduler is
+    free to run bucket ``b+1``'s ppermute while bucket ``b``'s arrived
+    payload is inside the Pallas decode-accumulate — hop ``k``'s transfers
+    hide under hop ``k-1``..``k``'s decodes instead of only their own
+    bucket's.  Peak live bytes stay ``2 * sum(B_b)`` plus the accumulators
+    (each bucket holds one arrived + one in-flight copy), identical in total
+    to the monolithic ring.
+
+    The fold order per bucket is exactly :func:`ring_gather_decode`'s, so
+    bucketed results are bit-identical to the monolithic ring whenever the
+    per-row decode is (ternary sign payloads always; see the parity suite).
+
+    Returns ``([acc_b, ...], |R|)``.
+    """
+    assert len(bufs) == len(accumulates) == len(inits), (
+        len(bufs), len(accumulates), len(inits))
+    accs = [acc_fn(init, buf)
+            for acc_fn, init, buf in zip(accumulates, inits, bufs)]
+    if not axes:
+        return accs, 1
+    sizes = {a: int(jax.lax.psum(1, a)) for a in axes}
+    inflight = list(bufs)
+    for ax in _ring_schedule(tuple(axes), sizes):
+        # start EVERY bucket's hop before decoding ANY arrival: the ppermute
+        # of bucket b and the decode of bucket b' != b are independent, which
+        # is the slack the latency-hiding scheduler needs.
+        inflight = [ring_shift(x, ax, sizes[ax]) for x in inflight]
+        accs = [acc_fn(acc, arrived) for acc_fn, acc, arrived
+                in zip(accumulates, accs, inflight)]
+    return accs, int(math.prod(sizes.values()))
+
+
 def sync_dense_values(
     vals: jnp.ndarray,
     *,
@@ -274,6 +379,55 @@ def sync_dense_values(
     return vals, modeled_bytes
 
 
+def sync_dense_values_bucketed(
+    stream: jnp.ndarray,
+    runs: Sequence[tuple[int, int]],
+    *,
+    axes: Sequence[str],
+    impl: str = "auto",
+    codec: str = "fp32",
+    sign: bool = False,
+) -> tuple[jnp.ndarray, int]:
+    """Bucketed overlap transport for one dense value stream.
+
+    Each ``(offset, size)`` leaf-group run (``packing.plan_value_buckets``)
+    is encoded into its OWN ``DenseCodec`` buffer and synced by its own
+    collective — the ring hops interleave across buckets through
+    :func:`ring_gather_decode_buckets`, the gathers form independent
+    dependency chains — so a bucket's transfer can hide under another
+    bucket's decode (and under surrounding compute).  Wire cost vs the
+    monolithic buffer: one extra 24 B header per extra bucket (int8 also
+    re-aligns its absmax scale groups at bucket boundaries, which changes
+    the scale-byte count and quantization brackets; fp32/bf16/sign payloads
+    are value-local and stay bit-identical).  Returns
+    ``(mean_stream, wire_bytes)``.
+    """
+    from repro.comms import codecs
+
+    impl = resolve_sync_impl(impl, codec, sign)
+    if codec == "off":
+        raise ValueError("bucketed dense sync requires a codec: the buckets "
+                         "are slices of the encoded byte stream")
+    cods = [codecs.DenseCodec(size, codec, signed=sign)
+            for _, size in runs]
+    parts = [jax.lax.slice_in_dim(stream, off, off + size, axis=0)
+             for off, size in runs]
+    bufs = [cod.encode(p) for cod, p in zip(cods, parts)]
+    wire = sum(cod.wire_bytes for cod in cods)
+    if impl == "ring" and axes:
+        accs, n = ring_gather_decode_buckets(
+            bufs, axes=axes,
+            accumulates=[(lambda a, b, c=cod: a + c.decode(b))
+                         for cod in cods],
+            inits=[jnp.zeros((size,), jnp.float32) for _, size in runs])
+        return jnp.concatenate([a / n for a in accs]), wire
+    means = []
+    for cod, buf in zip(cods, bufs):
+        g = buf[None] if not axes else gather_stack(buf, axes)
+        means.append(cod.decode(g).mean(axis=0))
+    return jnp.concatenate(means), wire
+
+
 def maybe_sign(x: jnp.ndarray, sign: bool) -> jnp.ndarray:
     # paper appendix B: sign-before-sync is "a corner-stone" of the scheme.
     return jnp.sign(x) if sign else x
@@ -305,6 +459,10 @@ class ValueStreamReplicator(Replicator):
     # dataclass fields supplied by subclasses:
     impl: str = "auto"
     codec: str = "fp32"
+    # bucketed overlap engine (see resolve_overlap): "on" splits the tree
+    # stream into n_buckets leaf-group buffers with independent collectives.
+    overlap: str = "auto"
+    n_buckets: int = 0
 
     def select_leaf(self, m: jnp.ndarray, *, step, seed: int, sign: bool):
         """-> ``(vals, ctx)``: the leaf's selected value stream (static
@@ -317,6 +475,12 @@ class ValueStreamReplicator(Replicator):
 
     def _validate_impl(self):
         resolve_sync_impl(self.impl, self.codec)
+        resolve_overlap(self.overlap, amp=self.codec,
+                        n_buckets=self.n_buckets)
+
+    def _overlap_on(self) -> bool:
+        return resolve_overlap(self.overlap, amp=self.codec,
+                               n_buckets=self.n_buckets)
 
     def _resolved_impl(self, sign: bool) -> str:
         """The transport this scheme's ``impl``/``codec``/``sign`` resolve to
@@ -371,9 +535,19 @@ class ValueStreamReplicator(Replicator):
             for path, leaf in paths_leaves]
         layout = packing.plan_values(tuple(v.size for v, _ in selected))
         stream = packing.pack_values([v for v, _ in selected], layout)
-        mean_stream, wire = sync_dense_values(
-            stream, axes=axes, impl=self._resolved_impl(sign),
-            codec=self.codec, sign=sign)
+        if self._overlap_on():
+            # bucketed overlap engine: the stream splits at leaf boundaries
+            # into n_buckets runs, each with its own buffer + collective, so
+            # transfers overlap decodes across buckets (one extra 24 B
+            # header per extra bucket on the wire).
+            runs = packing.plan_value_buckets(layout, self.n_buckets)
+            mean_stream, wire = sync_dense_values_bucketed(
+                stream, runs, axes=axes, impl=self._resolved_impl(sign),
+                codec=self.codec, sign=sign)
+        else:
+            mean_stream, wire = sync_dense_values(
+                stream, axes=axes, impl=self._resolved_impl(sign),
+                codec=self.codec, sign=sign)
         parts = packing.unpack_values(mean_stream, layout)
         qs, res = [], []
         for (_, leaf), (_, ctx), part in zip(paths_leaves, selected, parts):

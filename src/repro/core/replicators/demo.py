@@ -74,11 +74,31 @@ class DeMoReplicator(base.Replicator):
     # the ring transport always uses the unrolled accumulate-into kernel
     # (one replica per hop — there is no (R, C, k) stack to contract).
     decode_impl: str = "unrolled"
+    # Bucketed overlap engine: "on" splits the packed (C, s) chunk matrix
+    # into n_buckets contiguous leaf groups (packing.plan_buckets), each
+    # encoded and synced through its OWN collective, so bucket b's transfer
+    # overlaps bucket b-1's decode (ring hops are double-buffered ACROSS
+    # buckets: base.ring_gather_decode_buckets).  Requires a codec; "auto"
+    # turns on iff a codec is on AND n_buckets >= 2 was requested.
+    overlap: str = "auto"
+    n_buckets: int = 0
+    # Wire encode: "staged" (extract kernel, then jnp.sign, then the codec's
+    # serialization pass) or "fused" (ONE Pallas launch: DCT + top-k + sign
+    # + byte pack writing the uint8 wire segments directly; requires a codec
+    # and the v2 "local" idx layout).  "auto" -> staged.
+    encode_impl: str = "auto"
 
     def __post_init__(self):
         # validate sync_impl x codec at construction (ring needs a buffer to
         # stream, psum forbids one) — same contract as FlexConfig.
         base.resolve_sync_impl(self.sync_impl, self.amp_dtype())
+        base.resolve_overlap(self.overlap, amp=self.amp_dtype(),
+                             n_buckets=self.n_buckets)
+        if (base.resolve_encode_impl(self.encode_impl, self.amp_dtype())
+                == "fused" and self.idx_layout != "local"):
+            raise ValueError(
+                "encode_impl='fused' emits wire v2 in-chunk positions; "
+                f"idx_layout={self.idx_layout!r} needs encode_impl='staged'")
 
     def amp_dtype(self) -> str:
         from repro.comms import codecs
@@ -183,9 +203,38 @@ class DeMoReplicator(base.Replicator):
         impl = compression.resolve_extract_impl(self.extract_impl)
         kernel = impl in ("pallas", "pallas_interpret")
         interpret = impl == "pallas_interpret"
+        amp = self.amp_dtype()
+
+        if base.resolve_overlap(self.overlap, amp=amp,
+                                n_buckets=self.n_buckets):
+            return self._communicate_tree_bucketed(momentum, axes=axes,
+                                                   sign=sign)
 
         layout = packing.plan_tree(momentum, s)
         chunks = packing.pack_tree(momentum, layout)           # (C_pad, s)
+        sync = self._sync_impl(sign)
+        pad = layout.n_rows_padded - layout.n_rows
+        if base.resolve_encode_impl(self.encode_impl, amp) == "fused":
+            # fused single-launch encode: DCT + top-k + sign + byte pack in
+            # ONE Pallas call; the wire buffer comes straight off the kernel
+            # (byte-identical to the staged encode below).
+            from repro.comms import codecs
+            from repro.kernels.dct_topk.ops import fused_encode_packed
+
+            codec = codecs.PackedCodec(
+                n_rows=layout.n_rows, chunk_size=s, k=k, amp_dtype=amp,
+                signed=sign, idx_layout=self.idx_layout)
+            payload, q_rows = fused_encode_packed(
+                chunks, codec, interpret=impl != "pallas")
+            q_local = packing.unpack_tree(q_rows, layout)
+            residual = jax.tree_util.tree_map(
+                lambda m, q: (m.astype(jnp.float32) - q).astype(m.dtype),
+                momentum, q_local)
+            wire = codec.wire_bytes
+            return self._decode_payload(
+                momentum, payload, codec, layout, axes=axes, sync=sync,
+                kernel=kernel, interpret=interpret, wire=wire,
+                residual=residual)
         vals, idx, q_rows = compression.packed_dct_topk(chunks, k, impl=impl)
         q_local = packing.unpack_tree(q_rows, layout)
         residual = jax.tree_util.tree_map(
@@ -193,9 +242,6 @@ class DeMoReplicator(base.Replicator):
             momentum, q_local)
         tx = base.maybe_sign(vals, sign)
 
-        amp = self.amp_dtype()
-        sync = self._sync_impl(sign)
-        pad = layout.n_rows_padded - layout.n_rows
         if amp != "off":
             # real wire path: ONE contiguous encoded buffer on the collective.
             # Pallas pad rows (extract to zero values) are sliced off before
@@ -209,47 +255,10 @@ class DeMoReplicator(base.Replicator):
                 n_rows=layout.n_rows, chunk_size=s, k=k, amp_dtype=amp,
                 signed=sign, idx_layout=self.idx_layout)
             payload = codec.encode(tx[:layout.n_rows], idx[:layout.n_rows])
-            wire = codec.wire_bytes
-            if sync == "ring" and axes:
-                # streaming ring: the (|R|, B) gathered stack is never built.
-                # Each hop decodes ONE buffer into the (C_pad, s) coefficient
-                # accumulator — the fused accumulate-into Pallas kernel when
-                # a kernel impl is selected — while ppermute forwards the
-                # in-flight copy; the mean + iDCT run once after the last
-                # hop with the same tiling as the gathered kernel.
-                if kernel:
-                    from repro.kernels.dct_topk.ops import (decode_topk_accum,
-                                                            idct_mean)
-
-                def accum(acc, buf):
-                    v, i = codec.decode(buf)                   # (C, k)
-                    if pad:
-                        v = jnp.pad(v, ((0, pad), (0, 0)))
-                        i = jnp.pad(i, ((0, pad), (0, 0)))
-                    if kernel:
-                        return decode_topk_accum(v, i, acc,
-                                                 interpret=interpret)
-                    return compression.accumulate_coeff(acc, v, i)
-
-                acc, n = base.ring_gather_decode(
-                    payload, axes=axes, accumulate=accum,
-                    init=jnp.zeros((layout.n_rows_padded, s), jnp.float32))
-                if kernel:
-                    q_sync_rows = idct_mean(acc, s, n, interpret=interpret)
-                else:
-                    q_sync_rows = compression.coeff_mean_idct(acc, n, s)
-                q_sync = jax.tree_util.tree_map(
-                    lambda m, q: q.astype(m.dtype), momentum,
-                    packing.unpack_tree(q_sync_rows, layout))
-                return q_sync, residual, wire
-            if not axes:
-                g_buf = payload[None]                          # |R| = 1
-            else:
-                g_buf = base.gather_stack(payload, axes)
-            g_vals, g_idx = codec.decode(g_buf)                # (|R|, C, k)
-            if pad:
-                g_vals = jnp.pad(g_vals, ((0, 0), (0, pad), (0, 0)))
-                g_idx = jnp.pad(g_idx, ((0, 0), (0, pad), (0, 0)))
+            return self._decode_payload(
+                momentum, payload, codec, layout, axes=axes, sync=sync,
+                kernel=kernel, interpret=interpret, wire=codec.wire_bytes,
+                residual=residual)
         else:
             if not axes:
                 g_vals, g_idx = tx[None], idx[None]            # |R| = 1
@@ -282,6 +291,173 @@ class DeMoReplicator(base.Replicator):
         q_sync = jax.tree_util.tree_map(
             lambda m, q: q.astype(m.dtype), momentum,
             packing.unpack_tree(q_sync_rows, layout))
+        return q_sync, residual, wire
+
+    def _decode_payload(self, momentum, payload, codec, layout, *, axes,
+                        sync, kernel, interpret, wire, residual):
+        """Sync + decode ONE encoded buffer (ring or gather transport).
+
+        Ring: the (|R|, B) gathered stack is never built.  Each hop decodes
+        ONE buffer into the (C_pad, s) coefficient accumulator — the fused
+        accumulate-into Pallas kernel when a kernel impl is selected — while
+        ppermute forwards the in-flight copy; the mean + iDCT run once after
+        the last hop with the same tiling as the gathered kernel.
+        """
+        s = self.chunk_size
+        pad = layout.n_rows_padded - layout.n_rows
+        if sync == "ring" and axes:
+            if kernel:
+                from repro.kernels.dct_topk.ops import (decode_topk_accum,
+                                                        idct_mean)
+
+            def accum(acc, buf):
+                v, i = codec.decode(buf)                       # (C, k)
+                if pad:
+                    v = jnp.pad(v, ((0, pad), (0, 0)))
+                    i = jnp.pad(i, ((0, pad), (0, 0)))
+                if kernel:
+                    return decode_topk_accum(v, i, acc, interpret=interpret)
+                return compression.accumulate_coeff(acc, v, i)
+
+            acc, n = base.ring_gather_decode(
+                payload, axes=axes, accumulate=accum,
+                init=jnp.zeros((layout.n_rows_padded, s), jnp.float32))
+            if kernel:
+                q_sync_rows = idct_mean(acc, s, n, interpret=interpret)
+            else:
+                q_sync_rows = compression.coeff_mean_idct(acc, n, s)
+        else:
+            if not axes:
+                g_buf = payload[None]                          # |R| = 1
+            else:
+                g_buf = base.gather_stack(payload, axes)
+            g_vals, g_idx = codec.decode(g_buf)                # (|R|, C, k)
+            if pad:
+                g_vals = jnp.pad(g_vals, ((0, 0), (0, pad), (0, 0)))
+                g_idx = jnp.pad(g_idx, ((0, 0), (0, pad), (0, 0)))
+            if kernel:
+                from repro.kernels.dct_topk.ops import decode_topk_gathered
+
+                q_sync_rows = decode_topk_gathered(
+                    g_vals, g_idx, s, interpret=interpret,
+                    matmul=self.decode_impl == "matmul")
+            else:
+                q_sync_rows = compression.decode_gathered_ref(
+                    g_vals, g_idx, s)
+        q_sync = jax.tree_util.tree_map(
+            lambda m, q: q.astype(m.dtype), momentum,
+            packing.unpack_tree(q_sync_rows, layout))
+        return q_sync, residual, wire
+
+    def _communicate_tree_bucketed(self, momentum, *, axes, sign):
+        """The overlap engine: one encoded collective PER LEAF-GROUP BUCKET.
+
+        Each bucket is a contiguous row slice of the packed chunk matrix
+        (``packing.plan_buckets``), extracted/encoded independently so its
+        collective launches as soon as its rows are ready, and — on the ring
+        transport — hop k's ppermutes of ALL buckets are emitted before hop
+        k-1's decode-accumulates (``base.ring_gather_decode_buckets``), so
+        every transfer has a decode of ANOTHER bucket to hide behind.
+
+        Row-for-row identical to the monolithic path (DCT, top-k, sign, and
+        the codec are all row-local; the ternary fp32 ring fold is
+        order-exact), at the wire cost of one extra 24 B header per extra
+        bucket.
+        """
+        s, k = self.chunk_size, self.topk
+        impl = compression.resolve_extract_impl(self.extract_impl)
+        kernel = impl in ("pallas", "pallas_interpret")
+        interpret = impl == "pallas_interpret"
+        amp = self.amp_dtype()
+        sync = self._sync_impl(sign)
+        fused = base.resolve_encode_impl(self.encode_impl, amp) == "fused"
+
+        from repro.comms import codecs
+
+        if kernel or fused:
+            from repro.kernels.dct_topk import ops as kops
+
+        layout = packing.plan_tree(momentum, s)
+        chunks = packing.pack_tree(momentum, layout)           # (C_pad, s)
+        buckets = packing.plan_buckets(layout, self.n_buckets)
+
+        payloads, plans, q_parts = [], [], []
+        for b in buckets:
+            rows = packing.bucket_rows(chunks, b, pad=True)
+            cod = codecs.PackedCodec(
+                n_rows=b.n_rows, chunk_size=s, k=k, amp_dtype=amp,
+                signed=sign, idx_layout=self.idx_layout)
+            if fused:
+                buf, q_b = kops.fused_encode_packed(
+                    rows, cod, interpret=impl != "pallas")
+            else:
+                vals, idx, q_b = compression.packed_dct_topk(
+                    rows, k, impl=impl)
+                tx = base.maybe_sign(vals, sign)
+                buf = cod.encode(tx[:b.n_rows], idx[:b.n_rows])
+            payloads.append(buf)
+            plans.append(cod)
+            q_parts.append(q_b[:b.n_rows])
+        q_local = packing.unpack_tree(jnp.concatenate(q_parts), layout)
+        residual = jax.tree_util.tree_map(
+            lambda m, q: (m.astype(jnp.float32) - q).astype(m.dtype),
+            momentum, q_local)
+        wire = sum(cod.wire_bytes for cod in plans)
+
+        if sync == "ring" and axes:
+            def make_accum(cod, b):
+                tail = b.n_rows_padded - b.n_rows
+
+                def accum(acc, buf):
+                    v, i = cod.decode(buf)                     # (C_b, k)
+                    if tail:
+                        v = jnp.pad(v, ((0, tail), (0, 0)))
+                        i = jnp.pad(i, ((0, tail), (0, 0)))
+                    if kernel:
+                        return kops.decode_topk_accum(v, i, acc,
+                                                      interpret=interpret)
+                    return compression.accumulate_coeff(acc, v, i)
+
+                return accum
+
+            accs, n = base.ring_gather_decode_buckets(
+                payloads, axes=axes,
+                accumulates=[make_accum(cod, b)
+                             for cod, b in zip(plans, buckets)],
+                inits=[jnp.zeros((b.n_rows_padded, s), jnp.float32)
+                       for b in buckets])
+            parts = []
+            for acc, b in zip(accs, buckets):
+                if kernel:
+                    q_b = kops.idct_mean(acc, s, n, interpret=interpret)
+                else:
+                    q_b = compression.coeff_mean_idct(acc, n, s)
+                parts.append(q_b[:b.n_rows])
+        else:
+            # gathered transport: each bucket still rides its OWN collective
+            # (independent dependency chains — bucket b+1's gather can be in
+            # flight while bucket b's stack decodes).
+            parts = []
+            for buf, cod, b in zip(payloads, plans, buckets):
+                if not axes:
+                    g_buf = buf[None]                          # |R| = 1
+                else:
+                    g_buf = base.gather_stack(buf, axes)
+                g_vals, g_idx = cod.decode(g_buf)              # (|R|, C_b, k)
+                tail = b.n_rows_padded - b.n_rows
+                if tail:
+                    g_vals = jnp.pad(g_vals, ((0, 0), (0, tail), (0, 0)))
+                    g_idx = jnp.pad(g_idx, ((0, 0), (0, tail), (0, 0)))
+                if kernel:
+                    q_b = kops.decode_topk_gathered(
+                        g_vals, g_idx, s, interpret=interpret,
+                        matmul=self.decode_impl == "matmul")
+                else:
+                    q_b = compression.decode_gathered_ref(g_vals, g_idx, s)
+                parts.append(q_b[:b.n_rows])
+        q_sync = jax.tree_util.tree_map(
+            lambda m, q: q.astype(m.dtype), momentum,
+            packing.unpack_tree(jnp.concatenate(parts), layout))
         return q_sync, residual, wire
 
     def wire_bytes(self, numel: int) -> int:

@@ -38,11 +38,18 @@ class DiLoCoReplicator(base.Replicator):
     codec: str = "fp32"
     # outer-step transport: gather | psum | ring | auto (ring with codec on)
     impl: str = "auto"
+    # bucketed overlap engine for the OUTER parameter average: "on" splits
+    # the param stream into n_buckets leaf-group buffers with independent
+    # collectives (base.resolve_overlap)
+    overlap: str = "auto"
+    n_buckets: int = 0
 
     params_diverge = True
 
     def __post_init__(self):
         base.resolve_sync_impl(self.impl, self.codec)
+        base.resolve_overlap(self.overlap, amp=self.codec,
+                             n_buckets=self.n_buckets)
 
     def communicate_leaf(
         self,
@@ -91,11 +98,21 @@ class DiLoCoReplicator(base.Replicator):
         q = jax.tree_util.tree_map(lambda m: base.maybe_sign(m, sign),
                                    momentum)
         from repro.comms import codecs
+        from repro.core import packing
         from repro.utils.tree import tree_numel
 
-        wire = codecs.dense_wire_bytes(tree_numel(momentum),
-                                       self.codec) // self.period
-        return q, momentum, wire
+        if base.resolve_overlap(self.overlap, amp=self.codec,
+                                n_buckets=self.n_buckets):
+            # the outer burst ships one DenseCodec buffer PER BUCKET
+            layout = packing.plan_values(
+                tuple(p.size for p in jax.tree_util.tree_leaves(momentum)))
+            burst = sum(
+                codecs.dense_wire_bytes(size, self.codec)
+                for _, size in packing.plan_value_buckets(
+                    layout, self.n_buckets))
+        else:
+            burst = codecs.dense_wire_bytes(tree_numel(momentum), self.codec)
+        return q, momentum, burst // self.period
 
     def postprocess_params(self, params, *, step: jnp.ndarray, axes: Sequence[str]):
         if not axes:
@@ -111,8 +128,15 @@ class DiLoCoReplicator(base.Replicator):
             layout = packing.plan_values(tuple(p.size for p in leaves))
             stream = packing.pack_values(
                 [p.reshape(-1) for p in leaves], layout)
-            vals, _ = base.sync_dense_values(
-                stream, axes=axes, impl=self.impl, codec=self.codec)
+            if base.resolve_overlap(self.overlap, amp=self.codec,
+                                    n_buckets=self.n_buckets):
+                runs = packing.plan_value_buckets(layout, self.n_buckets)
+                vals, _ = base.sync_dense_values_bucketed(
+                    stream, runs, axes=axes, impl=self.impl,
+                    codec=self.codec)
+            else:
+                vals, _ = base.sync_dense_values(
+                    stream, axes=axes, impl=self.impl, codec=self.codec)
             parts = packing.unpack_values(vals, layout)
             synced_leaves = [part.reshape(p.shape).astype(p.dtype)
                              for p, part in zip(leaves, parts)]

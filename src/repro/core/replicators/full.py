@@ -31,6 +31,10 @@ class FullReplicator(base.ValueStreamReplicator):
     impl: str = "auto"
     # dense value-stream codec: fp32 | bf16 | int8 | off (raw collective)
     codec: str = "fp32"
+    # bucketed overlap engine: "on" splits the tree stream into n_buckets
+    # leaf-group buffers with independent collectives (base.resolve_overlap)
+    overlap: str = "auto"
+    n_buckets: int = 0
 
     def __post_init__(self):
         self._validate_impl()

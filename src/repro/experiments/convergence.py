@@ -58,10 +58,17 @@ class Setting:
     deterministic: bool = False
     reference: bool = False          # the AdamW full-sync baseline row
     flexdemo: bool = False           # row the paper-parity criterion gates
+    # bucketed overlap engine: "on" splits the wire into n_buckets per-leaf-
+    # group collectives.  The committed SETTINGS keep the default (off) so
+    # baseline wire bytes stay put; tests spot-check that an overlap="on"
+    # variant reproduces the committed fp32+sign trajectory bit for bit.
+    overlap: str = "auto"
+    n_buckets: int = 0
 
     def flex(self) -> FlexConfig:
         return FlexConfig(scheme=self.scheme, rate=self.rate,
-                          codec=self.codec, sign=self.sign)
+                          codec=self.codec, sign=self.sign,
+                          overlap=self.overlap, n_buckets=self.n_buckets)
 
     def build_optimizer(self, lr):
         if self.optimizer == "adamw":

@@ -1,0 +1,124 @@
+"""Fused single-launch wire ENCODE kernel: DCT-II -> top-k -> sign -> bytes.
+
+The staged packed path runs three host-visible stages per step — the extract
+kernel (``dct_topk.py``), then ``jnp.sign``, then the codec's serialization
+pass (bitcasts over the full (C, k) arrays + concatenation).  This kernel
+fuses all of them into ONE ``pallas_call``: the chunk tile never leaves VMEM
+between the basis matmul, the k selection iterations, the ternarization, and
+the byte serialization, and what comes back from the kernel are the WIRE
+PAYLOAD SEGMENTS themselves (uint8), laid out exactly as
+``repro.comms.codecs.PackedCodec`` writes them:
+
+  * ``idx_u8   (C, k*iw)`` -- little-endian uint16/uint32 in-chunk positions
+                              (wire v2 "local" layout; the row is the buffer
+                              position, so no global offset is needed);
+  * ``amp_u8   (C, k*aw)`` -- amplitudes bitcast from f32 / bf16, or int8
+                              quantized against the per-row absmax;
+  * ``scale_u8 (C, 4)``    -- the f32 absmax scales (int8 only);
+  * ``q        (C, s)``    -- the PRE-SIGN locally decoded component (the
+                              residual's subtrahend, identical to the staged
+                              extract kernel's q output).
+
+The caller (``ops.fused_encode_packed``) prepends the 24 B trace-time-constant
+header and flattens the segments into the final contiguous uint8 wire buffer
+— one concatenation of already-serialized bytes, fused into the collective's
+input assembly by XLA; every compute stage ran in the single kernel launch.
+
+Bit-compatibility: the selection loop is the extract kernel's iterative
+argmax verbatim, and fp32 serialization is a pure bitcast, so a fused fp32
+(+sign) buffer is byte-identical to PackedCodec.encode over the staged Pallas
+extraction, and decodes with the SAME ``PackedCodec.decode`` / ring
+accumulate kernels — the fused encode changes how bytes are produced, never
+what is on the wire.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _to_bytes(x: jnp.ndarray) -> jnp.ndarray:
+    """(TC, k) -> (TC, k * itemsize) uint8, little-endian per element."""
+    b = jax.lax.bitcast_convert_type(x, jnp.uint8)    # (TC, k, itemsize)
+    return b.reshape(b.shape[0], -1)
+
+
+def _encode_kernel(x_ref, basis_ref, idx8_ref, amp8_ref, scale8_ref, q_ref,
+                   *, k: int, sign: bool, amp_dtype: str, idx_dtype):
+    x = x_ref[...]                       # (TC, s)
+    basis = basis_ref[...]               # (s, s)
+    coeff = jnp.dot(x, basis.T, preferred_element_type=jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, coeff.shape, 1)
+
+    # --- top-k selection: the extract kernel's argmax loop, verbatim -------
+    mag = jnp.abs(coeff)
+    kept = jnp.zeros_like(coeff, dtype=jnp.bool_)
+    val_cols, idx_cols = [], []
+    for _ in range(k):
+        am = jnp.argmax(mag, axis=-1)                     # (TC,)
+        onehot = cols == am[:, None]
+        val_cols.append(jnp.sum(jnp.where(onehot, coeff, 0.0), axis=-1))
+        idx_cols.append(am.astype(jnp.int32))
+        kept = kept | onehot
+        mag = jnp.where(onehot, -1.0, mag)
+    vals = jnp.stack(val_cols, axis=1)                    # (TC, k) f32
+    idx = jnp.stack(idx_cols, axis=1)                     # (TC, k) i32
+
+    # --- local decode (pre-sign: the residual's subtrahend) ----------------
+    q_ref[...] = jnp.dot(jnp.where(kept, coeff, 0.0), basis,
+                         preferred_element_type=jnp.float32)
+
+    # --- sign + byte serialization (the wire payload segments) -------------
+    tx = jnp.sign(vals) if sign else vals
+    idx8_ref[...] = _to_bytes(idx.astype(idx_dtype))
+    if amp_dtype == "fp32":
+        amp8_ref[...] = _to_bytes(tx)
+        scale8_ref[...] = jnp.zeros(scale8_ref.shape, jnp.uint8)
+    elif amp_dtype == "bf16":
+        amp8_ref[...] = _to_bytes(tx.astype(jnp.bfloat16))
+        scale8_ref[...] = jnp.zeros(scale8_ref.shape, jnp.uint8)
+    else:                                # int8: per-row absmax quantization
+        scale = jnp.max(jnp.abs(tx), axis=-1)             # (TC,)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q8 = jnp.clip(jnp.round(tx / safe[:, None] * 127.0),
+                      -127, 127).astype(jnp.int8)
+        amp8_ref[...] = _to_bytes(q8)
+        scale8_ref[...] = _to_bytes(scale[:, None])
+
+
+def encode_call(chunks: jnp.ndarray, basis: jnp.ndarray, k: int, *,
+                sign: bool, amp_dtype: str, idx_dtype,
+                tile_c: int = 256, interpret: bool = False):
+    """chunks (C, s) f32 -> (idx_u8 (C, k*iw), amp_u8 (C, k*aw),
+    scale_u8 (C, 4), q (C, s)); one kernel launch over a row-tiled grid."""
+    c, s = chunks.shape
+    tile_c = min(tile_c, c)
+    assert c % tile_c == 0, (c, tile_c)
+    iw = jnp.dtype(idx_dtype).itemsize
+    aw = {"fp32": 4, "bf16": 2, "int8": 1}[amp_dtype]
+    grid = (c // tile_c,)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, k=k, sign=sign,
+                          amp_dtype=amp_dtype, idx_dtype=idx_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_c, s), lambda i: (i, 0)),
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_c, k * iw), lambda i: (i, 0)),
+            pl.BlockSpec((tile_c, k * aw), lambda i: (i, 0)),
+            pl.BlockSpec((tile_c, 4), lambda i: (i, 0)),
+            pl.BlockSpec((tile_c, s), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, k * iw), jnp.uint8),
+            jax.ShapeDtypeStruct((c, k * aw), jnp.uint8),
+            jax.ShapeDtypeStruct((c, 4), jnp.uint8),
+            jax.ShapeDtypeStruct((c, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(chunks, basis)

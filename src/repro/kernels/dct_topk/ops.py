@@ -12,11 +12,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dct
 from repro.kernels.dct_topk.dct_topk import dct_topk_call
 from repro.kernels.dct_topk.decode import (decode_accum_call,
                                            decode_topk_call, idct_mean_call)
+from repro.kernels.dct_topk.encode import encode_call
 
 
 def _tile_rows(c: int, cap: int = 256) -> int:
@@ -56,6 +58,41 @@ def dct_topk_packed(chunks: jnp.ndarray, k: int, interpret: bool = False):
     basis = dct.dct_basis(s, jnp.float32)
     return dct_topk_call(chunks.astype(jnp.float32), basis, k,
                          tile_c=_tile_rows(c), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "interpret"))
+def fused_encode_packed(chunks: jnp.ndarray, codec, interpret: bool = False):
+    """Fused single-launch wire encode over pre-packed chunk rows.
+
+    chunks: (C_pad, s) f32 — the whole tree (or one bucket), one launch.
+    ``codec`` is the static :class:`repro.comms.codecs.PackedCodec` plan
+    (``n_rows <= C_pad``; wire v2 "local" layout only — the fused kernel
+    writes in-chunk positions).  Returns ``(buf, q)`` where ``buf`` is the
+    ``(codec.wire_bytes,)`` uint8 wire buffer — byte-identical to
+    ``codec.encode(sign(vals), idx)`` over the staged Pallas extraction —
+    and ``q`` is the (C_pad, s) PRE-SIGN locally decoded component for the
+    residual.  DCT, top-k, sign, and byte serialization all run inside the
+    one kernel; only the header prepend + segment concat remain outside.
+    """
+    assert codec.idx_layout == "local", (
+        "fused encode emits wire v2 in-chunk positions; "
+        f"idx_layout={codec.idx_layout!r} needs the staged path")
+    c, s = chunks.shape
+    assert s == codec.chunk_size and codec.n_rows <= c, (
+        chunks.shape, codec.n_rows, codec.chunk_size)
+    basis = dct.dct_basis(s, jnp.float32)
+    idx8, amp8, scale8, q = encode_call(
+        chunks.astype(jnp.float32), basis, codec.k, sign=codec.signed,
+        amp_dtype=codec.amp_dtype, idx_dtype=jnp.dtype(codec.idx_dtype),
+        tile_c=_tile_rows(c), interpret=interpret)
+    n = codec.n_rows
+    head = jnp.asarray(np.frombuffer(codec.header(), np.uint8))
+    parts = [head, idx8[:n].reshape(-1), amp8[:n].reshape(-1)]
+    if codec.amp_dtype == "int8":
+        parts.append(scale8[:n].reshape(-1))
+    buf = jnp.concatenate(parts)
+    assert buf.shape == (codec.wire_bytes,), (buf.shape, codec.wire_bytes)
+    return buf, q
 
 
 @functools.partial(jax.jit,

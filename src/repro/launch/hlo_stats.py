@@ -10,6 +10,20 @@ the replica-group size:
   reduce-scatter    out_bytes * (n-1)         (receives n-1 partial shards)
   all-to-all        bytes * (n-1)/n
   collective-permute bytes
+
+Async collectives (``all-gather-start``/``-done``, ``all-reduce-start``,
+``collective-permute-start``, ...) are the split form XLA emits when its
+latency-hiding scheduler moves compute between a collective's launch and its
+completion.  Bytes are counted ONCE per op, at the ``-start`` (or the
+unsplit op); ``-done`` lines only retire the handle and contribute nothing.
+A ``-start``'s result is usually a TUPLE holding both the operand alias and
+the destination buffer, so its transfer size is the LARGEST tensor in the
+tuple, not the tuple's sum.  :func:`overlap_stats` reports how much actually
+hides: start/done pairs with real compute scheduled between them, and — for
+sync (unsplit) HLO, where module text order IS the schedule whenever
+``is_scheduled=true`` — the longest back-to-back burst of collectives, the
+witness that independent per-bucket collectives were issued together instead
+of serialized behind each other's decodes.
 """
 from __future__ import annotations
 
@@ -28,6 +42,14 @@ _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
         "collective-permute")
 
+# "%name = <type> <kind>[-start|-done](...".  The type is either one shape
+# or a (tuple, of, shapes); the kind must not swallow a -start/-done suffix
+# into the following [\s(] class, so the suffix is its own group.
+_COLL_RE = re.compile(
+    r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?[\s(]")
+
 
 def _shape_bytes(type_str: str) -> int:
     total = 0
@@ -43,6 +65,26 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+def _shape_bytes_max(type_str: str) -> int:
+    """Largest single tensor in a (possibly tuple) result type.
+
+    The transfer size of an async ``-start``: its tuple result carries the
+    operand alias AND the destination buffer (plus u32 scratch on some
+    backends), so summing the tuple would double-count the payload.
+    """
+    best = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
+
 def _group_size(line: str) -> int:
     m = _GROUPS_V2_RE.search(line)
     if m:
@@ -54,20 +96,27 @@ def _group_size(line: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> dict:
-    """Per-device wire bytes by collective kind + op counts."""
+    """Per-device wire bytes by collective kind + op counts.
+
+    Sync and async forms both count: an async pair contributes its bytes
+    exactly once, at the ``-start`` (sized by the largest tensor of the
+    start's tuple result); the ``-done`` retires the handle for free.
+    """
     out = {k: 0.0 for k in _OPS}
     counts = {k: 0 for k in _OPS}
     for line in hlo_text.splitlines():
         ls = line.strip()
         # result type is on the lhs: "%name = f32[...]{...} all-gather(..."
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)[\s(]",
-                     ls)
+        m = _COLL_RE.match(ls)
         if not m:
             continue
-        kind = m.group(2)
-        if "-start" in ls.split(kind)[1][:8]:
-            pass
-        bytes_ = _shape_bytes(m.group(1))
+        kind, suffix = m.group(2), m.group(3)
+        if suffix == "-done":
+            continue                       # bytes were counted at the -start
+        if suffix == "-start":
+            bytes_ = _shape_bytes_max(m.group(1))
+        else:
+            bytes_ = _shape_bytes(m.group(1))
         n = _group_size(ls)
         if n <= 1:
             continue
@@ -86,6 +135,122 @@ def collective_bytes(hlo_text: str) -> dict:
     out["total"] = sum(out[k] for k in _OPS)
     out["counts"] = counts
     return out
+
+
+# Opcodes that move no data and take no meaningful time: they neither break a
+# back-to-back collective burst nor count as "compute between start and done".
+_TRIVIAL_OPS = frozenset((
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy", "reshape", "after-all", "partition-id",
+    "replica-id", "opt-barrier",
+))
+
+# any instruction: "%name = <type> opcode(operands...)"
+_INSTR_RE = re.compile(
+    r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(?:\([^)]*\)|[^=(]*?)\s*"
+    r"([a-z][\w\-]*)\(\s*%?([\w.\-]*)")
+
+
+def overlap_stats(hlo_text: str) -> dict:
+    """Schedule-level overlap witnesses from compiled HLO text.
+
+    Returns::
+
+        async_pairs     -- number of -start/-done collective pairs
+        overlapped      -- pairs with >= 1 non-trivial compute op scheduled
+                           strictly between the start and its done
+        max_inflight    -- peak number of simultaneously open async pairs
+        collective_burst-- longest run of collectives (sync or -start)
+                           scheduled back to back with only trivial ops
+                           between them
+
+    ``overlapped`` is the direct witness on backends whose scheduler splits
+    collectives (async start/done).  On backends that emit only sync
+    collectives (CPU today), text order is still the schedule
+    (``is_scheduled=true``), so ``collective_burst >= 2`` witnesses that two
+    collectives were issued with nothing between them — something the
+    monolithic ring (whose every hop decodes before the next hop's
+    ppermute) can never produce.  Note the converse does not hold: a serial
+    scheduler may legally flatten independent buckets back into
+    hop-decode-hop order, so the absence of a burst proves nothing —
+    :func:`ring_chains` is the schedule-independent witness.
+    """
+    open_pairs: dict[str, bool] = {}       # start name -> saw compute
+    pairs = overlapped = 0
+    max_inflight = 0
+    burst = max_burst = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line.strip())
+        if not m:
+            continue
+        name, opcode, first_operand = m.groups()
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base in _OPS:
+            if opcode.endswith("-done"):
+                saw = open_pairs.pop(first_operand, None)
+                if saw is not None:
+                    pairs += 1
+                    overlapped += int(saw)
+                continue                   # a done breaks no burst
+            burst += 1
+            max_burst = max(max_burst, burst)
+            if opcode.endswith("-start"):
+                open_pairs[name] = False
+                max_inflight = max(max_inflight, len(open_pairs))
+            continue
+        if opcode in _TRIVIAL_OPS:
+            continue
+        burst = 0                          # real compute between collectives
+        for k in open_pairs:
+            open_pairs[k] = True
+    return {"async_pairs": pairs, "overlapped": overlapped,
+            "max_inflight": max_inflight, "collective_burst": max_burst}
+
+
+# ops that merely forward a buffer: a permute chain survives through them
+_PASSTHROUGH_OPS = frozenset((
+    "copy", "bitcast", "bitcast-convert", "reshape", "get-tuple-element",
+    "tuple", "opt-barrier",
+))
+
+
+def ring_chains(hlo_text: str) -> int:
+    """Number of INDEPENDENT collective-permute chains in the module.
+
+    A streaming ring is a chain: every hop's ppermute consumes the previous
+    hop's output, so the monolithic ring compiles to exactly ONE chain no
+    matter how the backend schedules it.  The bucketed overlap engine gives
+    every leaf-group bucket its own ring over its own encoded buffer —
+    ``n_buckets`` chains whose heads consume encode output, not another
+    permute.  Unlike :func:`overlap_stats`'s burst (a property of the
+    backend's chosen schedule, which a serial CPU scheduler may legally
+    flatten), the chain count is a DATAFLOW property of the program and
+    therefore a portable witness that the wire was actually split into
+    independently launchable collectives.
+
+    Counts sync and async (``-start``) forms; ``-done`` and pass-through ops
+    (copy/bitcast/reshape/...) extend a chain rather than breaking it.
+    """
+    permute_valued: set[str] = set()
+    heads = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line.strip())
+        if not m:
+            continue
+        name, opcode, first_operand = m.groups()
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base == "collective-permute":
+            if opcode.endswith("-done"):
+                permute_valued.add(name)
+                continue
+            seg = line.split(opcode + "(", 1)[-1].split(")", 1)[0]
+            operands = re.findall(r"%([\w.\-]+)", seg)
+            if not any(o in permute_valued for o in operands):
+                heads += 1
+            permute_valued.add(name)
+        elif opcode in _PASSTHROUGH_OPS and first_operand in permute_valued:
+            permute_valued.add(name)
+    return heads
 
 
 _SH_OP_RE = re.compile(
@@ -163,11 +328,15 @@ def collective_bytes_by_axis(hlo_text: str, axis_groups: dict) -> dict:
     ici, dci = 0.0, 0.0
     for line in hlo_text.splitlines():
         ls = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)[\s(]",
-                     ls)
+        m = _COLL_RE.match(ls)
         if not m:
             continue
-        bytes_ = _shape_bytes(m.group(1))
+        if m.group(3) == "-done":
+            continue                       # bytes were counted at the -start
+        if m.group(3) == "-start":
+            bytes_ = _shape_bytes_max(m.group(1))
+        else:
+            bytes_ = _shape_bytes(m.group(1))
         gm = _GROUPS_RE.search(ls)
         span_is_dci = False
         if gm:

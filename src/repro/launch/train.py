@@ -31,6 +31,21 @@ def main():
     ap.add_argument("--use-kernel", action="store_true",
                     help="route model AND extractor hot paths through the "
                          "fused Pallas kernels")
+    ap.add_argument("--overlap", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="bucketed overlap engine: split the packed payload "
+                         "into --n-buckets leaf-group buckets with "
+                         "independent collectives so transfers hide behind "
+                         "decodes/backprop (auto = on iff a codec is on and "
+                         "--n-buckets >= 2)")
+    ap.add_argument("--n-buckets", type=int, default=0,
+                    help="leaf-group bucket count for --overlap "
+                         "(0 = DEFAULT_N_BUCKETS when the engine is on)")
+    ap.add_argument("--encode-impl", default="auto",
+                    choices=["auto", "staged", "fused"],
+                    help="DeMo wire encode: staged (extract kernel + codec "
+                         "serialization) or fused (single-launch Pallas "
+                         "DCT+topk+sign+pack writing the wire bytes)")
     ap.add_argument("--comm-budget", type=float, default=0.0,
                     help="replication-sync budget in seconds/step; > 0 runs "
                          "the repro.comms planner to pick scheme x rate x "
@@ -112,11 +127,17 @@ def main():
               f"{args.comm_budget * 1e3:g} ms/step]: {comm_plan.describe()}")
         flex = dataclasses.replace(comm_plan.flex,
                                    extract_impl=args.extract_impl,
-                                   sync_impl=args.sync_impl)
+                                   sync_impl=args.sync_impl,
+                                   overlap=args.overlap,
+                                   n_buckets=args.n_buckets,
+                                   encode_impl=args.encode_impl)
     else:
         flex = FlexConfig(scheme=args.scheme, rate=args.rate,
                           extract_impl=args.extract_impl,
-                          sync_impl=args.sync_impl)
+                          sync_impl=args.sync_impl,
+                          overlap=args.overlap,
+                          n_buckets=args.n_buckets,
+                          encode_impl=args.encode_impl)
     opt = make_optimizer(args.optimizer,
                          schedules.warmup_cosine(args.lr, args.steps),
                          **({} if args.optimizer == "adamw" else

@@ -1,0 +1,511 @@
+"""Bucketed overlap engine (``overlap="on"``): leaf-group bucket planning,
+bucketed-vs-monolithic bit-parity on every scheme x codec, the fused
+single-launch wire encode, the async/scheduled HLO overlap witnesses in
+``launch.hlo_stats``, and the planner's bucketed feasibility model
+(``target_overlap`` budgets the serialized model calls infeasible become
+feasible once buckets shrink the exposed pipeline drain).
+
+Everything here runs on a single CPU device (replicas simulated with vmap
+over a named axis); the real shard_map lowering of the bucketed ring is
+exercised by the 8-device tests in ``tests/test_ring_sync.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import codecs, planner, topology
+from repro.core import compression, packing
+from repro.core.flexdemo import FlexConfig, communicate_tree
+from repro.core.replicators import base as rbase
+from repro.core.replicators import make_replicator
+from repro.kernels.dct_topk import ops as kops
+from repro.launch import hlo_stats
+
+SCHEMES = ("demo", "random", "striding", "full")
+AMPS = ("fp32", "bf16", "int8")
+_VALUE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+CHUNK = 64
+
+
+def _tree(seed=0):
+    """Four leaves of uneven sizes: buckets must balance without splitting."""
+    rng = np.random.RandomState(seed)
+    return {
+        "a": jnp.asarray(rng.randn(7, 100).astype(np.float32)),
+        "b": jnp.asarray(rng.randn(3, 100).astype(np.float32)),
+        "c": jnp.asarray(rng.randn(130).astype(np.float32)),
+        "d": jnp.asarray(rng.randn(64).astype(np.float32)),
+    }
+
+
+def _max_err(a, b):
+    return max(float(jnp.abs(x - y).max()) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _communicate(flex, tree, sign=True):
+    return communicate_tree(flex.make(), tree, step=jnp.asarray(0), axes=(),
+                            sign=sign)
+
+
+# ---------------------------------------------------------------------------
+# bucket planning: pure static functions of (treedef, shapes, chunk, count)
+
+
+@pytest.mark.parametrize("n_buckets", [1, 2, 3, 4, 99])
+def test_plan_buckets_partitions_rows_without_splitting_leaves(n_buckets):
+    layout = packing.plan_tree(_tree(), CHUNK)
+    buckets = packing.plan_buckets(layout, n_buckets)
+    assert len(buckets) == packing.resolve_n_buckets(n_buckets,
+                                                     layout.n_leaves)
+    # contiguous tiling of [0, n_rows): bucket b starts where b-1 ended
+    assert buckets[0].row_start == 0
+    for prev, cur in zip(buckets, buckets[1:]):
+        assert cur.row_start == prev.row_start + prev.n_rows
+    assert sum(b.n_rows for b in buckets) == layout.n_rows
+    # the boundary rule: buckets are whole-LEAF groups, in packing order
+    assert tuple(s for b in buckets for s in b.slots) == layout.slots
+    for b in buckets:
+        assert b.slots, "empty bucket"
+        assert b.n_rows == sum(s.n_rows for s in b.slots)
+        assert b.n_rows_padded >= b.n_rows
+
+
+def test_resolve_n_buckets():
+    assert packing.resolve_n_buckets(0, 8) == packing.DEFAULT_N_BUCKETS
+    assert packing.resolve_n_buckets(0, 2) == 2       # clamp to leaf count
+    assert packing.resolve_n_buckets(7, 3) == 3
+    assert packing.resolve_n_buckets(1, 5) == 1
+    with pytest.raises(ValueError):
+        packing.resolve_n_buckets(-1, 4)
+
+
+def test_bucket_rows_slices_and_pads():
+    layout = packing.plan_tree(_tree(), CHUNK)
+    mat = jnp.arange(layout.n_rows_padded * CHUNK,
+                     dtype=jnp.float32).reshape(-1, CHUNK)
+    for b in packing.plan_buckets(layout, 3):
+        raw = packing.bucket_rows(mat, b)
+        np.testing.assert_array_equal(
+            np.asarray(raw),
+            np.asarray(mat[b.row_start:b.row_start + b.n_rows]))
+        padded = packing.bucket_rows(mat, b, pad=True)
+        assert padded.shape == (b.n_rows_padded, CHUNK)
+        np.testing.assert_array_equal(np.asarray(padded[b.n_rows:]), 0.0)
+
+
+@pytest.mark.parametrize("sizes", [(5,), (5, 1, 7, 300), (1, 1, 1)])
+def test_plan_value_buckets_covers_stream(sizes):
+    layout = packing.plan_values(sizes)
+    runs = packing.plan_value_buckets(layout, 3)
+    assert len(runs) == packing.resolve_n_buckets(3, len(sizes))
+    # contiguous cover of [0, n_total) with boundaries on leaf offsets
+    assert runs[0][0] == 0
+    for (o1, s1), (o2, _) in zip(runs, runs[1:]):
+        assert o2 == o1 + s1
+        assert o2 in layout.offsets
+    assert sum(s for _, s in runs) == layout.n_total
+
+
+# ---------------------------------------------------------------------------
+# config resolution / validation
+
+
+def test_resolve_overlap_modes():
+    assert rbase.resolve_overlap("on", amp="fp32", n_buckets=0) is True
+    assert rbase.resolve_overlap("off", amp="fp32", n_buckets=8) is False
+    # auto is conservative: on only with a codec AND an explicit split
+    assert rbase.resolve_overlap("auto", amp="int8", n_buckets=2) is True
+    assert rbase.resolve_overlap("auto", amp="int8", n_buckets=0) is False
+    assert rbase.resolve_overlap("auto", amp="off", n_buckets=4) is False
+    with pytest.raises(ValueError, match="codec"):
+        rbase.resolve_overlap("on", amp="off", n_buckets=2)
+    with pytest.raises(ValueError, match="overlap"):
+        rbase.resolve_overlap("sideways", amp="fp32")
+
+
+def test_resolve_encode_impl():
+    assert rbase.resolve_encode_impl("auto", "fp32") == "staged"
+    assert rbase.resolve_encode_impl("auto", "off") == "staged"
+    assert rbase.resolve_encode_impl("fused", "int8") == "fused"
+    with pytest.raises(ValueError, match="fused"):
+        rbase.resolve_encode_impl("fused", "off")
+    with pytest.raises(ValueError, match="encode_impl"):
+        rbase.resolve_encode_impl("telepathy", "fp32")
+
+
+def test_flexconfig_validates_overlap_and_fused():
+    with pytest.raises(ValueError, match="overlap"):
+        FlexConfig(scheme="demo", overlap="on", codec="off")
+    with pytest.raises(ValueError, match="fused"):
+        FlexConfig(scheme="demo", encode_impl="fused", codec="off")
+    with pytest.raises(ValueError, match="no packed top-k"):
+        FlexConfig(scheme="random", encode_impl="fused")
+    with pytest.raises(ValueError, match="idx_layout"):
+        FlexConfig(scheme="demo", encode_impl="fused", idx_layout="flat")
+    # replicator-level mirror of the same contracts
+    with pytest.raises(ValueError, match="codec"):
+        make_replicator("random", codec="off", overlap="on", n_buckets=2)
+    with pytest.raises(ValueError, match="codec"):
+        make_replicator("diloco", codec="off", overlap="on")
+    # valid opt-ins construct fine
+    FlexConfig(scheme="demo", overlap="on", n_buckets=3)
+    FlexConfig(scheme="demo", encode_impl="fused")
+
+
+# ---------------------------------------------------------------------------
+# bucketed == monolithic, bit for bit (|R| = 1 codec round trip)
+
+
+@pytest.mark.parametrize("amp", AMPS)
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_bucketed_matches_monolithic_single_replica(scheme, amp):
+    tree = _tree(1)
+    kw = dict(codec=amp, value_bytes=_VALUE_BYTES[amp], rate=1 / 8)
+    q0, r0, w0 = _communicate(FlexConfig(scheme=scheme, **kw), tree)
+    q1, r1, w1 = _communicate(
+        FlexConfig(scheme=scheme, overlap="on", n_buckets=3, **kw), tree)
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0
+    # the wire grows by EXACTLY one 24 B header per extra bucket; the dense
+    # int8 codec may additionally regroup its per-256 scale groups at the
+    # new bucket boundaries (never fewer groups than the monolithic stream)
+    n_buckets = packing.resolve_n_buckets(3, len(jax.tree_util.tree_leaves(tree)))
+    delta = w1 - w0
+    if amp == "int8" and scheme != "demo":
+        assert delta >= (n_buckets - 1) * codecs.HEADER_BYTES
+    else:
+        assert delta == (n_buckets - 1) * codecs.HEADER_BYTES
+
+
+def test_auto_overlap_requires_explicit_bucket_request():
+    """overlap="auto" stays monolithic (committed wire contracts move only
+    on opt-in): identical bytes; auto + n_buckets >= 2 switches on."""
+    tree = _tree(2)
+    _, _, w_def = _communicate(FlexConfig(scheme="demo", rate=1 / 8), tree)
+    _, _, w_auto0 = _communicate(
+        FlexConfig(scheme="demo", rate=1 / 8, overlap="auto"), tree)
+    assert w_auto0 == w_def
+    _, _, w_auto2 = _communicate(
+        FlexConfig(scheme="demo", rate=1 / 8, overlap="auto", n_buckets=2),
+        tree)
+    assert w_auto2 == w_def + codecs.HEADER_BYTES
+
+
+def test_diloco_bucketed_outer_average_matches_monolithic():
+    R, period = 4, 8
+    rng = np.random.RandomState(11)
+    stacked = {"w": jnp.asarray(rng.randn(R, 37, 11).astype(np.float32)),
+               "b": jnp.asarray(rng.randn(R, 300).astype(np.float32)),
+               "s": jnp.asarray(rng.randn(R).astype(np.float32))}
+    sync_step = jnp.asarray(period - 1)
+
+    def run(**kw):
+        rep = make_replicator("diloco", period=period, codec="fp32", **kw)
+
+        def f(p):
+            return rep.postprocess_params(p, step=sync_step, axes=("r",))
+
+        return jax.vmap(f, axis_name="r")(stacked)
+
+    mono = run()
+    bucketed = run(overlap="on", n_buckets=3)
+    assert _max_err(bucketed, mono) == 0.0
+    # amortized wire accounting: the bucketed burst is (B-1) headers larger
+    tree = jax.tree_util.tree_map(lambda x: x[0], stacked)
+    _, _, w0 = communicate_tree(make_replicator("diloco", period=period),
+                                tree, step=jnp.asarray(0), axes=(), sign=True)
+    _, _, w1 = communicate_tree(
+        make_replicator("diloco", period=period, overlap="on", n_buckets=3),
+        tree, step=jnp.asarray(0), axes=(), sign=True)
+    total = sum(x.size for x in jax.tree_util.tree_leaves(tree))
+    assert w0 == codecs.dense_wire_bytes(total) // period
+    assert w1 == (codecs.dense_wire_bytes(total)
+                  + 2 * codecs.HEADER_BYTES) // period
+
+
+# ---------------------------------------------------------------------------
+# the fused single-launch encode
+
+
+@pytest.mark.parametrize("amp", AMPS)
+def test_fused_encode_matches_staged_end_to_end(amp):
+    """encode_impl="fused" (DCT + top-k + sign + byte pack in one launch)
+    reproduces the staged extract+serialize path exactly through the whole
+    communicate: same Q, same residual, same wire bytes."""
+    tree = _tree(3)
+    kw = dict(scheme="demo", rate=1 / 8, codec=amp,
+              value_bytes=_VALUE_BYTES[amp])
+    q0, r0, w0 = _communicate(FlexConfig(**kw), tree)
+    q1, r1, w1 = _communicate(FlexConfig(encode_impl="fused", **kw), tree)
+    assert _max_err(q1, q0) == 0.0
+    assert _max_err(r1, r0) == 0.0
+    assert w1 == w0
+    # and composed with the overlap engine (per-bucket fused launches)
+    q2, r2, w2 = _communicate(
+        FlexConfig(encode_impl="fused", overlap="on", n_buckets=3, **kw),
+        tree)
+    assert _max_err(q2, q0) == 0.0
+    assert _max_err(r2, r0) == 0.0
+    assert w2 == w0 + 2 * codecs.HEADER_BYTES
+
+
+@pytest.mark.parametrize("amp", AMPS)
+def test_fused_wire_buffer_byte_identical_to_codec(amp):
+    """The kernel's serialized output is the SAME uint8 stream
+    ``PackedCodec.encode`` produces over the staged kernel extraction —
+    byte for byte, including the header, index, amplitude and (int8) scale
+    segments."""
+    layout = packing.plan_tree(_tree(4), CHUNK)
+    chunks = packing.pack_tree(_tree(4), layout)
+    k = 8
+    cod = codecs.PackedCodec(layout.n_rows, CHUNK, k, amp, signed=True)
+    vals, idx, q_rows = compression.packed_dct_topk(
+        chunks, k, impl="pallas_interpret")
+    staged = cod.encode(jnp.sign(vals)[:layout.n_rows],
+                        idx[:layout.n_rows])
+    fused, q_fused = kops.fused_encode_packed(chunks, cod, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(staged))
+    assert fused.shape == (cod.wire_bytes,)
+    # the in-kernel local decode (pre-sign q for the residual) matches too
+    np.testing.assert_allclose(np.asarray(q_fused[:layout.n_rows]),
+                               np.asarray(q_rows[:layout.n_rows]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hlo_stats: async collective parsing + overlap witnesses (captured snippets
+# — jax's CPU backend does not emit async pairs, so the parser is unit-tested
+# on the forms the GPU/TPU latency-hiding scheduler produces)
+
+
+_ASYNC_AG = """\
+HloModule m, is_scheduled=true
+
+ENTRY e {
+  %p0 = f32[256]{0} parameter(0)
+  %ags = (f32[256]{0}, f32[1024]{0}) all-gather-start(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %mul = f32[256]{0} multiply(%p0, %p0)
+  %agd = f32[1024]{0} all-gather-done(%ags)
+  ROOT %add = f32[1024]{0} add(%agd, %agd)
+}
+"""
+
+_ASYNC_TWO_PERMUTES = """\
+HloModule m, is_scheduled=true
+
+ENTRY e {
+  %p0 = u8[512]{0} parameter(0)
+  %p1 = u8[256]{0} parameter(1)
+  %cps1 = (u8[512]{0}, u8[512]{0}, u32[], u32[]) collective-permute-start(%p0), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %cps2 = (u8[256]{0}, u8[256]{0}, u32[], u32[]) collective-permute-start(%p1), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %conv = f32[512]{0} convert(%p0)
+  %cpd1 = u8[512]{0} collective-permute-done(%cps1)
+  %cpd2 = u8[256]{0} collective-permute-done(%cps2)
+  ROOT %t = (u8[512]{0}, u8[256]{0}) tuple(%cpd1, %cpd2)
+}
+"""
+
+_SYNC_BURST = """\
+HloModule m, is_scheduled=true
+
+ENTRY e {
+  %p0 = u8[512]{0} parameter(0)
+  %p1 = u8[256]{0} parameter(1)
+  %cp1 = u8[512]{0} collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+  %cp2 = u8[256]{0} collective-permute(%p1), source_target_pairs={{0,1},{1,0}}
+  %dec = f32[512]{0} convert(%cp1)
+  %cp3 = u8[256]{0} collective-permute(%cp2), source_target_pairs={{0,1},{1,0}}
+  ROOT %t = (f32[512]{0}, u8[256]{0}) tuple(%dec, %cp3)
+}
+"""
+
+_SYNC_SERIAL = """\
+HloModule m, is_scheduled=true
+
+ENTRY e {
+  %p0 = u8[512]{0} parameter(0)
+  %cp1 = u8[512]{0} collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+  %dec1 = f32[512]{0} convert(%cp1)
+  %cp2 = u8[512]{0} collective-permute(%cp1), source_target_pairs={{0,1},{1,0}}
+  %dec2 = f32[512]{0} convert(%cp2)
+  ROOT %add = f32[512]{0} add(%dec1, %dec2)
+}
+"""
+
+
+def test_async_start_counts_bytes_once_at_largest_tuple_member():
+    got = hlo_stats.collective_bytes(_ASYNC_AG)
+    # ONE all-gather op, not two (the -done retires the handle for free);
+    # payload sized by the LARGEST tuple member (f32[1024] destination, not
+    # the 256+1024 sum), wired as out * (n-1)/n
+    assert got["counts"]["all-gather"] == 1
+    assert got["all-gather"] == pytest.approx(1024 * 4 * 3 / 4)
+    assert got["total"] == got["all-gather"]
+
+
+def test_sync_and_async_forms_agree_on_bytes():
+    sync = _ASYNC_AG.replace(
+        "(f32[256]{0}, f32[1024]{0}) all-gather-start(%p0)",
+        "f32[1024]{0} all-gather(%p0)").replace(
+        "%agd = f32[1024]{0} all-gather-done(%ags)",
+        "%agd = f32[1024]{0} copy(%ags)")
+    assert (hlo_stats.collective_bytes(sync)["all-gather"]
+            == hlo_stats.collective_bytes(_ASYNC_AG)["all-gather"])
+
+
+def test_overlap_stats_sees_compute_between_start_and_done():
+    stats = hlo_stats.overlap_stats(_ASYNC_AG)
+    assert stats["async_pairs"] == 1
+    assert stats["overlapped"] == 1         # %mul sits inside the pair
+    assert stats["max_inflight"] == 1
+
+
+def test_overlap_stats_tracks_inflight_pairs_and_bursts():
+    stats = hlo_stats.overlap_stats(_ASYNC_TWO_PERMUTES)
+    assert stats["async_pairs"] == 2
+    assert stats["overlapped"] == 2         # %conv is inside BOTH pairs
+    assert stats["max_inflight"] == 2
+    assert stats["collective_burst"] == 2   # the two starts are back to back
+
+
+def test_overlap_stats_burst_discriminates_bucketed_from_serial():
+    """The sync-HLO witness: the bucketed ring issues its per-hop transfers
+    back to back (burst >= 2); the monolithic ring decodes between every
+    pair of hops (burst stays 1)."""
+    assert hlo_stats.overlap_stats(_SYNC_BURST)["collective_burst"] == 2
+    assert hlo_stats.overlap_stats(_SYNC_SERIAL)["collective_burst"] == 1
+    # no async pairs in sync HLO
+    assert hlo_stats.overlap_stats(_SYNC_BURST)["async_pairs"] == 0
+
+
+def test_overlap_stats_trivial_ops_do_not_break_bursts():
+    interleaved = _SYNC_BURST.replace(
+        "%cp2 =",
+        "%bc = u8[512]{0} bitcast(%cp1)\n  %cp2 =")
+    assert hlo_stats.overlap_stats(interleaved)["collective_burst"] == 2
+
+
+def test_ring_chains_counts_independent_permute_chains():
+    """The dataflow witness: one chain per independently launchable ring.
+    _SYNC_SERIAL's second permute consumes the first (one chain); in
+    _SYNC_BURST cp3 extends cp2's chain but cp1/cp2 start from parameters
+    (two chains); async starts whose dones feed nothing stay two chains."""
+    assert hlo_stats.ring_chains(_SYNC_SERIAL) == 1
+    assert hlo_stats.ring_chains(_SYNC_BURST) == 2
+    assert hlo_stats.ring_chains(_ASYNC_TWO_PERMUTES) == 2
+    assert hlo_stats.ring_chains(_ASYNC_AG) == 0     # no permutes at all
+    # a chain survives pass-through ops (copy/bitcast) between hops
+    threaded = _SYNC_SERIAL.replace(
+        "%cp2 = u8[512]{0} collective-permute(%cp1)",
+        "%cpy = u8[512]{0} copy(%cp1)\n"
+        "  %cp2 = u8[512]{0} collective-permute(%cpy)")
+    assert hlo_stats.ring_chains(threaded) == 1
+    # async form: the -done's name carries the chain to the next -start
+    async_chain = """\
+  %s1 = (u8[64]{0}, u8[64]{0}, u32[], u32[]) collective-permute-start(%p0), source_target_pairs={{0,1},{1,0}}
+  %d1 = u8[64]{0} collective-permute-done(%s1)
+  %s2 = (u8[64]{0}, u8[64]{0}, u32[], u32[]) collective-permute-start(%d1), source_target_pairs={{0,1},{1,0}}
+  %d2 = u8[64]{0} collective-permute-done(%s2)
+"""
+    assert hlo_stats.ring_chains(async_chain) == 1
+
+
+def test_done_without_matching_start_is_ignored():
+    orphan = "  %agd = f32[64]{0} all-gather-done(%ghost)\n"
+    stats = hlo_stats.overlap_stats(orphan)
+    assert stats == {"async_pairs": 0, "overlapped": 0, "max_inflight": 0,
+                     "collective_burst": 0}
+    assert hlo_stats.collective_bytes(orphan)["total"] == 0
+
+
+# ---------------------------------------------------------------------------
+# planner: the bucketed feasibility model
+
+
+def test_bucketed_cost_model_reduces_to_streaming_ring():
+    """n_buckets=1 + nothing to hide under IS the monolithic streaming ring
+    price, exactly — with and without measured codec overhead."""
+    ov = topology.CodecOverhead(encode_s_per_byte=2e-10,
+                                decode_s_per_byte=5e-10)
+    for profile in ("nvlink", "ethernet-100g", "wan-10g"):
+        link = topology.get_topology(profile).inter_node
+        for b in (1 << 10, 1 << 22):
+            for r in (2, 4, 8):
+                for oh in (None, ov):
+                    assert topology.bucketed_overlap_seconds(
+                        b, r, link, n_buckets=1, compute_s=0.0, overhead=oh
+                    ) == topology.ring_pipelined_seconds(b, r, link,
+                                                         overhead=oh)
+        assert topology.bucketed_overlap_seconds(1 << 20, 1, link,
+                                                 n_buckets=4) == 0.0
+        assert topology.bucketed_overlap_seconds(0, 8, link,
+                                                 n_buckets=4) == 0.0
+
+
+def test_bucketed_exposure_shrinks_with_buckets_down_to_tail_floor():
+    link = topology.get_topology("ethernet-100g").inter_node
+    payload, r, compute = 16 << 20, 8, 50e-3
+    exposed = [topology.bucketed_overlap_seconds(
+        payload, r, link, n_buckets=b, compute_s=compute)
+        for b in (1, 2, 4, 8, 32)]
+    assert all(a >= b_ for a, b_ in zip(exposed, exposed[1:]))
+    assert exposed[0] > exposed[-1]
+    # the floor: the LAST bucket's drain is structural, compute cannot eat it
+    for b in (1, 2, 4, 8, 32):
+        bucket = payload / b
+        transfer = bucket * 8.0 / (link.bandwidth_gbps * 1e9)
+        tail = link.latency_s + (r - 1) * transfer
+        assert topology.bucketed_overlap_seconds(
+            payload, r, link, n_buckets=b, compute_s=1e9
+        ) == pytest.approx(tail)
+
+
+def test_predict_carries_overlapped_price_and_bucket_count():
+    params = [jax.ShapeDtypeStruct((1 << 20,), jnp.float32)]
+    flex = FlexConfig(scheme="demo", chunk_size=64, topk=8)
+    plan = planner.predict(flex, params, "ethernet-100g", 4)
+    assert plan.n_buckets == packing.DEFAULT_N_BUCKETS
+    assert 0 < plan.comm_seconds_overlapped
+    assert f"overlap x{plan.n_buckets}" in plan.describe()
+    # B=1, no compute: the overlapped price IS the streaming-ring price
+    p1 = planner.predict(flex, params, "ethernet-100g", 4, n_buckets=1)
+    assert p1.comm_seconds_overlapped == p1.comm_seconds_pipelined
+    # compute to hide under strictly shrinks the exposed seconds
+    hidden = planner.predict(flex, params, "ethernet-100g", 4,
+                             compute_s=10.0)
+    assert hidden.comm_seconds_overlapped < plan.comm_seconds_pipelined
+
+
+def test_solve_infeasible_target_overlap_becomes_feasible_with_buckets():
+    """The satellite acceptance: a target_overlap budget the monolithic
+    pipeline cannot meet (its whole drain is exposed after backprop) fits
+    once the payload splits into buckets that launch during backprop."""
+    params = [jax.ShapeDtypeStruct((4_000_000,), jnp.float32)]
+    kw = dict(target_overlap=0.4, compute_s=3e-3, schemes=("full",))
+    mono = planner.solve(params, "ethernet-100g", 4, n_buckets=1, **kw)
+    assert not mono.feasible
+    assert "OVER BUDGET" in mono.describe()
+    plan = planner.solve(params, "ethernet-100g", 4, **kw)
+    assert plan.feasible
+    assert plan.comm_seconds_overlapped <= 0.4 * 3e-3 \
+        < mono.comm_seconds_overlapped
+    # the emitted flex RUNS the engine the feasibility check priced
+    assert plan.flex.overlap == "on"
+    assert plan.flex.n_buckets == plan.n_buckets == packing.DEFAULT_N_BUCKETS
+    assert f"overlap x{plan.n_buckets}" in plan.describe()
+    assert "fits" in plan.describe()
+    # round trip: the emitted config constructs a bucketed replicator
+    rep = plan.flex.make()
+    assert rbase.resolve_overlap(rep.overlap, amp=plan.flex.resolve_codec(),
+                                 n_buckets=rep.n_buckets)
+
+
+def test_solve_budget_form_still_uses_serialized_model():
+    """budget_s keeps the conservative serialized-ring feasibility basis
+    (PR 5 contract): overlapped pricing is reported, not gating."""
+    params = [jax.ShapeDtypeStruct((1 << 18,), jnp.float32)]
+    plan = planner.solve(params, "ethernet-100g", 4, budget_s=10e-3)
+    assert plan.feasible and plan.comm_seconds <= 10e-3
+    assert plan.flex.overlap == "auto"      # no opt-in emitted
+    assert plan.comm_seconds_overlapped > 0  # but the price is reported
