@@ -1,0 +1,162 @@
+"""Telemetry-overhead benchmark: the recorder's enabled-vs-disabled delta.
+
+Runs the SAME synthetic demo_sgd training loop (vmap replica simulation at
+|R| = 4, every replication scheme) twice per scheme — once plain, once with
+the full telemetry fan-out: optimizer rebuilt ``with_telemetry(True)`` (the
+compression-quality reductions become step outputs), a Recorder with a real
+JSONL sink attached to the loop (per-step blocking + StepRecord emission),
+and the step-0 trace-capture window (wire/hop counts).  The rows record both
+step times and their ratio; ``step_on_MBps`` (wire bytes through the step
+per second with telemetry ON) is the ``scripts/check_bench.py``-gated
+overhead row — if telemetry ever slows the step enough to drop it below
+the throughput tolerance vs the committed baseline, the gate fires.  The
+bench also asserts the zero-overhead contract's observable half: the step-0
+trace capture sees exactly the scheme's wire bytes, and (full reps only)
+the on/off wall ratio stays bounded.
+
+Honors BENCH_SMOKE=1 (fewer steps, ratio assert skipped — smoke timing on a
+loaded CI host is noise)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import telemetry
+from repro.core.flexdemo import FlexConfig
+from repro.core.optimizers import base as opt_base
+from repro.core.optimizers.demo_sgd import demo_sgd
+from repro.training import loop as train_loop
+
+R = 4
+RATE = 1 / 8
+SHAPES = {"embed": (64, 256), "w_qkv": (256, 192), "w_mlp": (256, 512),
+          "w_out": (512, 256), "head": (256, 64)}
+# Bound on the enabled/disabled step-time ratio.  The bench's steps are
+# TOY-sized (a ~344k-param tree, tens of ms), so the enabled mode's extra
+# graph work — the tree-wide quality reductions — and its per-step host
+# block are a far larger FRACTION here than on any real model; the bound
+# catches blow-ups (telemetry accidentally staging host callbacks into the
+# compiled step), not percentage drift.
+MAX_OVERHEAD_RATIO = 6.0
+
+
+def _steps() -> int:
+    return 4 if os.environ.get("BENCH_SMOKE") == "1" else 12
+
+
+class _GradStream:
+    """(seed, step)-pure synthetic gradient batches, one per replica."""
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.RandomState(1000 + step)
+        return {k: rng.randn(R, *shape).astype(np.float32)
+                for k, shape in SHAPES.items()}
+
+
+def _make_step(flex: FlexConfig, with_telemetry: bool):
+    """jitted ``(state, batch) -> (state, metrics)`` over the |R|-replica
+    vmap simulator — the same optimizer.update wire path the shard_map step
+    runs, without needing a multi-device mesh in the bench."""
+    opt = demo_sgd(0.01, flex, momentum_decay=0.9, telemetry=with_telemetry)
+    tm_metrics = tuple(opt.telemetry_metrics)
+
+    def one(st, grads):
+        params = {k: jnp.zeros(s, jnp.float32) for k, s in SHAPES.items()}
+        updates, opt_state, aux = opt.update(grads, st, params, axes=("r",))
+        # the full step's wire path includes the params postprocess hook
+        # (diloco's federated average is ITS collective); the loss consumes
+        # the postprocessed params so nothing is dead-code-eliminated
+        params = opt_base.apply_updates(params, updates)
+        params = opt.postprocess_params(params, step=opt_state["step"],
+                                        axes=("r",))
+        loss = sum(jnp.sum(jnp.square(p))
+                   for p in jax.tree_util.tree_leaves(params))
+        metrics = {"loss": loss,
+                   "wire_bytes": jnp.asarray(aux.wire_bytes, jnp.float32)}
+        for name in tm_metrics:
+            metrics[name] = aux.extras[name]
+        return opt_state, metrics
+
+    vm = jax.vmap(one, axis_name="r")
+
+    @jax.jit
+    def step_fn(state, batch):
+        state, metrics = vm(state, batch)
+        return state, {k: v[0] for k, v in metrics.items()}
+
+    def init_state():
+        return jax.vmap(opt.init)(
+            {k: jnp.zeros((R,) + s, jnp.float32) for k, s in SHAPES.items()})
+
+    return step_fn, init_state
+
+
+def _median_step_s(walls) -> float:
+    # walls are cumulative since loop start; diff and drop the compile step
+    deltas = [b - a for a, b in zip(walls, walls[1:])]
+    return float(np.median(deltas)) if deltas else float(walls[0])
+
+
+def run():
+    smoke = os.environ.get("BENCH_SMOKE") == "1"
+    n_steps = _steps()
+    tmpdir = tempfile.mkdtemp(prefix="bench_telemetry_")
+    rows = []
+    for scheme in ("demo", "random", "striding", "diloco", "full"):
+        flex = (FlexConfig(scheme="demo", rate=RATE, chunk_size=64)
+                if scheme == "demo" else FlexConfig(scheme=scheme, rate=RATE))
+
+        step_off, init = _make_step(flex, with_telemetry=False)
+        _, res_off = train_loop.run(step_off, init(), _GradStream(), n_steps,
+                                    log_every=0, log=lambda *_: None)
+
+        step_on, init = _make_step(flex, with_telemetry=True)
+        mem = telemetry.MemorySink()
+        rec = telemetry.Recorder(
+            sinks=[mem, telemetry.JsonlSink(
+                os.path.join(tmpdir, f"{scheme}.jsonl"))],
+            manifest={"bench": "telemetry", "scheme": scheme})
+        _, res_on = train_loop.run(step_on, init(), _GradStream(), n_steps,
+                                   log_every=0, log=lambda *_: None,
+                                   recorder=rec)
+        rec.close()
+
+        wire = int(res_on.wire_bytes_per_step)
+        assert wire == int(res_off.wire_bytes_per_step), (scheme, wire)
+        # trace-capture witness: step 0's compile window saw the scheme's
+        # encoded buffer(s) — exactly the wire bytes the step reports.
+        # diloco differs by design: its traced buffer is the postprocess
+        # hook's raw full-params gather (the sync-step burst), while the
+        # per-step metric is the replicator's modeled amortized bytes.
+        ct = res_on.telemetry["comm_trace"]
+        assert ct is not None and ct["n_buffers"] >= 1, (scheme, ct)
+        if scheme != "diloco":
+            assert ct["wire_bytes"] == wire, (scheme, ct, wire)
+        summary = mem.summary
+        assert summary is not None and summary["n_steps"] == n_steps
+
+        t_off = _median_step_s(res_off.wall_times)
+        t_on = _median_step_s(res_on.wall_times)
+        ratio = t_on / t_off if t_off > 0 else float("inf")
+        if not smoke:
+            assert ratio <= MAX_OVERHEAD_RATIO, (scheme, ratio, t_off, t_on)
+        quality = {k: v for k, v in
+                   res_on.telemetry["metrics_mean"].items()
+                   if k in ("energy_retained", "sign_agree")}
+        for v in quality.values():
+            assert 0.0 <= v <= 1.0, (scheme, quality)
+        rows.append({
+            "scheme": f"telemetry:{scheme}",
+            "n_rep": R,
+            "steps": n_steps,
+            "wire_bytes": wire,
+            "step_us_off": t_off * 1e6,
+            "step_us_on": t_on * 1e6,
+            "overhead_ratio": ratio,
+            "step_on_MBps": wire / t_on / 1e6,
+            "ring_hops": ct["ring_hops"],
+            **{f"mean_{k}": v for k, v in quality.items()},
+        })
+    return rows

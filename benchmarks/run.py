@@ -40,7 +40,14 @@ def _best(rows, key="final_val", label="scheme"):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="run only benchmarks whose name contains SUBSTR")
+                    help="run only benchmarks whose name contains SUBSTR. "
+                         "Suites: fig1_replicators_sgd_vs_adamw, "
+                         "fig2a_t5_schemes, fig2b_vit_schemes, "
+                         "fig3_causal_lm_schemes, fig8_topk, fig9_sign, "
+                         "fig11_chunk, fig13_dtype, fig10_bandwidth, "
+                         "fig5_6_scaling, fig2a_t5_true_encdec, kernels, "
+                         "packed_extraction, comms, overlap, convergence, "
+                         "telemetry, roofline")
     ap.add_argument("--json", default="",
                     help="write a machine-readable run summary to PATH")
     ap.add_argument("--smoke", action="store_true",
@@ -70,7 +77,7 @@ def main() -> None:
                             bench_convergence, bench_dtype, bench_encdec,
                             bench_kernels, bench_overlap, bench_packed,
                             bench_replicators, bench_scaling, bench_sign,
-                            bench_topk, roofline)
+                            bench_telemetry, bench_topk, roofline)
 
     bench("fig1_replicators_sgd_vs_adamw",
           lambda: bench_replicators.run(
@@ -141,6 +148,13 @@ def main() -> None:
     bench("convergence", bench_convergence.run,
           lambda r: "parity=" + ",".join(
               f"{x['setting']}:{x['parity_ratio']:.2f}" for x in r))
+
+    # recorder-overhead rows at full replicator fan-out: wire bytes exact,
+    # step_on_MBps throughput-gated by scripts/check_bench.py
+    bench("telemetry", bench_telemetry.run,
+          lambda r: "overhead=" + ",".join(
+              f"{x['scheme'].split(':')[1]}:{x['overhead_ratio']:.2f}x"
+              for x in r))
 
     def _roofline():
         rows = roofline.run()

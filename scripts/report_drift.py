@@ -1,0 +1,190 @@
+#!/usr/bin/env python
+"""Predicted-vs-measured planner drift report over telemetry JSONLs.
+
+Joins each run's recorded per-step telemetry (``--telemetry-out`` of
+``repro.launch.train`` / ``scripts/run_convergence.py``) against the planner
+prediction its manifest carries (``comm_plan``: a ``CommPlan`` priced on the
+run's LOCAL momentum shard numels) and reports, per file:
+
+  wire_ratio           predicted / measured wire bytes per step.  Both sides
+                       are static codec byte counts of the same shard sizing
+                       on the same per-step accounting basis (the plan's
+                       ``wire_bytes_per_step``: diloco's sync burst amortized
+                       over its period, the plain wire bytes elsewhere), so
+                       this is EXACTLY 1.0 whenever planner and replicator
+                       serialization agree — ``--check`` enforces it.
+  comm_vs_wall         predicted serialized-ring sync seconds / measured
+                       median step wall seconds
+  ring_vs_wall         predicted streaming-ring seconds / measured wall
+  overlapped_vs_wall   predicted bucketed-engine exposed seconds / wall
+  block_vs_wall        measured: median device-block share of the step
+  exposed_sync_est_s   measured: median block_s minus min block_s (compute is
+                       constant per step; what varies is exposed sync)
+
+Time ratios are diagnostics, not gates: the committed runs execute on
+simulated fake devices, so predicted seconds model a REAL cluster while the
+measured wall is host-bound — the report requires them finite, not close.
+When the manifest carries a ``codec_calibration`` block, the run's own
+measured encode/decode throughput is echoed as a
+``topology.overhead_from_telemetry``-ready calibration source.
+
+  python scripts/report_drift.py /tmp/conv_telemetry/*.jsonl --check
+  python scripts/report_drift.py run.jsonl --json /tmp/drift.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.telemetry.record import _median           # noqa: E402
+from repro.telemetry.sinks import read_jsonl         # noqa: E402
+
+
+def analyze(path: str, skip: int = 1) -> dict:
+    """The drift record for one telemetry JSONL."""
+    events = read_jsonl(path)
+    manifest = next((e for e in events if e.get("event") == "manifest"), None)
+    steps = [e for e in events if e.get("event") == "step"]
+    if manifest is None or not steps:
+        raise ValueError(f"{path}: no manifest/step events "
+                         f"({len(events)} events)")
+    timed = steps[skip:] or steps       # drop compile-bearing warmup steps
+    wall = _median([s["wall_s"] for s in timed])
+    block = _median([s["block_s"] for s in timed])
+    block_min = min(s["block_s"] for s in timed)
+    measured_wire = steps[-1]["wire_bytes"]
+
+    rec = {
+        "file": path,
+        "setting": manifest.get("setting"),
+        "domain": manifest.get("domain"),
+        "config": manifest.get("config"),
+        "n_steps": len(steps),
+        "skip": skip,
+        "measured": {
+            "wire_bytes_per_step": measured_wire,
+            "wall_s_median": wall,
+            "block_s_median": block,
+            "block_vs_wall": block / wall if wall > 0 else float("inf"),
+            "exposed_sync_est_s": block - block_min,
+        },
+    }
+    plan = manifest.get("comm_plan")
+    if plan is not None:
+        measured = measured_wire or float("nan")
+        wall_den = wall if wall > 0 else float("nan")
+        # the join basis: the plan's prediction on the replicator's per-step
+        # accounting (diloco's sync burst amortized over its period; equal
+        # to wire_bytes for every other scheme)
+        predicted_wire = plan.get("wire_bytes_per_step", plan["wire_bytes"])
+        rec["predicted"] = {
+            "wire_bytes": predicted_wire,
+            "wire_bytes_burst": plan["wire_bytes"],
+            "comm_seconds": plan["comm_seconds"],
+            "comm_seconds_pipelined": plan["comm_seconds_pipelined"],
+            "comm_seconds_overlapped": plan["comm_seconds_overlapped"],
+            "link": plan["link"],
+            "n_replicas": plan["n_replicas"],
+        }
+        rec["ratios"] = {
+            "wire_ratio": predicted_wire / measured,
+            "comm_vs_wall": plan["comm_seconds"] / wall_den,
+            "ring_vs_wall": plan["comm_seconds_pipelined"] / wall_den,
+            "overlapped_vs_wall": plan["comm_seconds_overlapped"] / wall_den,
+        }
+    cal = manifest.get("codec_calibration")
+    if cal:
+        rec["calibration"] = {
+            "encode_MBps": cal["encode_MBps"],
+            "decode_MBps": cal["decode_MBps"],
+            "source": f"{path}:codec_calibration",
+        }
+    return rec
+
+
+def check(rec: dict) -> list[str]:
+    """Contract failures of one drift record (empty = clean)."""
+    errs = []
+    ratios = rec.get("ratios")
+    if ratios is None:
+        return errs                     # no plan in the manifest (e.g. adamw)
+    if ratios["wire_ratio"] != 1.0:
+        errs.append(
+            f"{rec['file']}: wire_ratio {ratios['wire_ratio']:.6g} != 1.0 "
+            f"(predicted {rec['predicted']['wire_bytes']} B vs measured "
+            f"{rec['measured']['wire_bytes_per_step']:.0f} B)")
+    for name, v in ratios.items():
+        if not math.isfinite(v):
+            errs.append(f"{rec['file']}: {name} is not finite ({v})")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="predicted-vs-measured planner drift report")
+    ap.add_argument("paths", nargs="+",
+                    help="telemetry JSONL files, or directories of them")
+    ap.add_argument("--skip", type=int, default=1,
+                    help="warmup steps excluded from the time medians "
+                         "(step 0 carries compile; default 1)")
+    ap.add_argument("--json", default="", help="write the full report to PATH")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every plan-bearing file has "
+                         "wire_ratio exactly 1.0 and finite time ratios")
+    args = ap.parse_args()
+
+    files = []
+    for p in args.paths:
+        if os.path.isdir(p):
+            files += sorted(os.path.join(p, f) for f in os.listdir(p)
+                            if f.endswith(".jsonl"))
+        else:
+            files.append(p)
+    if not files:
+        print("report_drift: no telemetry files found", file=sys.stderr)
+        return 2
+
+    records, errors = [], []
+    for path in files:
+        rec = analyze(path, skip=args.skip)
+        records.append(rec)
+        errors += check(rec)
+        name = rec.get("setting") or rec.get("config") or rec["file"]
+        m = rec["measured"]
+        if "ratios" in rec:
+            r = rec["ratios"]
+            print(f"{name:<24} wire_ratio {r['wire_ratio']:.3f} "
+                  f"({rec['predicted']['wire_bytes']:,} B/step) "
+                  f"comm/wall {r['comm_vs_wall']:.3g} "
+                  f"ring/wall {r['ring_vs_wall']:.3g} "
+                  f"overlap/wall {r['overlapped_vs_wall']:.3g} "
+                  f"block/wall {m['block_vs_wall']:.3f}")
+        else:
+            print(f"{name:<24} (no comm_plan in manifest) "
+                  f"wall {m['wall_s_median'] * 1e3:.1f} ms "
+                  f"block/wall {m['block_vs_wall']:.3f}")
+        if "calibration" in rec:
+            c = rec["calibration"]
+            print(f"{'':<24} calibration: encode "
+                  f"{c['encode_MBps']:.0f} MB/s decode "
+                  f"{c['decode_MBps']:.0f} MB/s "
+                  f"(topology.overhead_from_telemetry ready)")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"records": records, "errors": errors}, f, indent=1)
+        print(f"# wrote {args.json}")
+    for e in errors:
+        print(f"DRIFT: {e}", file=sys.stderr)
+    if args.check and errors:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

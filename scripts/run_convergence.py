@@ -44,6 +44,12 @@ def main() -> int:
                     help="output dir (default $CONV_OUT or "
                          "experiments/convergence)")
     ap.add_argument("--mesh", default="2x4", help="DxM (data x model)")
+    ap.add_argument("--telemetry-out",
+                    default=os.environ.get("CONV_TELEMETRY", ""),
+                    help="also write one telemetry JSONL per (domain x "
+                         "setting) run into DIR (default $CONV_TELEMETRY; "
+                         "empty = no telemetry). Rows are unchanged; feed "
+                         "the JSONLs to scripts/report_drift.py")
     ap.add_argument("--devices", type=int, default=8,
                     help="fake host devices to force BEFORE importing jax "
                          "(0 = leave XLA_FLAGS alone)")
@@ -64,7 +70,8 @@ def main() -> int:
     for domain in [s for s in args.domains.split(",") if s]:
         data = convergence.run_domain(
             domain, mesh_shape=(d, m), smoke=args.smoke,
-            settings_filter=args.settings)
+            settings_filter=args.settings,
+            telemetry_dir=args.telemetry_out)
         path = convergence.save_domain(data, out_dir)
         rows = data["rows"]
         ref = next((r for r in rows if r["reference"]), None)

@@ -74,6 +74,27 @@ class CommPlan:
     comm_seconds_overlapped: float = 0.0
     n_buckets: int = 1
 
+    def to_json(self) -> dict:
+        """Flat JSON form (telemetry manifests / dry-run records): every
+        priced field plus the human-readable ``describe`` line; the flex
+        nests as its own dict.
+
+        ``wire_bytes_per_step`` is the prediction on the REPLICATOR'S
+        per-step accounting basis — what measured telemetry reports every
+        step.  For diloco that is the sync-step burst (``wire_bytes``)
+        amortized over the period (same integer division as the
+        replicator); for every other scheme the two coincide.  The drift
+        report's exact wire join compares against this field.
+        """
+        d = dataclasses.asdict(self)
+        d["describe"] = self.describe()
+        per_step = self.wire_bytes
+        if self.flex.scheme == "diloco":
+            per_step = self.wire_bytes // compression.rate_to_stride(
+                self.flex.rate)
+        d["wire_bytes_per_step"] = per_step
+        return d
+
     def describe(self) -> str:
         f = self.flex
         extra = (f" s={f.chunk_size} k={f.topk} codec={f.codec}"
@@ -89,11 +110,48 @@ class CommPlan:
 
 
 def leaf_numels(params) -> list[int]:
-    """Per-leaf element counts from arrays / ShapeDtypeStructs / an int."""
+    """Per-leaf element counts from arrays / ShapeDtypeStructs / an int /
+    a ready-made list of ints (e.g. :func:`local_leaf_numels`)."""
     if isinstance(params, int):
         return [params]
+    if isinstance(params, (list, tuple)) and all(
+            isinstance(n, int) for n in params):
+        return list(params)
     return [math.prod(p.shape) if p.shape else 1
             for p in jax.tree_util.tree_leaves(params)]
+
+
+def local_leaf_numels(params_shapes, param_specs, mesh) -> list[int]:
+    """Per-leaf element counts of one device's PARAMETER SHARDS.
+
+    The replicators run INSIDE shard_map: each device extracts from and
+    syncs its local momentum shard, so the wire bytes a training step
+    reports are ``scheme_wire_bytes`` over the SHARD numels, not the global
+    ones.  Predictions meant to join against measured telemetry (the drift
+    report's exact wire match) must therefore be priced on these.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.sharding import specs as sp
+
+    if not all(isinstance(s, (PartitionSpec, type(None)))
+               for s in jax.tree_util.tree_leaves(param_specs)):
+        # a LeafSpec tree from sharding.specs.build_specs: resolve to the
+        # jit-facing PartitionSpecs (stacked leaves get their leading
+        # layer dim back here)
+        param_specs = sp.param_pspecs(params_shapes, param_specs)
+    shapes = jax.tree_util.tree_leaves(params_shapes)
+    specs = jax.tree_util.tree_leaves(
+        param_specs, is_leaf=lambda x: x is None or isinstance(
+            x, PartitionSpec))
+    assert len(shapes) == len(specs), (len(shapes), len(specs))
+    out = []
+    for leaf, spec in zip(shapes, specs):
+        if spec is None:
+            spec = PartitionSpec()
+        local = NamedSharding(mesh, spec).shard_shape(tuple(leaf.shape))
+        out.append(math.prod(local) if local else 1)
+    return out
 
 
 def demo_rows(numels: Sequence[int], chunk_size: int) -> int:
@@ -318,5 +376,6 @@ def profile_sweep(flex: FlexConfig, params, placement,
                      "comm_seconds": plan.comm_seconds,
                      "comm_seconds_pipelined": plan.comm_seconds_pipelined,
                      "link": plan.link,
-                     "n_replicas": plan.n_replicas}
+                     "n_replicas": plan.n_replicas,
+                     "describe": plan.describe()}
     return out

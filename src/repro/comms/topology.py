@@ -172,6 +172,34 @@ def overhead_from_bench(path: str = _DEFAULT_BENCH,
     raise KeyError(f"no {want!r} row with encode_MBps in {path}")
 
 
+def overhead_from_telemetry(path: str) -> CodecOverhead:
+    """Calibrate :class:`CodecOverhead` from a telemetry JSONL's manifest.
+
+    Reads the ``codec_calibration`` block (written by
+    ``telemetry.calibrate_codec`` for the run's OWN codec and payload
+    sizing) of the first ``manifest`` event — calibration from the run
+    being analyzed instead of from the committed bench throughput.  Raises
+    ``FileNotFoundError`` / ``KeyError`` like :func:`overhead_from_bench`
+    so a mis-calibrated planner never silently prices overhead at zero.
+    """
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            event = json.loads(line)
+            if event.get("event") != "manifest":
+                continue
+            cal = event.get("codec_calibration")
+            if not cal or not cal.get("encode_MBps"):
+                break
+            return CodecOverhead(
+                encode_s_per_byte=1.0 / (float(cal["encode_MBps"]) * 1e6),
+                decode_s_per_byte=1.0 / (float(cal["decode_MBps"]) * 1e6),
+                source=f"{path}:codec_calibration")
+    raise KeyError(f"no manifest with codec_calibration in {path}")
+
+
 # ---------------------------------------------------------------------------
 # analytic cost model
 

@@ -41,6 +41,15 @@ class Optimizer:
     # (build_train_step calls it when its ``use_kernel`` flag is set, so model
     # kernels and the DeMo extractor toggle together). None = no kernel path.
     with_use_kernel: Callable[[bool], "Optimizer"] | None = None
+    # optional rebuild hook: with_telemetry(True) returns a variant whose
+    # update() adds compression-quality scalars (per telemetry_metrics) to
+    # aux.extras. Must stay None/off by default: the extra reductions are
+    # real graph ops, and build_train_step only wires them into the step's
+    # outputs when its ``telemetry`` flag is set. None = no telemetry path.
+    with_telemetry: Callable[[bool], "Optimizer"] | None = None
+    # names of the extra scalar metrics update() emits when telemetry is on;
+    # static so build_train_step can declare shard_map out_specs pre-trace.
+    telemetry_metrics: tuple = ()
 
 
 def apply_updates(params, updates):

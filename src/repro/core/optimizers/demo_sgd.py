@@ -22,12 +22,46 @@ from repro.core import compression, flexdemo
 from repro.core.optimizers import base
 from repro.utils.tree import tree_zeros_like
 
+TELEMETRY_METRICS = ("energy_retained", "sign_agree")
+
+
+def _quality_stats(m, q, m_res):
+    """Scheme-agnostic compression-quality scalars over the whole tree.
+
+    energy_retained: fraction of momentum L2 energy captured by the extracted
+    payload, 1 - ||m_res||^2 / ||m||^2 (clipped to [0, 1]; residual-free
+    schemes like full sync read 1.0).  sign_agree: of the nonzero extracted
+    coefficients, the fraction whose sign matches the local momentum — a
+    proxy for how much sign-SGD quantization would agree with this replica.
+    """
+    def sumsq(tree):
+        return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                   for x in jax.tree_util.tree_leaves(tree))
+
+    m_sq = sumsq(m)
+    res_sq = sumsq(m_res)
+    tiny = jnp.asarray(1e-30, jnp.float32)
+    energy = jnp.clip(1.0 - res_sq / jnp.maximum(m_sq, tiny), 0.0, 1.0)
+
+    agree = jnp.zeros((), jnp.float32)
+    nnz = jnp.zeros((), jnp.float32)
+    for qq, mm in zip(jax.tree_util.tree_leaves(q),
+                      jax.tree_util.tree_leaves(m)):
+        qq = qq.astype(jnp.float32)
+        nz = qq != 0
+        agree = agree + jnp.sum(
+            (jnp.sign(qq) == jnp.sign(mm.astype(jnp.float32))) & nz)
+        nnz = nnz + jnp.sum(nz)
+    sign_agree = agree / jnp.maximum(nnz, 1.0)
+    return {"energy_retained": energy, "sign_agree": sign_agree}
+
 
 def demo_sgd(
     lr,
     flex: flexdemo.FlexConfig = flexdemo.FlexConfig(),
     momentum_decay: float = 0.999,
     weight_decay: float = 0.0,
+    telemetry: bool = False,
 ) -> base.Optimizer:
     replicator = flex.make()
 
@@ -56,19 +90,30 @@ def demo_sgd(
 
         updates = jax.tree_util.tree_map(upd, q, params)
         new_state = {"m": m_res, "step": step + 1}
-        return updates, new_state, base.OptimizerAux(wire, {"lr": eta})
+        extras = {"lr": eta}
+        if telemetry:
+            extras.update(_quality_stats(m, q, m_res))
+        return updates, new_state, base.OptimizerAux(wire, extras)
+
+    def rebuild(flex_, telemetry_):
+        return demo_sgd(lr, flex_, momentum_decay, weight_decay,
+                        telemetry=telemetry_)
 
     def with_use_kernel(enable: bool) -> base.Optimizer:
         """Rebuild with the DeMo extractor routed through the fused Pallas
         kernels (compiled on TPU, interpreter elsewhere). Explicit
         ``extract_impl`` choices other than "auto" are left untouched."""
         if not enable or flex.scheme != "demo" or flex.extract_impl != "auto":
-            return demo_sgd(lr, flex, momentum_decay, weight_decay)
+            return rebuild(flex, telemetry)
         impl = ("pallas" if jax.default_backend() == "tpu"
                 else "pallas_interpret")
         assert impl in compression.EXTRACT_IMPLS
-        return demo_sgd(lr, dataclasses.replace(flex, extract_impl=impl),
-                        momentum_decay, weight_decay)
+        return rebuild(dataclasses.replace(flex, extract_impl=impl), telemetry)
+
+    def with_telemetry(enable: bool) -> base.Optimizer:
+        """Rebuild with the compression-quality stats in aux.extras; keeps
+        whatever extract_impl the current build resolved to."""
+        return rebuild(flex, bool(enable))
 
     impl_tag = ("" if flex.scheme != "demo" or flex.extract_impl == "auto"
                 else f":{flex.extract_impl}")
@@ -79,6 +124,8 @@ def demo_sgd(
         params_diverge=replicator.params_diverge,
         postprocess_params=functools.partial(_post, replicator),
         with_use_kernel=with_use_kernel,
+        with_telemetry=with_telemetry,
+        telemetry_metrics=TELEMETRY_METRICS if telemetry else (),
     )
 
 

@@ -37,6 +37,10 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+# stdlib-only at import time (see telemetry package docstring), so the wire
+# chokepoints below can report trace-time byte counts without an import cycle.
+from repro.telemetry import trace as tmtrace
+
 SYNC_IMPLS = ("gather", "psum", "ring", "auto")
 
 OVERLAP_MODES = ("auto", "on", "off")
@@ -207,6 +211,8 @@ def gather_stack(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
     dims, so callers always decode a single ``(|R|, ...)`` stack regardless
     of how R factors across mesh axes.
     """
+    if tmtrace.active():   # trace-time only; nothing staged into the program
+        tmtrace.on_buffer("gather", x.nbytes, replica_count(axes))
     g = x
     for a in reversed(tuple(axes)):
         g = jax.lax.all_gather(g, a, tiled=False)
@@ -221,6 +227,8 @@ def ring_shift(x: jnp.ndarray, axis: str, n: int | None = None) -> jnp.ndarray:
     """Forward ``x`` one hop around the ring of ``axis`` (i -> i + 1 mod n)."""
     if n is None:
         n = jax.lax.psum(1, axis)
+    if tmtrace.active():
+        tmtrace.on_hop(x.nbytes)
     perm = [(i, (i + 1) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis, perm)
 
@@ -272,6 +280,8 @@ def ring_gather_decode(
     if not axes:
         return acc, 1
     sizes = {a: int(jax.lax.psum(1, a)) for a in axes}
+    if tmtrace.active():
+        tmtrace.on_buffer("ring", buf.nbytes, int(math.prod(sizes.values())))
     inflight = buf
     for ax in _ring_schedule(tuple(axes), sizes):
         inflight = ring_shift(inflight, ax, sizes[ax])
@@ -316,6 +326,10 @@ def ring_gather_decode_buckets(
     if not axes:
         return accs, 1
     sizes = {a: int(jax.lax.psum(1, a)) for a in axes}
+    if tmtrace.active():
+        n = int(math.prod(sizes.values()))
+        for buf in bufs:
+            tmtrace.on_buffer("ring", buf.nbytes, n)
     inflight = list(bufs)
     for ax in _ring_schedule(tuple(axes), sizes):
         # start EVERY bucket's hop before decoding ANY arrival: the ppermute
@@ -368,14 +382,17 @@ def sync_dense_values(
         else:
             g = gather_stack(buf, axes)
         return cod.decode(g).mean(axis=0), cod.wire_bytes
+    if modeled_bytes is None:
+        modeled_bytes = vals.size * 4
     if axes:
         ax = tuple(axes)
+        if tmtrace.active():
+            tmtrace.on_buffer("raw-psum" if impl == "psum" else "raw-gather",
+                              modeled_bytes, replica_count(axes))
         if impl == "psum":
             vals = jax.lax.pmean(vals, ax)
         else:
             vals = jax.lax.all_gather(vals, ax, tiled=False).mean(axis=0)
-    if modeled_bytes is None:
-        modeled_bytes = vals.size * 4
     return vals, modeled_bytes
 
 

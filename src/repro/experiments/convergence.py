@@ -147,21 +147,76 @@ WORKLOADS = {
 SMOKE_STEPS = {"lm": 10, "vit": 10}
 
 
-def run_setting(wl: Workload, setting: Setting, mesh, log=print) -> dict:
+def _telemetry_recorder(wl: Workload, setting: Setting, mesh, param_specs,
+                        out_path: str):
+    """Recorder + manifest for one (workload x setting) run, with the
+    planner prediction joined in: the plan is priced on the LOCAL momentum
+    shard numels (``planner.local_leaf_numels``) so its ``wire_bytes``
+    matches the measured per-step telemetry exactly (the drift report's
+    wire ratio contract)."""
+    import functools
+
+    from repro import telemetry
+    from repro.comms import planner as comm_planner
+    from repro.comms.topology import get_topology
+    from repro.launch.mesh import replica_placement
+    from repro.models import transformer
+
+    cfg = wl.config()
+    flex = None if setting.optimizer == "adamw" else setting.flex()
+    extra = {"domain": wl.domain, "setting": setting.name}
+    if flex is not None:
+        topo = get_topology("ethernet-100g")
+        plan = make_train_plan(cfg, mesh, wl.batch, wl.seq)
+        placement = replica_placement(mesh, plan.repl_axes,
+                                      topo.devices_per_node)
+        params_shapes = jax.eval_shape(
+            functools.partial(transformer.init_model, cfg=cfg),
+            jax.random.PRNGKey(0))
+        shard_numels = comm_planner.local_leaf_numels(
+            params_shapes, param_specs, mesh)
+        extra["comm_plan"] = comm_planner.predict(
+            flex, shard_numels, topo, placement).to_json()
+        extra["codec_calibration"] = telemetry.calibrate_codec(
+            flex, shard_numels)
+    return telemetry.Recorder(
+        sinks=[telemetry.JsonlSink(out_path)],
+        manifest=telemetry.run_manifest(
+            cfg=cfg.name, mesh_shape=mesh.devices.shape,
+            mesh_axes={a: int(n) for a, n in
+                       zip(mesh.axis_names, mesh.devices.shape)},
+            flex=flex, extra=extra))
+
+
+def run_setting(wl: Workload, setting: Setting, mesh, log=print,
+                telemetry_out: str = "") -> dict:
     """Train one (workload x setting) through the real sharded step; return
-    the serializable trajectory row."""
+    the serializable trajectory row.
+
+    ``telemetry_out`` writes the run's telemetry JSONL to that path.  The
+    returned row is UNCHANGED either way: telemetry adds observer ops and
+    host-side timing only, so the committed trajectories stay bit-exact.
+    """
     cfg = wl.config()
     plan = make_train_plan(cfg, mesh, wl.batch, wl.seq)
     opt = setting.build_optimizer(wl.lr)
-    step, shardings, _ = build_train_step(cfg, mesh, opt, plan)
+    step, shardings, param_specs = build_train_step(
+        cfg, mesh, opt, plan, telemetry=bool(telemetry_out))
     eval_step = build_eval_step(cfg, mesh, opt, plan)
     state = init_state(jax.random.PRNGKey(wl.seed), cfg, opt, plan)
     stream = wl.stream()
     eval_fn = train_loop.make_eval_fn(eval_step, n_batches=wl.eval_batches)
+    recorder = None
+    if telemetry_out:
+        recorder = _telemetry_recorder(wl, setting, mesh, param_specs,
+                                       telemetry_out)
     _, res = train_loop.run(
         step, state, stream, wl.steps,
         eval_fn=eval_fn, eval_stream=stream, eval_every=wl.eval_every,
-        log_every=0, shardings=shardings[0][1], log=log)
+        log_every=0, shardings=shardings[0][1], log=log,
+        recorder=recorder)
+    if recorder is not None:
+        recorder.close()
     return {
         "setting": setting.name,
         "optimizer": setting.optimizer,
@@ -183,8 +238,11 @@ def run_setting(wl: Workload, setting: Setting, mesh, log=print) -> dict:
 
 def run_domain(domain: str, mesh_shape=DEFAULT_MESH, smoke: bool = False,
                settings=SETTINGS, settings_filter: str = "",
-               log=print) -> dict:
-    """All settings of one domain on one mesh -> the baseline-file payload."""
+               log=print, telemetry_dir: str = "") -> dict:
+    """All settings of one domain on one mesh -> the baseline-file payload.
+
+    ``telemetry_dir`` writes one JSONL per setting
+    (``<dir>/<domain>_<setting>.jsonl``) without touching the rows."""
     wl = WORKLOADS[domain]
     if smoke:
         wl = dataclasses.replace(wl, steps=SMOKE_STEPS[domain])
@@ -202,7 +260,12 @@ def run_domain(domain: str, mesh_shape=DEFAULT_MESH, smoke: bool = False,
             continue
         log(f"[convergence] {domain}/{s.name} "
             f"({wl.steps} steps, mesh {mesh_shape[0]}x{mesh_shape[1]})")
-        rows.append(run_setting(wl, s, mesh, log=log))
+        tm_out = ""
+        if telemetry_dir:
+            import os
+
+            tm_out = os.path.join(telemetry_dir, f"{domain}_{s.name}.jsonl")
+        rows.append(run_setting(wl, s, mesh, log=log, telemetry_out=tm_out))
     ref = next((r for r in rows if r["reference"]), None)
     if ref is not None:
         for r in rows:

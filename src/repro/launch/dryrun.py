@@ -172,6 +172,22 @@ def _comm_report(cfg, plan_info: dict) -> dict:
     return report
 
 
+def _telemetry_manifest(cfg, plan_info: dict) -> dict:
+    """The run manifest a ``--telemetry-out`` training run of this combo
+    would open its JSONL with (same builder: telemetry.run_manifest), so the
+    dry-run record documents the observability identity — git SHA, jax
+    version, mesh, FlexConfig — next to the compile/cost stats."""
+    from repro import telemetry
+
+    sizes = plan_info["mesh_axes"]
+    return telemetry.run_manifest(
+        cfg=cfg.name,
+        mesh_shape=[int(sizes[a]) for a in sizes],
+        mesh_axes={a: int(n) for a, n in sizes.items()},
+        flex=FlexConfig(scheme="demo", rate=1 / 16),
+        argv=sys.argv[1:])
+
+
 def _compile_stats(lowered):
     # TPU-faithful wire bytes from the target-independent stablehlo (the CPU
     # backend upcasts bf16 collectives to f32 in its compiled HLO)
@@ -267,6 +283,7 @@ def run_combo(arch: str, shape_name: str, mesh_kind: str,
     del lowered
     if shape.mode == "train":
         record["comm_report"] = _comm_report(cfg, info["plan"])
+        record["telemetry_manifest"] = _telemetry_manifest(cfg, info["plan"])
 
     # 2) per-layer costs from unrolled shallow variants (single-pod only)
     if not skip_costs and not multi:

@@ -104,7 +104,7 @@ def collective_bytes(hlo_text: str) -> dict:
     """
     out = {k: 0.0 for k in _OPS}
     counts = {k: 0 for k in _OPS}
-    for line in hlo_text.splitlines():
+    for line in (hlo_text or "").splitlines():
         ls = line.strip()
         # result type is on the lhs: "%name = f32[...]{...} all-gather(..."
         m = _COLL_RE.match(ls)
@@ -179,7 +179,7 @@ def overlap_stats(hlo_text: str) -> dict:
     pairs = overlapped = 0
     max_inflight = 0
     burst = max_burst = 0
-    for line in hlo_text.splitlines():
+    for line in (hlo_text or "").splitlines():
         m = _INSTR_RE.match(line.strip())
         if not m:
             continue
@@ -233,7 +233,7 @@ def ring_chains(hlo_text: str) -> int:
     """
     permute_valued: set[str] = set()
     heads = 0
-    for line in hlo_text.splitlines():
+    for line in (hlo_text or "").splitlines():
         m = _INSTR_RE.match(line.strip())
         if not m:
             continue
@@ -285,7 +285,7 @@ def stablehlo_collective_bytes(text: str) -> dict:
     compiled HLO, which would overstate TPU traffic 2x)."""
     out = {k: 0.0 for k in _OPS}
     counts = {k: 0 for k in _OPS}
-    for line in text.splitlines():
+    for line in (text or "").splitlines():
         m = _SH_OP_RE.search(line)
         if not m:
             continue
@@ -326,7 +326,7 @@ def collective_bytes_by_axis(hlo_text: str, axis_groups: dict) -> dict:
     spanning pods (size including pod stride) are DCI. Heuristic: a group is
     DCI when its device-id span >= 256."""
     ici, dci = 0.0, 0.0
-    for line in hlo_text.splitlines():
+    for line in (hlo_text or "").splitlines():
         ls = line.strip()
         m = _COLL_RE.match(ls)
         if not m:
@@ -340,7 +340,10 @@ def collective_bytes_by_axis(hlo_text: str, axis_groups: dict) -> dict:
         gm = _GROUPS_RE.search(ls)
         span_is_dci = False
         if gm:
-            ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+            # tolerate malformed group lists: non-numeric ids size the group
+            # (via _group_size's count) but can't witness a DCI span
+            ids = [int(x) for x in gm.group(1).split(",")
+                   if x.strip().isdigit()]
             if ids and (max(ids) - min(ids)) >= 256:
                 span_is_dci = True
         n = _group_size(ls)

@@ -72,6 +72,17 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--fake-devices", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--telemetry-out", default="",
+                    help="write per-step telemetry (manifest + StepRecords + "
+                         "summary) as JSONL to PATH; also turns on the "
+                         "optimizer's compression-quality metrics. Feed the "
+                         "file to scripts/report_drift.py for the "
+                         "predicted-vs-measured planner join")
+    ap.add_argument("--profile-steps", default="",
+                    help="capture a jax.profiler trace over steps A:B "
+                         "(half-open), written to --profile-dir")
+    ap.add_argument("--profile-dir", default="/tmp/repro_profile",
+                    help="TensorBoard trace directory for --profile-steps")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -142,12 +153,53 @@ def main():
                          schedules.warmup_cosine(args.lr, args.steps),
                          **({} if args.optimizer == "adamw" else
                             {"flex": flex}))
-    step, shardings, _ = build_train_step(cfg, mesh, opt, plan,
-                                          use_kernel=args.use_kernel)
+    step, shardings, param_specs = build_train_step(
+        cfg, mesh, opt, plan, use_kernel=args.use_kernel,
+        telemetry=bool(args.telemetry_out))
     state = init_state(jax.random.PRNGKey(0), cfg, opt, plan)
     stream = make_stream(cfg, args.batch, args.seq)
     print(f"launch: {cfg.name} on {mesh.devices.shape} "
           f"S={plan.fsdp_axes} R={plan.repl_axes} {opt.name}")
+
+    recorder = profile = None
+    if args.telemetry_out or args.profile_steps:
+        from repro import telemetry
+
+        profile = telemetry.ProfileWindow.parse(args.profile_steps,
+                                                args.profile_dir)
+    if args.telemetry_out:
+        import functools
+
+        from repro.comms import planner as comm_planner
+        from repro.comms.topology import get_topology
+        from repro.launch.mesh import replica_placement
+        from repro.models import transformer
+
+        extra = {}
+        if args.optimizer != "adamw":
+            # predictions join against MEASURED wire bytes, which come from
+            # the per-device momentum SHARDS inside shard_map — price the
+            # plan on the local shard numels (planner.local_leaf_numels)
+            topo = get_topology(args.topology)
+            placement = replica_placement(mesh, plan.repl_axes,
+                                          topo.devices_per_node)
+            params_shapes = jax.eval_shape(
+                functools.partial(transformer.init_model, cfg=cfg),
+                jax.random.PRNGKey(0))
+            shard_numels = comm_planner.local_leaf_numels(
+                params_shapes, param_specs, mesh)
+            extra["comm_plan"] = comm_planner.predict(
+                flex, shard_numels, topo, placement).to_json()
+            extra["codec_calibration"] = telemetry.calibrate_codec(
+                flex, shard_numels)
+        recorder = telemetry.Recorder(
+            sinks=[telemetry.JsonlSink(args.telemetry_out)],
+            manifest=telemetry.run_manifest(
+                cfg=cfg.name, mesh_shape=mesh.devices.shape,
+                mesh_axes={a: int(n) for a, n in
+                           zip(mesh.axis_names, mesh.devices.shape)},
+                flex=None if args.optimizer == "adamw" else flex,
+                extra=extra))
 
     eval_fn = None
     if args.eval_every:
@@ -160,13 +212,21 @@ def main():
     state, result = train_loop.run(
         step, state, stream, args.steps,
         eval_fn=eval_fn, eval_stream=stream, eval_every=args.eval_every,
-        log_every=10, shardings=shardings[0][1])
+        log_every=10, shardings=shardings[0][1],
+        recorder=recorder, profile=profile)
     dt = (time.perf_counter() - t0) / max(args.steps, 1)
     print(f"done: final_train {result.final_train():.4f}"
           + (f" final_val {result.final_val():.4f}" if args.eval_every
              else "")
           + f" wire {result.wire_bytes_per_step:,.0f}B/step {dt:.2f}s/step",
           flush=True)
+    if recorder is not None:
+        recorder.close()
+        s = result.telemetry
+        print(f"telemetry: {s['n_steps']} steps -> {args.telemetry_out} "
+              f"(median wall {s['wall_s_median'] * 1e3:.1f} ms, "
+              f"block {s['block_s_median'] * 1e3:.1f} ms, "
+              f"wire {s['wire_bytes_per_step']:,.0f} B/step)")
     if args.json:
         import json as _json
 

@@ -1,0 +1,35 @@
+"""Telemetry subsystem: per-step comms/compression metrics + JSONL sinks.
+
+Layering contract (why this package may be imported from the hot path):
+every module here is stdlib-only at import time — ``jax`` and the comms
+stack are imported lazily inside functions — so ``replicators.base`` can
+call the :mod:`~repro.telemetry.trace` hooks without an import cycle and
+without adding import weight to the core.
+
+Zero-overhead guarantee: nothing in this package runs inside traced code at
+execution time.  The wire/hop counters fire at TRACE time (python executes
+once per compilation, see :mod:`~repro.telemetry.trace`); the per-step
+quality stats are ordinary graph ops the step only emits when an optimizer
+is rebuilt ``with_telemetry(True)``; the host-side :class:`Recorder` costs
+one blocking ``float()`` per step, and only when a recorder is attached.
+``benchmarks/bench_telemetry.py`` measures exactly this enabled-vs-disabled
+delta and gates it.
+"""
+from repro.telemetry import trace
+from repro.telemetry.manifest import calibrate_codec, git_sha, run_manifest
+from repro.telemetry.profile import ProfileWindow
+from repro.telemetry.record import SCHEMA_VERSION, Recorder, StepRecord
+from repro.telemetry.sinks import JsonlSink, MemorySink
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "JsonlSink",
+    "MemorySink",
+    "ProfileWindow",
+    "Recorder",
+    "StepRecord",
+    "calibrate_codec",
+    "git_sha",
+    "run_manifest",
+    "trace",
+]

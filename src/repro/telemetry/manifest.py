@@ -1,0 +1,126 @@
+"""Run manifest: the self-description block heading every telemetry JSONL.
+
+Captures everything needed to join recorded telemetry back against the
+planner's predictions (``scripts/report_drift.py``): the config and mesh, the
+FlexConfig, git SHA + jax version, the priced :class:`CommPlan` (as
+``comm_plan``), and a measured codec encode/decode calibration
+(``codec_calibration``) that ``topology.overhead_from_telemetry`` converts
+into a :class:`~repro.comms.topology.CodecOverhead` — calibration from the
+run itself instead of from bench throughput only.
+
+Stdlib-only at import time; jax and the comms stack load lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+import time
+
+
+def git_sha() -> str | None:
+    """HEAD commit of the repo this package lives in; None outside git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def run_manifest(*, cfg: str | None = None, mesh_shape=None, mesh_axes=None,
+                 flex=None, argv=None, extra: dict | None = None) -> dict:
+    """The manifest event body (the Recorder adds ``event: "manifest"``).
+
+    ``flex`` may be a FlexConfig or None (e.g. the AdamW full-sync reference
+    has no replication config).  ``comm_plan`` / ``codec_calibration`` are
+    attached by callers that have priced a plan (see launch.train and
+    experiments.convergence).
+    """
+    import jax
+
+    m = {
+        "created_unix": time.time(),
+        "argv": list(argv) if argv is not None else sys.argv[1:],
+        "git_sha": git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "config": cfg,
+        "mesh_shape": list(mesh_shape) if mesh_shape is not None else None,
+        "mesh_axes": dict(mesh_axes) if mesh_axes is not None else None,
+        "flex": dataclasses.asdict(flex) if flex is not None else None,
+    }
+    if extra:
+        m.update(extra)
+    return m
+
+
+def _time_calls(fn, args, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / max(1, reps)
+
+
+def calibrate_codec(flex, numels, reps: int = 3) -> dict | None:
+    """Measured encode/decode MB/s of THIS config's wire codec on THIS
+    payload sizing (zeros payload — codec cost is shape-, not value-bound).
+
+    Returns None when the config has no codec (``codec="off"`` / scheme
+    "none"): there is nothing on the wire to calibrate.  The result feeds
+    ``topology.overhead_from_telemetry``.
+    """
+    amp = flex.resolve_codec()
+    if amp == "off" or flex.scheme == "none":
+        return None
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comms import codecs, planner
+    from repro.core import compression
+
+    numels = list(numels)
+    if flex.scheme == "demo":
+        s = flex.chunk_size
+        k = flex.topk if flex.topk is not None else compression.rate_to_topk(
+            flex.rate, s, compression.WireFormat(value_bytes=flex.value_bytes))
+        rows = planner.demo_rows(numels, s)
+        cod = codecs.PackedCodec(rows, s, k, amp, idx_layout=flex.idx_layout)
+        args = (jnp.zeros((rows, k), jnp.float32),
+                jnp.zeros((rows, k), jnp.int32))
+    else:
+        if flex.scheme in ("diloco", "full"):
+            n_sel = sum(numels)
+        elif flex.scheme == "random":
+            n_sel = sum(compression.random_n_sel(n, flex.rate)
+                        for n in numels)
+        elif flex.scheme == "striding":
+            stride = compression.rate_to_stride(flex.rate)
+            n_sel = sum(compression.striding_n_sel(n, stride)
+                        for n in numels)
+        else:
+            raise KeyError(f"unknown scheme {flex.scheme!r}")
+        cod = codecs.DenseCodec(n_sel, amp, signed=flex.sign)
+        args = (jnp.zeros((n_sel,), jnp.float32),)
+
+    enc = jax.jit(cod.encode)
+    dec = jax.jit(cod.decode)
+    buf = jax.block_until_ready(enc(*args))
+    t_enc = _time_calls(enc, args, reps)
+    t_dec = _time_calls(dec, (buf,), reps)
+    return {
+        "amp": amp,
+        "wire_bytes": int(cod.wire_bytes),
+        "reps": int(reps),
+        "encode_MBps": cod.wire_bytes / t_enc / 1e6,
+        "decode_MBps": cod.wire_bytes / t_dec / 1e6,
+    }

@@ -1,0 +1,60 @@
+"""Optional jax.profiler trace window over a span of training steps.
+
+``--profile-steps A:B`` captures device traces for steps ``[A, B)`` into a
+TensorBoard-readable directory.  The window costs nothing outside its span:
+step callbacks are two int comparisons.  Stdlib-only at import time.
+"""
+from __future__ import annotations
+
+import os
+
+
+class ProfileWindow:
+    """Start/stop ``jax.profiler`` around steps ``[start, stop)``."""
+
+    def __init__(self, start: int, stop: int, out_dir: str):
+        if not 0 <= start < stop:
+            raise ValueError(
+                f"profile window needs 0 <= start < stop, got {start}:{stop}")
+        self.start = int(start)
+        self.stop = int(stop)
+        self.out_dir = out_dir
+        self._running = False
+
+    @staticmethod
+    def parse(spec: str | None, out_dir: str) -> "ProfileWindow | None":
+        """``"A:B"`` → window over steps [A, B); None/empty spec → None."""
+        if not spec:
+            return None
+        try:
+            a, b = spec.split(":")
+            return ProfileWindow(int(a), int(b), out_dir)
+        except ValueError as e:
+            raise ValueError(
+                f"--profile-steps wants 'A:B' with ints A < B, got {spec!r}"
+            ) from e
+
+    def on_step(self, step: int) -> None:
+        """Call before dispatching ``step``; opens the trace at ``start``."""
+        if step == self.start and not self._running:
+            import jax
+
+            os.makedirs(self.out_dir, exist_ok=True)
+            jax.profiler.start_trace(self.out_dir)
+            self._running = True
+
+    def after_step(self, step: int) -> None:
+        """Call after ``step``'s result is blocked on; closes at ``stop``."""
+        if self._running and step + 1 >= self.stop:
+            import jax
+
+            jax.profiler.stop_trace()
+            self._running = False
+
+    def finish(self) -> None:
+        """Safety-stop for loops that end inside the window."""
+        if self._running:
+            import jax
+
+            jax.profiler.stop_trace()
+            self._running = False

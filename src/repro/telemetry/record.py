@@ -1,0 +1,149 @@
+"""Recorder: counters/gauges/timers + the per-step StepRecord stream.
+
+StepRecord schema (``event: "step"`` in the JSONL; see ROADMAP contract):
+
+  step        int    0-based step index
+  wall_s      float  host wall seconds for the whole step (data placement +
+                     dispatch + blocking on the loss)
+  dispatch_s  float  host seconds to enqueue the jitted step (async dispatch;
+                     includes trace+compile time on the first step)
+  block_s     float  seconds the host then waited for the device result —
+                     the device-execution side of the step.  The exposed-sync
+                     estimate is ``block_s - min(block_s)`` across steps
+                     (compute is constant per step; sync is what varies).
+  loss        float  the step's scalar loss
+  wire_bytes  float  replication payload bytes per replica (static, exact)
+  metrics     dict   every other scalar the step emitted (e.g. the
+                     compression-quality stats ``energy_retained`` /
+                     ``sign_agree`` when the optimizer runs with telemetry)
+
+The Recorder aggregates these into :meth:`Recorder.summary` (what
+``LoopResult.telemetry`` carries) and forwards each event to its sinks.
+Stdlib-only.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    wall_s: float
+    dispatch_s: float
+    block_s: float
+    loss: float
+    wire_bytes: float
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _median(xs: list[float]) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    n = len(s)
+    return float(s[n // 2]) if n % 2 else float((s[n // 2 - 1] + s[n // 2]) / 2)
+
+
+class Recorder:
+    """Counters, gauges, timers, and the step-record stream.
+
+    ``manifest`` (see :func:`~repro.telemetry.manifest.run_manifest`) is
+    emitted to every sink at construction, so a JSONL file is self-describing
+    from its first line.  :meth:`close` emits the summary event and closes
+    the sinks; it is idempotent.
+    """
+
+    def __init__(self, sinks=(), manifest: dict | None = None):
+        self.sinks = list(sinks)
+        self.counters: dict[str, int] = {}
+        self.gauges: dict[str, float] = {}
+        self.timers: dict[str, dict] = {}
+        self.steps: list[StepRecord] = []
+        self.comm_trace: dict | None = None
+        self._closed = False
+        if manifest is not None:
+            self.emit({"event": "manifest", "schema": SCHEMA_VERSION,
+                       **manifest})
+
+    # -- sinks --------------------------------------------------------------
+    def emit(self, event: dict) -> None:
+        for s in self.sinks:
+            s.write(event)
+
+    # -- primitives ---------------------------------------------------------
+    def counter(self, name: str, delta: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + int(delta)
+
+    def gauge(self, name: str, value: float) -> None:
+        self.gauges[name] = float(value)
+
+    @contextlib.contextmanager
+    def timer(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            t = self.timers.setdefault(name, {"total_s": 0.0, "count": 0})
+            t["total_s"] += dt
+            t["count"] += 1
+
+    # -- step stream --------------------------------------------------------
+    def record_step(self, rec: StepRecord) -> None:
+        self.steps.append(rec)
+        self.emit({"event": "step", **rec.to_json()})
+
+    def record_comm_trace(self, trace_summary: dict) -> None:
+        """Attach the trace-time wire capture (bytes per buffer, ring hops).
+
+        An empty capture means the step was already compiled when the
+        recorder attached (warm jit cache) — recorded as absent, never as
+        zero traffic.
+        """
+        if not trace_summary or not trace_summary.get("n_buffers"):
+            return
+        self.comm_trace = dict(trace_summary)
+        self.emit({"event": "comm_trace", **self.comm_trace})
+
+    # -- aggregation --------------------------------------------------------
+    def summary(self) -> dict:
+        recs = self.steps
+        walls = [r.wall_s for r in recs]
+        blocks = [r.block_s for r in recs]
+        metric_sums: dict[str, list[float]] = {}
+        for r in recs:
+            for k, v in r.metrics.items():
+                metric_sums.setdefault(k, []).append(float(v))
+        return {
+            "schema": SCHEMA_VERSION,
+            "n_steps": len(recs),
+            "wall_s_total": float(sum(walls)),
+            "wall_s_median": _median(walls),
+            "dispatch_s_median": _median([r.dispatch_s for r in recs]),
+            "block_s_median": _median(blocks),
+            "block_s_min": float(min(blocks)) if blocks else 0.0,
+            "wire_bytes_total": float(sum(r.wire_bytes for r in recs)),
+            "wire_bytes_per_step": float(recs[-1].wire_bytes) if recs else 0.0,
+            "metrics_mean": {k: float(sum(v) / len(v))
+                             for k, v in metric_sums.items()},
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "timers": {k: dict(v) for k, v in self.timers.items()},
+            "comm_trace": self.comm_trace,
+        }
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.emit({"event": "summary", **self.summary()})
+        for s in self.sinks:
+            s.close()

@@ -1,0 +1,89 @@
+"""Event sinks for the telemetry Recorder.
+
+A sink consumes flat JSON-serializable event dicts (``{"event": kind, ...}``)
+in emission order: one ``manifest`` first, then ``step`` events, then one
+``summary`` at close.  :class:`JsonlSink` is the on-disk format the drift
+report and ``topology.overhead_from_telemetry`` consume; :class:`MemorySink`
+keeps events in-process for tests and benchmarks.
+
+Stdlib-only.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def _json_default(o):
+    """Serialize numpy/jax scalars that leak into events; repr anything else."""
+    try:
+        return float(o)
+    except (TypeError, ValueError):
+        return repr(o)
+
+
+class JsonlSink:
+    """One JSON object per line, flushed per event (crash-tolerant tail)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "w")
+        self.bytes_written = 0
+
+    def write(self, event: dict) -> None:
+        line = json.dumps(event, default=_json_default)
+        self._f.write(line + "\n")
+        self._f.flush()
+        self.bytes_written += len(line) + 1
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class MemorySink:
+    """In-memory event list (tests / benchmarks)."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+
+    def write(self, event: dict) -> None:
+        self.events.append(dict(event))
+
+    def close(self) -> None:
+        pass
+
+    def _of(self, kind: str) -> list[dict]:
+        return [e for e in self.events if e.get("event") == kind]
+
+    @property
+    def manifest(self) -> dict | None:
+        m = self._of("manifest")
+        return m[0] if m else None
+
+    @property
+    def steps(self) -> list[dict]:
+        return self._of("step")
+
+    @property
+    def summary(self) -> dict | None:
+        s = self._of("summary")
+        return s[-1] if s else None
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """All events of a JSONL file (skips blank/truncated trailing lines)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue    # torn final line of a crashed run
+    return out

@@ -1,0 +1,85 @@
+"""Trace-time capture of replication-wire traffic (bytes, buckets, hops).
+
+The replicator chokepoints (``replicators.base.gather_stack``,
+``ring_gather_decode``/``_buckets``, ``ring_shift``, and the raw codec-off
+collectives in ``sync_dense_values``) call :func:`on_buffer` / :func:`on_hop`
+with STATIC shape-derived byte counts.  Those calls sit inside functions that
+run under ``jit``/``shard_map`` — but python there executes once per TRACE,
+not once per step, so with no capture active the cost is a single truthiness
+check on an empty list, and nothing whatsoever is staged into the compiled
+program (the zero-overhead-when-disabled guarantee).
+
+A :class:`Recorder`-driven loop wraps the FIRST call of the jitted step in
+:func:`capture` — the call that triggers tracing — and records the resulting
+:class:`CommTrace`.  If the step was already compiled (warm cache), the
+capture legitimately sees nothing; callers must treat an empty trace as
+"no retrace happened", not as "no traffic".
+
+Stdlib-only: safe to import from the replicator hot path.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator
+
+
+@dataclasses.dataclass
+class CommTrace:
+    """Static wire facts gathered during one tracing window."""
+
+    # one entry per encoded buffer placed on a collective:
+    #   {"kind": "gather"|"ring"|"raw-gather"|"raw-psum",
+    #    "bytes": int, "n_replicas": int}
+    buffers: list = dataclasses.field(default_factory=list)
+    ring_hops: int = 0          # ppermute hops issued (sum over buckets)
+    ring_hop_bytes: int = 0     # bytes forwarded across all hops
+
+    def summary(self) -> dict:
+        per_buffer = [int(b["bytes"]) for b in self.buffers]
+        return {
+            "n_buffers": len(self.buffers),
+            "wire_bytes": int(sum(per_buffer)),
+            "per_buffer_bytes": per_buffer,
+            "kinds": sorted({b["kind"] for b in self.buffers}),
+            "ring_hops": int(self.ring_hops),
+            "ring_hop_bytes": int(self.ring_hop_bytes),
+        }
+
+
+_STACK: list[CommTrace] = []
+
+
+def active() -> bool:
+    """True iff some capture window is open (the chokepoints' fast check)."""
+    return bool(_STACK)
+
+
+@contextlib.contextmanager
+def capture() -> Iterator[CommTrace]:
+    """Collect chokepoint events into a fresh :class:`CommTrace`.
+
+    Windows nest (each open window sees every event), and the window is
+    removed even on error, so an aborted trace never leaks state into the
+    next step's capture.
+    """
+    t = CommTrace()
+    _STACK.append(t)
+    try:
+        yield t
+    finally:
+        _STACK.remove(t)
+
+
+def on_buffer(kind: str, nbytes: int, n_replicas: int = 1) -> None:
+    """One encoded buffer entering a collective (trace-time, static size)."""
+    for t in _STACK:
+        t.buffers.append({"kind": kind, "bytes": int(nbytes),
+                          "n_replicas": int(n_replicas)})
+
+
+def on_hop(nbytes: int) -> None:
+    """One ``ppermute`` ring hop forwarding ``nbytes`` (trace-time)."""
+    for t in _STACK:
+        t.ring_hops += 1
+        t.ring_hop_bytes += int(nbytes)

@@ -23,6 +23,9 @@ class LoopResult:
     # per-step trajectories of every OTHER scalar the step emitted
     # (e.g. wire_bytes): metric name -> list of floats, one per step.
     metrics: dict = dataclasses.field(default_factory=dict)
+    # Recorder.summary() when the run was driven with telemetry, else None
+    # (see repro.telemetry.record for the schema).
+    telemetry: dict | None = None
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -57,6 +60,8 @@ def run(
     shardings=None,
     log: Callable = print,
     bandwidth_bps: float | None = None,
+    recorder=None,
+    profile=None,
 ) -> tuple[Any, LoopResult]:
     """``bandwidth_bps``: when set, wall-times are augmented with the MODELED
     inter-node transfer time (paper Fig. 10 bandwidth-constrained study).
@@ -65,13 +70,58 @@ def run(
     host in ONE pass at the end, so recording full trajectories does not
     block async dispatch every step; the host only syncs on log/eval steps
     (where the loss is printed anyway).
+
+    ``recorder`` (a :class:`repro.telemetry.Recorder`) changes the PACING but
+    never the math: each step blocks on its loss so the dispatch/block wall
+    split is observable, step 0's dispatch runs under a
+    :func:`repro.telemetry.trace.capture` window (catching the replicators'
+    trace-time wire/hop counts when that call compiles), and every step emits
+    a StepRecord.  ``LoopResult.telemetry`` then carries the recorder summary
+    (the caller still owns ``recorder.close()``).  ``profile`` (a
+    :class:`repro.telemetry.ProfileWindow`) brackets a step span with
+    ``jax.profiler`` traces; both default to None = today's loop, untouched.
     """
     losses_dev, extras_dev = [], {}
     val_losses, walls = [], []
     t0 = time.perf_counter()
     for step in range(n_steps):
+        t_step = time.perf_counter()
         batch = to_device(stream.batch(step), shardings)
-        state, metrics = step_fn(state, batch)
+        if profile is not None:
+            profile.on_step(step)
+        if recorder is None:
+            state, metrics = step_fn(state, batch)
+        else:
+            from repro.telemetry import StepRecord, trace
+
+            t_batch = time.perf_counter()
+            if step == 0:
+                with trace.capture() as ct:
+                    state, metrics = step_fn(state, batch)
+                recorder.record_comm_trace(ct.summary())
+            else:
+                state, metrics = step_fn(state, batch)
+            t_disp = time.perf_counter()
+            loss_h = float(metrics["loss"])           # block on the device
+            t_done = time.perf_counter()
+            scalars = {}
+            for k, v in metrics.items():
+                if k in ("loss", "wire_bytes"):
+                    continue
+                try:
+                    scalars[k] = float(v)
+                except (TypeError, ValueError):
+                    pass
+            recorder.record_step(StepRecord(
+                step=step,
+                wall_s=t_done - t_step,
+                dispatch_s=t_disp - t_batch,
+                block_s=t_done - t_disp,
+                loss=loss_h,
+                wire_bytes=float(metrics["wire_bytes"]),
+                metrics=scalars))
+        if profile is not None:
+            profile.after_step(step)
         losses_dev.append(metrics["loss"])
         for k, v in metrics.items():
             if k != "loss":
@@ -96,8 +146,11 @@ def run(
     if bandwidth_bps:
         walls = [w + (i + 1) * wire * 8.0 / bandwidth_bps
                  for i, w in enumerate(walls)]
+    if profile is not None:
+        profile.finish()
+    telemetry = recorder.summary() if recorder is not None else None
     return state, LoopResult(train_losses, val_losses, walls, wire, n_steps,
-                             extra)
+                             extra, telemetry)
 
 
 def make_eval_fn(loss_step_fn, n_batches: int = 4):

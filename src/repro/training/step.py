@@ -72,6 +72,7 @@ def build_train_step(
     params_shapes=None,
     use_kernel: bool = False,
     donate: bool = True,
+    telemetry: bool = False,
 ):
     """Returns (jitted step_fn(state, batch) -> (state, metrics), shardings).
 
@@ -81,9 +82,17 @@ def build_train_step(
     ``use_kernel`` routes BOTH the model forward (attention/rwkv/rglru) and —
     for optimizers that support it — the DeMo extract/decode through the
     fused Pallas kernels, so the whole hot path toggles with one flag.
+
+    ``telemetry`` rebuilds supporting optimizers ``with_telemetry(True)`` and
+    surfaces their compression-quality scalars (``telemetry_metrics``) as
+    extra mesh-reduced step outputs; off by default so the base step stays
+    free of the extra reductions.
     """
     if use_kernel and optimizer.with_use_kernel is not None:
         optimizer = optimizer.with_use_kernel(True)
+    if telemetry and optimizer.with_telemetry is not None:
+        optimizer = optimizer.with_telemetry(True)
+    tm_metrics = tuple(optimizer.telemetry_metrics)
     param_specs, pspecs, b_ps, ctx, all_axes, global_denom = _loss_setup(
         cfg, optimizer, plan, params_shapes)
 
@@ -146,6 +155,11 @@ def build_train_step(
             "loss": nll / jnp.maximum(den, 1.0),
             "wire_bytes": jnp.asarray(aux.wire_bytes, jnp.float32),
         }
+        for name in tm_metrics:
+            v = jnp.asarray(aux.extras[name], jnp.float32)
+            if all_axes:
+                v = jax.lax.pmean(v, all_axes)
+            out_metrics[name] = v
 
         if optimizer.params_diverge:
             params = _add_lead(params)
@@ -156,9 +170,11 @@ def build_train_step(
 
     in_specs = ({"params": pspecs["params"], "opt": pspecs["opt"],
                  "step": pspecs["step"]}, b_ps)
+    metric_specs = {"loss": P(), "wire_bytes": P()}
+    metric_specs.update({name: P() for name in tm_metrics})
     out_specs = ({"params": pspecs["params"], "opt": pspecs["opt"],
                   "step": pspecs["step"]},
-                 {"loss": P(), "wire_bytes": P()})
+                 metric_specs)
 
     mapped = compat.shard_map(step_fn, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs, check_vma=False)

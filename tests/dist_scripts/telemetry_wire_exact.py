@@ -1,0 +1,48 @@
+"""8-device acceptance: a seeded convergence-smoke run with telemetry writes
+JSONLs whose per-step ``wire_bytes`` is bit-exact against the committed
+``wire_bytes_per_step`` baselines, and whose manifest ``comm_plan`` joins at
+wire_ratio exactly 1.0 (the drift-report contract), per scheme."""
+import importlib.util
+import json
+import os
+import tempfile
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8").strip()
+
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+
+_spec = importlib.util.spec_from_file_location(
+    "report_drift", os.path.join(REPO, "scripts", "report_drift.py"))
+report_drift = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(report_drift)
+
+import dataclasses  # noqa: E402
+
+from repro.experiments import convergence as C  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.telemetry.sinks import read_jsonl  # noqa: E402
+
+with open(os.path.join(REPO, "experiments", "convergence", "lm.json")) as f:
+    BASELINE = {r["setting"]: r for r in json.load(f)["rows"]}
+
+mesh = make_mesh((2, 4), ("data", "model"))
+wl = dataclasses.replace(C.WORKLOADS["lm"], steps=C.SMOKE_STEPS["lm"])
+tmp = tempfile.mkdtemp(prefix="tm_wire_")
+
+for name in ("demo-fp32-sign", "random-int8-sign"):
+    setting = next(s for s in C.SETTINGS if s.name == name)
+    out = os.path.join(tmp, f"lm_{name}.jsonl")
+    row = C.run_setting(wl, setting, mesh, log=lambda *_: None,
+                        telemetry_out=out)
+    want = BASELINE[name]["wire_bytes_per_step"]
+    assert row["wire_bytes_per_step"] == want, (name, row, want)
+    steps = [e for e in read_jsonl(out) if e.get("event") == "step"]
+    assert len(steps) == wl.steps, (name, len(steps))
+    # bit-exact per STEP, not just the final value
+    assert all(s["wire_bytes"] == want for s in steps), (name, want)
+    rec = report_drift.analyze(out)
+    assert rec["ratios"]["wire_ratio"] == 1.0, (name, rec["ratios"])
+    assert report_drift.check(rec) == [], report_drift.check(rec)
+
+print("OK")

@@ -29,3 +29,11 @@ def test_distributed_full_sync_matches_reference():
 @pytest.mark.slow
 def test_decoupled_momentum_diverges_across_replicas():
     _run("decoupled_divergence.py")
+
+
+@pytest.mark.slow
+def test_telemetry_wire_bytes_exact_on_8_devices():
+    """ISSUE 7 acceptance: the seeded 8-device convergence smoke with
+    telemetry writes per-step wire_bytes bit-exact against the committed
+    baselines, and its manifest's comm_plan joins at wire_ratio 1.0."""
+    _run("telemetry_wire_exact.py")

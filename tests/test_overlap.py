@@ -419,6 +419,71 @@ def test_done_without_matching_start_is_ignored():
     assert hlo_stats.collective_bytes(orphan)["total"] == 0
 
 
+_ZERO_OVERLAP = {"async_pairs": 0, "overlapped": 0, "max_inflight": 0,
+                 "collective_burst": 0}
+
+# inputs the parsers must survive: launch tooling feeds them whatever a
+# backend handed back, including nothing at all
+_DEGENERATE_HLO = (
+    None,
+    "",
+    "   \n\t\n",
+    "not hlo at all",
+    "HloModule m\n\nENTRY e {\n",                       # truncated module
+    "%x = all-gather",                                   # no type, no parens
+    "garbage = = = collective-permute-start(((",         # mangled lhs
+    "\x00\x01 binary junk \xff collective-permute",
+)
+
+# torn-but-recognizable collective lines: the parsers may still SEE an op
+# (a burst of 1, a zero-byte count) — the contract is no raise, zero bytes
+_TORN_HLO = (
+    "%x = f32[ all-gather(%p0)",                         # torn shape bracket
+    "%x = f32[1,2,3 reduce-scatter(%p0), replica_groups={{0,1}",
+    "%cp = u8[64]{0} collective-permute(%p0), "
+    "source_target_pairs={{a,b}}",                       # non-numeric pairs
+)
+
+
+@pytest.mark.parametrize("text", _DEGENERATE_HLO,
+                         ids=lambda t: repr(t)[:24])
+def test_hlo_stats_degenerate_inputs_return_zeros_never_raise(text):
+    """Contract: on empty/None/malformed HLO every public parser returns its
+    zero shape — launch tooling must never crash on a backend's text."""
+    assert hlo_stats.overlap_stats(text) == _ZERO_OVERLAP
+    assert hlo_stats.ring_chains(text) in (0, 1)  # lone permute may head
+    got = hlo_stats.collective_bytes(text)
+    assert got["total"] == 0
+    assert all(v == 0 for v in got["counts"].values())
+    sh = hlo_stats.stablehlo_collective_bytes(text)
+    assert sh["total"] == 0
+    axis = hlo_stats.collective_bytes_by_axis(text, {})
+    assert axis == {"ici": 0.0, "dci": 0.0}
+
+
+@pytest.mark.parametrize("text", _TORN_HLO, ids=lambda t: repr(t)[:24])
+def test_hlo_stats_torn_collective_lines_never_raise_or_count_bytes(text):
+    stats = hlo_stats.overlap_stats(text)
+    assert stats["async_pairs"] == 0 and stats["overlapped"] == 0
+    assert hlo_stats.ring_chains(text) in (0, 1)
+    assert hlo_stats.collective_bytes(text)["total"] == 0
+    assert hlo_stats.stablehlo_collective_bytes(text)["total"] == 0
+    axis = hlo_stats.collective_bytes_by_axis(text, {})
+    assert axis["ici"] == 0.0 and axis["dci"] == 0.0
+
+
+def test_hlo_stats_malformed_replica_groups_do_not_raise():
+    """Non-numeric replica-group ids still count the op (group sized by the
+    id count) but cannot witness a DCI span."""
+    bad = ("%ag = f32[1024]{0} all-gather(%p0), "
+           "replica_groups={{zero,one,two,three}}, dimensions={0}\n")
+    got = hlo_stats.collective_bytes(bad)
+    assert got["counts"]["all-gather"] == 1
+    assert got["all-gather"] == pytest.approx(1024 * 4 * 3 / 4)
+    axis = hlo_stats.collective_bytes_by_axis(bad, {})
+    assert axis["dci"] == 0.0 and axis["ici"] > 0.0
+
+
 # ---------------------------------------------------------------------------
 # planner: the bucketed feasibility model
 

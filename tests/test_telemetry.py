@@ -1,0 +1,463 @@
+"""Telemetry subsystem: Recorder/sinks/trace primitives, the trace-time wire
+capture against the replicators' real collectives (vmap replica simulation),
+loop integration, the drift report (scripts/report_drift.py), profiler-window
+parsing, and the calibration bridge into ``topology.overhead_from_telemetry``.
+
+The zero-overhead-when-disabled contract's observable half is also pinned:
+with no capture active the chokepoints record nothing, and a telemetry-on
+optimizer produces bit-identical updates to a telemetry-off one (telemetry
+adds observer outputs, never math)."""
+import importlib.util
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core.flexdemo import FlexConfig
+from repro.core.optimizers.demo_sgd import demo_sgd
+from repro.telemetry import trace
+from repro.telemetry.record import Recorder, StepRecord, _median
+from repro.telemetry.sinks import JsonlSink, MemorySink, read_jsonl
+from repro.training import loop as train_loop
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                       "report_drift.py")
+_spec = importlib.util.spec_from_file_location("report_drift", _SCRIPT)
+report_drift = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(report_drift)
+
+
+# ---------------------------------------------------------------------------
+# recorder + sinks
+
+
+def test_recorder_primitives_and_summary():
+    rec = Recorder()
+    rec.counter("retrace")
+    rec.counter("retrace", 2)
+    rec.gauge("lr", 0.01)
+    with rec.timer("host"):
+        pass
+    rec.record_step(StepRecord(step=0, wall_s=0.2, dispatch_s=0.05,
+                               block_s=0.15, loss=2.0, wire_bytes=100.0,
+                               metrics={"energy_retained": 0.5}))
+    rec.record_step(StepRecord(step=1, wall_s=0.1, dispatch_s=0.02,
+                               block_s=0.08, loss=1.5, wire_bytes=100.0,
+                               metrics={"energy_retained": 0.7}))
+    s = rec.summary()
+    assert s["n_steps"] == 2
+    assert s["counters"] == {"retrace": 3}
+    assert s["gauges"] == {"lr": 0.01}
+    assert s["timers"]["host"]["count"] == 1
+    assert s["wire_bytes_per_step"] == 100.0
+    assert s["wire_bytes_total"] == 200.0
+    assert s["wall_s_median"] == pytest.approx(0.15)
+    assert s["block_s_min"] == pytest.approx(0.08)
+    assert s["metrics_mean"]["energy_retained"] == pytest.approx(0.6)
+
+
+def test_recorder_emits_manifest_first_then_steps_then_summary():
+    mem = MemorySink()
+    rec = Recorder(sinks=[mem], manifest={"config": "c"})
+    rec.record_step(StepRecord(step=0, wall_s=1, dispatch_s=0, block_s=1,
+                               loss=0.0, wire_bytes=8.0))
+    rec.close()
+    rec.close()                                  # idempotent: one summary
+    kinds = [e["event"] for e in mem.events]
+    assert kinds == ["manifest", "step", "summary"]
+    assert mem.manifest["schema"] == telemetry.SCHEMA_VERSION
+    assert mem.manifest["config"] == "c"
+    assert mem.summary["n_steps"] == 1
+
+
+def test_recorder_skips_empty_comm_trace():
+    """Warm jit cache => empty capture => recorded as ABSENT, never as zero
+    traffic (the trace-capture contract)."""
+    mem = MemorySink()
+    rec = Recorder(sinks=[mem])
+    rec.record_comm_trace({"n_buffers": 0, "wire_bytes": 0})
+    rec.record_comm_trace({})
+    assert rec.comm_trace is None
+    assert mem._of("comm_trace") == []
+    rec.record_comm_trace({"n_buffers": 1, "wire_bytes": 64})
+    assert rec.comm_trace["wire_bytes"] == 64
+
+
+def test_jsonl_sink_round_trip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    sink = JsonlSink(path)
+    rec = Recorder(sinks=[sink], manifest={"config": "x"})
+    rec.record_step(StepRecord(step=0, wall_s=1, dispatch_s=0, block_s=1,
+                               loss=jnp.float32(2.0),   # device scalar leaks
+                               wire_bytes=42.0))
+    rec.close()
+    assert sink.bytes_written == os.path.getsize(path)
+    with open(path, "a") as f:
+        f.write('{"event": "step", "torn')     # crashed-run tail
+    events = read_jsonl(path)
+    assert [e["event"] for e in events] == ["manifest", "step", "summary"]
+    assert events[1]["loss"] == 2.0            # serialized as a float
+
+
+def test_median_helper():
+    assert _median([]) == 0.0
+    assert _median([3.0]) == 3.0
+    assert _median([1.0, 2.0, 9.0]) == 2.0
+    assert _median([1.0, 2.0, 3.0, 4.0]) == 2.5
+
+
+# ---------------------------------------------------------------------------
+# trace capture
+
+
+def test_trace_capture_nests_and_never_leaks():
+    assert not trace.active()
+    with trace.capture() as outer:
+        trace.on_buffer("ring", 100, 4)
+        with trace.capture() as inner:
+            trace.on_buffer("gather", 50, 2)
+            trace.on_hop(10)
+        trace.on_hop(20)
+    assert not trace.active()
+    assert outer.summary()["wire_bytes"] == 150
+    assert outer.summary()["ring_hops"] == 2
+    assert inner.summary() == {"n_buffers": 1, "wire_bytes": 50,
+                               "per_buffer_bytes": [50], "kinds": ["gather"],
+                               "ring_hops": 1, "ring_hop_bytes": 10}
+    # without a window the hooks are inert
+    trace.on_buffer("ring", 999, 4)
+    trace.on_hop(999)
+    with trace.capture() as fresh:
+        pass
+    assert fresh.summary()["n_buffers"] == 0
+
+
+def test_trace_capture_removed_on_error():
+    with pytest.raises(RuntimeError):
+        with trace.capture():
+            raise RuntimeError("aborted trace")
+    assert not trace.active()
+
+
+# ---------------------------------------------------------------------------
+# the replicators' chokepoints, through the real update path (|R|-replica
+# vmap simulation: same optimizer.update wire path as the shard_map step)
+
+
+R = 4
+SHAPES = {"a": (32, 48), "b": (96,)}
+
+
+def _vmap_update(flex, telemetry_on=False):
+    opt = demo_sgd(0.01, flex, momentum_decay=0.9, telemetry=telemetry_on)
+
+    def one(st, grads):
+        params = {k: jnp.zeros(s, jnp.float32) for k, s in SHAPES.items()}
+        updates, st, aux = opt.update(grads, st, params, axes=("r",))
+        return updates, st, aux
+
+    rng = np.random.RandomState(7)
+    grads = {k: jnp.asarray(rng.randn(R, *s), jnp.float32)
+             for k, s in SHAPES.items()}
+    state = jax.vmap(opt.init)(
+        {k: jnp.zeros((R,) + s, jnp.float32) for k, s in SHAPES.items()})
+    return jax.vmap(one, axis_name="r"), state, grads
+
+
+def test_trace_sees_scheme_wire_bytes_and_ring_hops():
+    from repro.comms import planner
+
+    flex = FlexConfig(scheme="demo", rate=1 / 8, chunk_size=16)
+    fn, state, grads = _vmap_update(flex)
+    jitted = jax.jit(fn)
+    with trace.capture() as ct:
+        jax.block_until_ready(jitted(state, grads))
+    s = ct.summary()
+    numels = [int(np.prod(shape)) for shape in SHAPES.values()]
+    assert s["wire_bytes"] == planner.scheme_wire_bytes(flex, numels)
+    assert s["kinds"] == ["ring"]
+    assert s["ring_hops"] == R - 1            # one monolithic ring
+    assert s["ring_hop_bytes"] == (R - 1) * s["wire_bytes"]
+    # warm cache: no retrace, the capture legitimately sees nothing
+    with trace.capture() as warm:
+        jax.block_until_ready(jitted(state, grads))
+    assert warm.summary()["n_buffers"] == 0
+
+
+def test_trace_bucketed_ring_splits_buffers_and_hops():
+    from repro.comms import planner
+
+    flex = FlexConfig(scheme="demo", rate=1 / 8, chunk_size=16,
+                      overlap="on", n_buckets=2)
+    fn, state, grads = _vmap_update(flex)
+    with trace.capture() as ct:
+        jax.block_until_ready(jax.jit(fn)(state, grads))
+    s = ct.summary()
+    numels = [int(np.prod(shape)) for shape in SHAPES.values()]
+    assert s["n_buffers"] >= 2                # one buffer per bucket
+    assert s["ring_hops"] == s["n_buffers"] * (R - 1)
+    # bucket headers add bytes; the un-bucketed payload is a floor
+    assert s["wire_bytes"] >= planner.scheme_wire_bytes(flex, numels)
+
+
+def test_telemetry_on_updates_bit_identical_to_off():
+    """Telemetry adds OBSERVER outputs, never math: the returned updates and
+    optimizer state are bit-identical with telemetry on and off."""
+    flex = FlexConfig(scheme="demo", rate=1 / 8, chunk_size=16)
+    fn_off, state, grads = _vmap_update(flex, telemetry_on=False)
+    fn_on, _, _ = _vmap_update(flex, telemetry_on=True)
+    upd_off, st_off, _ = jax.jit(fn_off)(state, grads)
+    upd_on, st_on, aux = jax.jit(fn_on)(state, grads)
+    for a, b in zip(jax.tree_util.tree_leaves(upd_off),
+                    jax.tree_util.tree_leaves(upd_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(st_off),
+                    jax.tree_util.tree_leaves(st_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in ("energy_retained", "sign_agree"):
+        v = float(np.asarray(aux.extras[name])[0])
+        assert 0.0 <= v <= 1.0, (name, v)
+
+
+def test_with_telemetry_rebuild_round_trips():
+    flex = FlexConfig(scheme="demo", rate=1 / 8, chunk_size=16)
+    opt = demo_sgd(0.01, flex)
+    assert opt.telemetry_metrics == ()
+    on = opt.with_telemetry(True)
+    assert set(on.telemetry_metrics) == {"energy_retained", "sign_agree"}
+    off = on.with_telemetry(False)
+    assert off.telemetry_metrics == ()
+
+
+# ---------------------------------------------------------------------------
+# loop integration
+
+
+class _Stream:
+    def batch(self, step):
+        return {"x": np.full((4,), float(step), np.float32)}
+
+
+def _fake_step(state, batch):
+    loss = jnp.sum(batch["x"]) + state
+    return state + 1.0, {"loss": loss,
+                         "wire_bytes": jnp.float32(64.0),
+                         "energy_retained": jnp.float32(0.5)}
+
+
+def test_loop_with_recorder_emits_steps_and_summary(tmp_path):
+    mem = MemorySink()
+    rec = Recorder(sinks=[mem], manifest={"config": "fake"})
+    _, res = train_loop.run(jax.jit(_fake_step), jnp.float32(0.0), _Stream(),
+                            3, log_every=0, log=lambda *_: None, recorder=rec)
+    rec.close()
+    assert res.telemetry is not None
+    assert res.telemetry["n_steps"] == 3
+    assert res.telemetry["wire_bytes_per_step"] == 64.0
+    assert res.telemetry["metrics_mean"]["energy_retained"] == 0.5
+    steps = mem.steps
+    assert [s["step"] for s in steps] == [0, 1, 2]
+    for s in steps:
+        assert s["wall_s"] >= s["dispatch_s"] + s["block_s"] > 0
+        assert s["metrics"] == {"energy_retained": 0.5}
+        assert "loss" not in s["metrics"]      # top-level, not duplicated
+    # the trajectory record is unchanged by the recorder
+    _, plain = train_loop.run(jax.jit(_fake_step), jnp.float32(0.0),
+                              _Stream(), 3, log_every=0, log=lambda *_: None)
+    assert plain.train_losses == res.train_losses
+    assert plain.telemetry is None
+    # LoopResult round-trips with the telemetry block attached
+    back = train_loop.LoopResult.from_json(
+        json.loads(json.dumps(res.to_json())))
+    assert back.telemetry["n_steps"] == 3
+    assert back.train_losses == res.train_losses
+
+
+# ---------------------------------------------------------------------------
+# drift report
+
+
+def _write_jsonl(path, manifest, wire=100.0, n=4):
+    sink = JsonlSink(str(path))
+    rec = Recorder(sinks=[sink], manifest=manifest)
+    for i in range(n):
+        rec.record_step(StepRecord(
+            step=i, wall_s=0.1 + 0.2 * (i == 0), dispatch_s=0.01,
+            block_s=0.05, loss=2.0 - 0.1 * i, wire_bytes=wire))
+    rec.close()
+    return str(path)
+
+
+def _plan(wire=100.0):
+    return {"wire_bytes": wire, "comm_seconds": 1e-3,
+            "comm_seconds_pipelined": 5e-4, "comm_seconds_overlapped": 2e-4,
+            "link": "ethernet-100g", "n_replicas": 2}
+
+
+def test_report_drift_exact_wire_ratio_passes(tmp_path):
+    path = _write_jsonl(tmp_path / "a.jsonl",
+                        {"setting": "demo-fp32-sign", "comm_plan": _plan(),
+                         "codec_calibration": {"encode_MBps": 200.0,
+                                               "decode_MBps": 400.0}})
+    rec = report_drift.analyze(path)
+    assert rec["ratios"]["wire_ratio"] == 1.0
+    assert all(math.isfinite(v) for v in rec["ratios"].values())
+    assert rec["measured"]["wall_s_median"] == pytest.approx(0.1)  # skip=1
+    assert rec["calibration"]["encode_MBps"] == 200.0
+    assert report_drift.check(rec) == []
+    assert report_drift.main.__globals__  # loaded as a module, sanity
+
+
+def test_report_drift_flags_wire_mismatch_and_handles_planless(tmp_path):
+    bad = _write_jsonl(tmp_path / "bad.jsonl",
+                       {"setting": "s", "comm_plan": _plan(wire=120.0)})
+    errs = report_drift.check(report_drift.analyze(bad))
+    assert errs and "wire_ratio" in errs[0]
+    # a manifest without a plan (the adamw reference) is clean, not an error
+    ref = _write_jsonl(tmp_path / "ref.jsonl", {"setting": "adamw-full-sync"})
+    rec = report_drift.analyze(ref)
+    assert "ratios" not in rec
+    assert report_drift.check(rec) == []
+
+
+def test_report_drift_main_check_exit_codes(tmp_path, monkeypatch, capsys):
+    good = _write_jsonl(tmp_path / "good.jsonl",
+                        {"setting": "demo", "comm_plan": _plan()})
+    monkeypatch.setattr("sys.argv", ["report_drift", good, "--check",
+                                     "--json", str(tmp_path / "out.json")])
+    assert report_drift.main() == 0
+    assert "wire_ratio 1.000" in capsys.readouterr().out
+    report = json.load(open(tmp_path / "out.json"))
+    assert report["errors"] == []
+    bad = _write_jsonl(tmp_path / "bad.jsonl",
+                       {"setting": "demo", "comm_plan": _plan(wire=1.0)})
+    monkeypatch.setattr("sys.argv", ["report_drift", str(tmp_path), "--check"])
+    assert report_drift.main() == 1           # dir form picks up bad.jsonl
+
+
+def test_report_drift_raises_on_stepless_file(tmp_path):
+    path = tmp_path / "empty.jsonl"
+    path.write_text('{"event": "manifest", "schema": 1}\n')
+    with pytest.raises(ValueError, match="no manifest/step"):
+        report_drift.analyze(str(path))
+
+
+# ---------------------------------------------------------------------------
+# profiler window + manifest + calibration
+
+
+def test_profile_window_parse():
+    from repro.telemetry.profile import ProfileWindow
+
+    w = ProfileWindow.parse("2:5", "/tmp/p")
+    assert (w.start, w.stop, w.out_dir) == (2, 5, "/tmp/p")
+    assert ProfileWindow.parse("", "/tmp/p") is None
+    assert ProfileWindow.parse(None, "/tmp/p") is None
+    for bad in ("5", "5:2", "3:3", "-1:4", "a:b"):
+        with pytest.raises(ValueError):
+            ProfileWindow.parse(bad, "/tmp/p")
+
+
+def test_run_manifest_contents():
+    flex = FlexConfig(scheme="demo", rate=1 / 8)
+    m = telemetry.run_manifest(cfg="c", mesh_shape=(2, 4),
+                               mesh_axes={"data": 2, "model": 4}, flex=flex,
+                               argv=["--x"], extra={"setting": "s"})
+    assert m["config"] == "c" and m["setting"] == "s"
+    assert m["mesh_shape"] == [2, 4]
+    assert m["flex"]["scheme"] == "demo"
+    assert m["jax_version"] == jax.__version__
+    assert m["argv"] == ["--x"]
+    json.dumps(m)                              # manifest is a JSONL line
+    # the adamw reference has no flex: still a valid manifest
+    assert telemetry.run_manifest(cfg="c", flex=None)["flex"] is None
+
+
+def test_calibrate_codec_and_overhead_bridge(tmp_path):
+    from repro.comms import planner
+    from repro.comms.topology import overhead_from_telemetry
+
+    flex = FlexConfig(scheme="demo", rate=1 / 8, chunk_size=16)
+    cal = telemetry.calibrate_codec(flex, [512, 96], reps=1)
+    assert cal["wire_bytes"] == planner.scheme_wire_bytes(flex, [512, 96])
+    assert cal["encode_MBps"] > 0 and cal["decode_MBps"] > 0
+    # codec off => nothing on the wire to calibrate
+    off = FlexConfig(scheme="demo", rate=1 / 8, chunk_size=16, codec="off")
+    assert telemetry.calibrate_codec(off, [512]) is None
+
+    path = _write_jsonl(tmp_path / "cal.jsonl",
+                        {"config": "c", "codec_calibration": cal})
+    ov = overhead_from_telemetry(path)
+    assert ov.encode_s_per_byte == pytest.approx(1 / (cal["encode_MBps"] * 1e6))
+    assert ov.decode_s_per_byte == pytest.approx(1 / (cal["decode_MBps"] * 1e6))
+    assert "codec_calibration" in ov.source
+    with pytest.raises(FileNotFoundError):
+        overhead_from_telemetry(str(tmp_path / "missing.jsonl"))
+    bare = _write_jsonl(tmp_path / "bare.jsonl", {"config": "c"})
+    with pytest.raises(KeyError):
+        overhead_from_telemetry(bare)
+
+
+def test_comm_plan_json_carries_per_step_wire_basis():
+    """The drift join basis: diloco's prediction amortizes the sync burst
+    over the period with the replicator's own integer division; every other
+    scheme's per-step field equals the plain wire bytes."""
+    from repro.comms import planner
+    from repro.core import compression
+
+    numels = [4096, 333]
+    dlx = FlexConfig(scheme="diloco", rate=1 / 8)
+    plan = planner.predict(dlx, numels, "ethernet-100g", 4)
+    d = plan.to_json()
+    period = compression.rate_to_stride(dlx.rate)
+    assert d["wire_bytes_per_step"] == d["wire_bytes"] // period \
+        < d["wire_bytes"]
+    demo = planner.predict(FlexConfig(scheme="demo", rate=1 / 8,
+                                      chunk_size=16),
+                           numels, "ethernet-100g", 4).to_json()
+    assert demo["wire_bytes_per_step"] == demo["wire_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# end to end through the real sharded step (1x1 mesh, single device): the
+# drift report's wire contract holds without any multi-device environment
+
+
+def test_run_setting_with_telemetry_exact_wire_join(tmp_path):
+    import dataclasses
+
+    from repro.experiments import convergence as C
+    from repro.launch.mesh import make_mesh
+
+    wl = dataclasses.replace(C.WORKLOADS["lm"], steps=3, eval_every=0,
+                             eval_batches=1)
+    demo = next(s for s in C.SETTINGS if s.name == "demo-fp32-sign")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    out = str(tmp_path / "lm_demo.jsonl")
+    row = C.run_setting(wl, demo, mesh, log=lambda *_: None,
+                        telemetry_out=out)
+    # the row is unchanged by telemetry (same math, observer outputs only)
+    plain = C.run_setting(wl, demo, mesh, log=lambda *_: None)
+    assert row["train_losses"] == plain["train_losses"]
+    assert row["wire_bytes_per_step"] == plain["wire_bytes_per_step"]
+
+    events = read_jsonl(out)
+    manifest = events[0]
+    assert manifest["event"] == "manifest"
+    assert manifest["setting"] == "demo-fp32-sign"
+    assert manifest["comm_plan"]["wire_bytes"] == row["wire_bytes_per_step"]
+    steps = [e for e in events if e["event"] == "step"]
+    assert len(steps) == 3
+    assert all(s["wire_bytes"] == row["wire_bytes_per_step"] for s in steps)
+    for s in steps:
+        for name in ("energy_retained", "sign_agree"):
+            assert 0.0 <= s["metrics"][name] <= 1.0
+
+    rec = report_drift.analyze(out)
+    assert rec["ratios"]["wire_ratio"] == 1.0
+    assert report_drift.check(rec) == []
