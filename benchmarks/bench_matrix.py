@@ -1,0 +1,62 @@
+"""Experiment-matrix liveness bench (``run.py --only matrix``).
+
+A tiny in-process sweep through repro.experiments.matrix on a 1x1 mesh (the
+bench process keeps a single device; the subprocess-isolated 8-device sweeps
+live in scripts/run_matrix.py): two runnable cells plus one forbidden combo,
+driven twice to assert the resume protocol re-executes nothing, reporting
+per-cell wall and the (static) wire bytes.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.experiments import matrix
+
+_SPEC = {
+    "name": "bench",
+    "defaults": {"workload": "lm", "mesh": [1, 1], "devices": 1},
+    "workloads": {
+        "lm": {"domain": "lm", "arch": "qwen2.5-3b", "n_layers": 1,
+               "d_model": 32, "vocab": 32, "batch": 2, "seq": 8,
+               "steps": 3, "eval_every": 3, "eval_batches": 1,
+               "lr": 0.02, "seed": 0},
+    },
+    "sweeps": [{"scheme": ["demo", "full"]}, {"sync_impl": ["psum"]}],
+}
+
+
+def run():
+    spec = matrix.load_spec(_SPEC)
+    launches = []
+
+    def in_process(cell, tm):
+        launches.append(matrix.cell_id(cell))
+        return matrix.run_cell(cell, telemetry_out=tm)
+
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "results.jsonl")
+        t0 = time.perf_counter()
+        s1 = matrix.run_sweep(spec, out, launcher=in_process,
+                              telemetry_dir=os.path.join(d, "tm"),
+                              log=lambda *_: None)
+        wall = time.perf_counter() - t0
+        n_first = len(launches)
+        s2 = matrix.run_sweep(spec, out, launcher=in_process,
+                              log=lambda *_: None)
+        assert len(launches) == n_first, "resume re-executed a cell"
+        assert s2["resumed"] == s1["n_cells"], s2
+        assert s1["errors"] == 0, s1
+        rows = [r for r in matrix.read_results(out)
+                if r.get("event") == "cell"]
+        return [{
+            "scheme": r["cell"]["scheme"] if r.get("cell") else "?",
+            "cell_id": r["cell_id"],
+            "status": r["status"],
+            "skip_reason": r.get("skip_reason"),
+            "wire_bytes_per_step": r.get("wire_bytes_per_step"),
+            "step_wall_mean_s": r.get("step_wall_mean_s"),
+            "sweep_wall_s": wall,
+            "resumed_second_pass": s2["resumed"],
+        } for r in rows]

@@ -46,8 +46,8 @@ def main() -> None:
                          "fig3_causal_lm_schemes, fig8_topk, fig9_sign, "
                          "fig11_chunk, fig13_dtype, fig10_bandwidth, "
                          "fig5_6_scaling, fig2a_t5_true_encdec, kernels, "
-                         "packed_extraction, comms, overlap, convergence, "
-                         "telemetry, roofline")
+                         "packed_extraction, comms, overlap, matrix, "
+                         "convergence, telemetry, roofline")
     ap.add_argument("--json", default="",
                     help="write a machine-readable run summary to PATH")
     ap.add_argument("--smoke", action="store_true",
@@ -75,9 +75,10 @@ def main() -> None:
 
     from benchmarks import (bench_chunk, bench_comm, bench_comms,
                             bench_convergence, bench_dtype, bench_encdec,
-                            bench_kernels, bench_overlap, bench_packed,
-                            bench_replicators, bench_scaling, bench_sign,
-                            bench_telemetry, bench_topk, roofline)
+                            bench_kernels, bench_matrix, bench_overlap,
+                            bench_packed, bench_replicators, bench_scaling,
+                            bench_sign, bench_telemetry, bench_topk,
+                            roofline)
 
     bench("fig1_replicators_sgd_vs_adamw",
           lambda: bench_replicators.run(
@@ -142,6 +143,15 @@ def main() -> None:
                     for x in r))
 
     bench("overlap", bench_overlap.run, _overlap_derived)
+
+    # liveness for the experiment-matrix runner (the gated subprocess-
+    # isolated sweeps live in scripts/run_matrix.py + check_matrix.py):
+    # asserts in-process that resume re-executes zero completed cells
+    bench("matrix", bench_matrix.run,
+          lambda r: (f"cells={len(r)},"
+                     f"skipped={sum(1 for x in r if x['status'] == 'skipped')},"
+                     f"resumed={r[0]['resumed_second_pass']}" if r
+                     else "no-rows"))
 
     # liveness for the convergence-parity harness (the gated 8-device runs
     # live in scripts/run_convergence.py; see scripts/check_convergence.py)

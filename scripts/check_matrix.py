@@ -1,0 +1,202 @@
+#!/usr/bin/env python
+"""Matrix gate: compare a fresh ``run_matrix.py`` results JSONL against the
+committed smoke baseline (``experiments/matrix/smoke_baseline.json``).
+
+Checks, per baseline cell (matched by content-addressed ``cell_id`` — the id
+hashes the full normalized cell, so an edited sweep shows up as missing +
+extra cells, never as a silent semantic change):
+
+  * complete-or-skip -- every cell in the results must be ``ok`` or
+                        ``skipped``; any ``error`` row fails the gate, and a
+                        baseline cell with no current row fails (a sweep that
+                        silently stopped short is not a pass).
+  * skip stability   -- skipped cells must be skipped for the SAME reason;
+                        the skip reasons mirror FlexConfig validation, so a
+                        reason drift means the validation rules moved without
+                        the compatibility predicate (or vice versa).
+  * exact wire bytes -- ``wire_bytes_per_step`` on completed cells marked
+                        ``wire_deterministic`` must match the baseline
+                        exactly: wire formats are static functions of
+                        shapes x codec, never timing.
+
+Cells present in the results but absent from the baseline also fail — the
+committed baseline IS the sweep's coverage contract; refresh it with
+``--update`` when the spec intentionally changes:
+
+  python scripts/run_matrix.py --spec experiments/matrix/smoke.json \
+      --out /tmp/matrix/smoke.jsonl
+  python scripts/check_matrix.py /tmp/matrix/smoke.jsonl --update
+  git add experiments/matrix/smoke_baseline.json
+
+Exit status: 0 = gate passed, 1 = at least one failure (printed),
+2 = usage / missing or malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join("experiments", "matrix",
+                                "smoke_baseline.json")
+
+# the per-cell facts the baseline pins; everything else in a result row
+# (losses, walls, plans) is measurement, gated elsewhere or not at all
+BASELINE_FIELDS = ("cell_id", "status", "skip_reason", "wire_bytes_per_step",
+                   "wire_deterministic", "workload", "scheme", "codec")
+
+
+class CheckError(Exception):
+    """Malformed input (usage error, exit 2) — never a traceback."""
+
+
+def load_results(path: str) -> list[dict]:
+    """Cell rows of a run_matrix.py results JSONL, LAST terminal row per
+    cell_id winning (a resumed file legitimately contains an old error row
+    followed by the successful re-run).  Torn trailing lines are skipped with
+    the same tolerance as the runner's own resume."""
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError as e:
+        raise CheckError(f"{path}: cannot read ({e})")
+    rows: dict[str, dict] = {}
+    saw_manifest = False
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            event = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if event.get("event") == "matrix_manifest":
+            saw_manifest = True
+        if event.get("event") != "cell" or not event.get("cell_id"):
+            continue
+        prev = rows.get(event["cell_id"])
+        if prev is not None and prev.get("status") in ("ok", "skipped") \
+                and event.get("status") == "error":
+            continue                # never let a stale error shadow a result
+        rows[event["cell_id"]] = event
+    if not saw_manifest and not rows:
+        raise CheckError(f"{path}: not a run_matrix.py results file "
+                         "(no matrix_manifest or cell events)")
+    return list(rows.values())
+
+
+def _baseline_cell(row: dict) -> dict:
+    return {k: row.get(k) for k in BASELINE_FIELDS if row.get(k) is not None}
+
+
+def compare(rows: list[dict], baseline: dict) -> list[str]:
+    failures: list[str] = []
+    cur = {r["cell_id"]: r for r in rows}
+    base = {c["cell_id"]: c for c in baseline.get("cells", [])}
+    for r in rows:
+        if r.get("status") == "error":
+            err = str(r.get("error", ""))[:200]
+            failures.append(f"{r['cell_id']}: error row — {err}")
+    for cid, b in sorted(base.items()):
+        c = cur.get(cid)
+        if c is None:
+            failures.append(f"{cid}: baseline cell missing from results — "
+                            "the sweep stopped short or the spec changed "
+                            "(refresh with --update if intentional)")
+            continue
+        if c.get("status") == "error":
+            continue                # already reported above
+        if c.get("status") != b.get("status"):
+            failures.append(f"{cid}: status {b.get('status')!r} -> "
+                            f"{c.get('status')!r}")
+            continue
+        if b.get("status") == "skipped" and \
+                c.get("skip_reason") != b.get("skip_reason"):
+            failures.append(
+                f"{cid}: skip reason drifted {b.get('skip_reason')!r} -> "
+                f"{c.get('skip_reason')!r} — compatibility predicate and "
+                "FlexConfig validation moved apart?")
+        if b.get("status") == "ok" and b.get("wire_deterministic"):
+            bw, cw = b.get("wire_bytes_per_step"), \
+                c.get("wire_bytes_per_step")
+            if float(cw if cw is not None else -1.0) != \
+                    float(bw if bw is not None else -1.0):
+                failures.append(f"{cid}.wire_bytes_per_step: {bw} -> {cw} "
+                                "(exact check — wire formats are static "
+                                "functions of shapes x codec)")
+    for cid in sorted(set(cur) - set(base)):
+        failures.append(f"{cid}: cell not in the committed baseline — "
+                        "refresh with --update if the spec change is "
+                        "intentional")
+    return failures
+
+
+def run_check(results_path: str, baseline_path: str,
+              update: bool = False) -> list[str]:
+    rows = load_results(results_path)
+    if update:
+        cells = sorted((_baseline_cell(r) for r in rows
+                        if r.get("status") in ("ok", "skipped")),
+                       key=lambda c: c["cell_id"])
+        errors = [r["cell_id"] for r in rows if r.get("status") == "error"]
+        if errors:
+            raise CheckError(
+                f"refusing to bake error cells into the baseline: "
+                f"{', '.join(errors)} — fix the sweep first")
+        if not cells:
+            raise CheckError(f"{results_path}: no terminal cells to commit")
+        d = os.path.dirname(baseline_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(baseline_path, "w") as f:
+            json.dump({"schema": 1, "cells": cells}, f, indent=1)
+            f.write("\n")
+        n_ok = sum(1 for c in cells if c["status"] == "ok")
+        print(f"updated baseline {baseline_path} ({n_ok} ok, "
+              f"{len(cells) - n_ok} skipped cells)")
+        return []
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except OSError as e:
+        raise CheckError(f"{baseline_path}: cannot read ({e}) — run the "
+                         "sweep and commit a baseline via --update")
+    except json.JSONDecodeError as e:
+        raise CheckError(f"{baseline_path}: not valid JSON ({e})")
+    if not baseline.get("cells"):
+        raise CheckError(f"{baseline_path}: no cells — nothing would be "
+                         "checked")
+    return compare(rows, baseline)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("results", help="results JSONL written by run_matrix.py")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from RESULTS instead of "
+                         "comparing")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.results):
+        print(f"error: {args.results} not found", file=sys.stderr)
+        return 2
+    try:
+        failures = run_check(args.results, args.baseline, args.update)
+    except CheckError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if failures:
+        print(f"MATRIX REGRESSION: {len(failures)} check(s) failed")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    if not args.update:
+        print("matrix gate: OK (all cells complete-or-skip, skip reasons "
+              "stable, wire bytes exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Experiment-matrix runner CLI: declarative sweeps, one subprocess per cell.
+
+Parent mode drives a sweep spec — every cell in its own python process with
+its own env (``XLA_FLAGS`` fake-device count, ``PYTHONPATH``), results
+streaming one JSON line per cell into a resumable file:
+
+  python scripts/run_matrix.py --spec experiments/matrix/smoke.json \
+      --out /tmp/matrix/smoke.jsonl          # run every cell
+  python scripts/run_matrix.py --spec experiments/matrix/smoke.json \
+      --out /tmp/matrix/smoke.jsonl          # again: re-executes NOTHING
+  python scripts/run_matrix.py --spec ... --dry-run     # enumerate + skip
+                                                        # reasons, run nothing
+  python scripts/run_matrix.py --spec ... --calibrate   # predicted-vs-
+                                                        # measured roofline
+
+Gate the output with ``scripts/check_matrix.py`` (no error rows, exact wire
+bytes, stable skip reasons).  Refreshing the committed smoke baseline after
+an INTENTIONAL sweep/validation change:
+
+  python scripts/run_matrix.py --spec experiments/matrix/smoke.json \
+      --out /tmp/matrix/smoke.jsonl
+  python scripts/check_matrix.py /tmp/matrix/smoke.jsonl --update
+  git add experiments/matrix/smoke_baseline.json
+
+``--out`` defaults to $MATRIX_OUT falling back to
+``/tmp/matrix/<spec-name>.jsonl`` — a scratch path, NOT a committed file
+(the committed artifact is the check_matrix baseline, not raw results).
+
+Child mode (``--cell``) is how the parent re-invokes this script per cell
+(the torch_xla experiment_runner idiom): it pins the cell's fake-device
+count into XLA_FLAGS BEFORE the first jax import, trains the cell through
+the real shard_map step, and prints the result body as a marker-prefixed
+final stdout line for the parent to parse.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _bootstrap_path() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_child(args) -> int:
+    cell = json.loads(args.cell)
+    # standalone-invocation safety: the parent's cell_env already pinned
+    # XLA_FLAGS, but a hand-launched child must get the same topology
+    devices = int(cell.get("devices", 0))
+    if devices:
+        from repro.launch import subproc
+
+        os.environ["XLA_FLAGS"] = subproc.set_host_device_count(
+            os.environ.get("XLA_FLAGS", ""), devices)
+    from repro.experiments import matrix
+
+    body = matrix.run_cell(cell, telemetry_out=args.telemetry_out,
+                           log=lambda *a: print(*a, file=sys.stderr))
+    print(matrix.RESULT_MARKER + json.dumps(body, default=str))
+    return 0
+
+
+def run_parent(args) -> int:
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(args.spec)
+    out = args.out or os.path.join("/tmp", "matrix", f"{spec.name}.jsonl")
+    if args.dry_run:
+        done = matrix.completed_cells(matrix.read_results(out))
+        for i, cell in enumerate(spec.cells):
+            cid = matrix.cell_id(cell)
+            reason = matrix.compatibility(cell)
+            state = ("skip: " + reason if reason is not None else
+                     "done" if cid in done else "run")
+            print(f"{i + 1:3d}  {cid:<60} {state}")
+        print(f"# {spec.name}: {len(spec.cells)} cells "
+              f"({len(done)} already complete in {out})")
+        return 0
+    if args.calibrate:
+        report = matrix.calibrate(out)
+        print(json.dumps(report, indent=1, default=str))
+        ov = report["codec_overhead"]
+        if ov:
+            print(f"# codec overhead: encode {ov['encode_s_per_byte']:.3e} "
+                  f"s/B decode {ov['decode_s_per_byte']:.3e} s/B "
+                  f"({ov['source']})", file=sys.stderr)
+        return 0
+    summary = matrix.run_sweep(
+        spec, out, resume=not args.no_resume, max_cells=args.max_cells,
+        telemetry_dir=args.telemetry_dir, timeout=args.timeout)
+    return 1 if summary["errors"] else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="experiment-matrix sweep runner (one subprocess per cell)")
+    ap.add_argument("--spec", default="",
+                    help="sweep spec JSON (see EXPERIMENTS.md)")
+    ap.add_argument("--out", default=os.environ.get("MATRIX_OUT", ""),
+                    help="results JSONL (default $MATRIX_OUT or "
+                         "/tmp/matrix/<spec-name>.jsonl); appended on resume")
+    ap.add_argument("--max-cells", type=int, default=0,
+                    help="launch at most N cells this invocation (0 = all); "
+                         "the rest defer to the next resume")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore + truncate any existing results file")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="enumerate cells with skip/done/run state; run "
+                         "nothing")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="read completed results and print the predicted-vs-"
+                         "measured roofline report + aggregated codec "
+                         "overhead (topology.overhead_from_matrix)")
+    ap.add_argument("--telemetry-dir",
+                    default=os.environ.get("MATRIX_TELEMETRY", ""),
+                    help="write one telemetry JSONL per cell into DIR "
+                         "(default $MATRIX_TELEMETRY; empty = none)")
+    ap.add_argument("--timeout", type=float, default=900.0,
+                    help="per-cell subprocess timeout in seconds")
+    ap.add_argument("--cell", default="",
+                    help="(child mode) run ONE cell from its JSON and print "
+                         "the marker-prefixed result line")
+    ap.add_argument("--telemetry-out", default="",
+                    help="(child mode) telemetry JSONL path for the cell")
+    args = ap.parse_args()
+
+    _bootstrap_path()
+    if args.cell:
+        return run_child(args)
+    if not args.spec:
+        ap.error("--spec is required (or --cell for child mode)")
+    return run_parent(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,15 +1,27 @@
 #!/usr/bin/env bash
 # Single verification entrypoint for builders and CI:
-#   1. the tier-1 pytest suite (ROADMAP "Tier-1 verify" command),
-#   2. the quick kernel microbench (Pallas-interpret vs jnp oracles),
-#   3. the packed-vs-per-leaf extraction comparison (must stay bit-compatible),
-#   4. a smoke run of the benchmark runner entrypoint (so benchmarks/run.py
+#   1. lint (ruff check, same rule set as the CI lint job; skipped with a
+#      warning when ruff is not installed locally),
+#   2. the tier-1 pytest suite (ROADMAP "Tier-1 verify" command),
+#   3. the quick kernel microbench (Pallas-interpret vs jnp oracles),
+#   4. the packed-vs-per-leaf extraction comparison (must stay bit-compatible),
+#   5. a smoke run of the benchmark runner entrypoint (so benchmarks/run.py
 #      and its imports can't silently rot between full bench runs).
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# lint FIRST (it is the cheapest failure): local runs must not discover lint
+# breakage only when the CI lint job runs ruff
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+elif python -c "import ruff" >/dev/null 2>&1; then
+  python -m ruff check .
+else
+  echo "verify: WARNING ruff not installed — lint runs only in CI" >&2
+fi
 
 python -m pytest -x -q "$@"
 

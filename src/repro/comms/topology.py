@@ -200,6 +200,48 @@ def overhead_from_telemetry(path: str) -> CodecOverhead:
     raise KeyError(f"no manifest with codec_calibration in {path}")
 
 
+def overhead_from_matrix(path: str) -> CodecOverhead:
+    """Calibrate :class:`CodecOverhead` from an experiment-matrix results
+    JSONL (``scripts/run_matrix.py`` output).
+
+    Every completed cell carries its manifest's ``codec_calibration`` block;
+    this aggregates the measured encode/decode throughput across ALL of them
+    (mean MB/s — the sweep's cells share one host, so pooling beats trusting
+    any single tiny-payload timing).  Raises ``FileNotFoundError`` /
+    ``KeyError`` like the other calibrators so a mis-calibrated planner never
+    silently prices overhead at zero — e.g. a sweep that only ran
+    ``codec="off"`` cells has nothing to calibrate from.
+    """
+    enc, dec = [], []
+    n_rows = 0
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                event = json.loads(line)
+            except json.JSONDecodeError:
+                continue            # torn tail, same tolerance as resume
+            if event.get("event") != "cell" or event.get("status") != "ok":
+                continue
+            n_rows += 1
+            cal = event.get("codec_calibration")
+            if cal and cal.get("encode_MBps"):
+                enc.append(float(cal["encode_MBps"]))
+                dec.append(float(cal["decode_MBps"]))
+    if not enc:
+        raise KeyError(
+            f"no completed cell with codec_calibration in {path} "
+            f"({n_rows} ok cells scanned)")
+    mean_enc = sum(enc) / len(enc)
+    mean_dec = sum(dec) / len(dec)
+    return CodecOverhead(
+        encode_s_per_byte=1.0 / (mean_enc * 1e6),
+        decode_s_per_byte=1.0 / (mean_dec * 1e6),
+        source=f"{path}:matrix[{len(enc)} cells]")
+
+
 # ---------------------------------------------------------------------------
 # analytic cost model
 

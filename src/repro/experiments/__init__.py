@@ -1,10 +1,18 @@
-"""Seeded, deterministic paper-claim experiments (convergence parity).
+"""Seeded, deterministic paper-claim experiments.
 
 Unlike ``benchmarks/`` (timing + wire accounting), these runners gate
-optimizer QUALITY: loss trajectories under every replication scheme vs the
-AdamW full-sync reference, serialized to committed baselines under
-``experiments/convergence/`` and enforced by ``scripts/check_convergence.py``.
-"""
-from repro.experiments import convergence
+optimizer QUALITY and scenario COVERAGE:
 
-__all__ = ["convergence"]
+  * ``convergence`` — loss trajectories under every replication scheme vs
+    the AdamW full-sync reference, serialized to committed baselines under
+    ``experiments/convergence/`` and enforced by
+    ``scripts/check_convergence.py``.
+  * ``matrix`` — the declarative experiment-matrix runner: sweep specs over
+    workload x scheme x codec x sync_impl x overlap cells, one subprocess
+    per cell, resumable JSONL results, gated by ``scripts/check_matrix.py``.
+  * ``common`` — the shared telemetry-recorder + planner-prediction join
+    both harnesses attach to every run.
+"""
+from repro.experiments import common, convergence, matrix
+
+__all__ = ["common", "convergence", "matrix"]

@@ -1,0 +1,58 @@
+"""Shared experiment plumbing: the telemetry recorder + planner-prediction
+join used by every harness that trains through the real shard_map step.
+
+Both the convergence-parity harness (``experiments.convergence``) and the
+experiment-matrix runner (``experiments.matrix``) write one telemetry JSONL
+per run whose manifest carries the priced :class:`~repro.comms.planner.
+CommPlan` — priced on the LOCAL momentum shard numels so the drift report's
+wire join is exactly 1.0 — plus the measured codec calibration that
+``topology.overhead_from_telemetry`` / ``overhead_from_matrix`` feed back
+into the planner.  This module is that construction, factored out so the
+two harnesses cannot drift apart on what a run manifest means.
+"""
+from __future__ import annotations
+
+import functools
+
+
+def telemetry_recorder(cfg, mesh, param_specs, out_path, *, flex,
+                       batch: int, seq: int,
+                       topology_name: str = "ethernet-100g",
+                       extra: dict | None = None):
+    """Recorder + manifest for one training run.
+
+    ``flex`` may be None (e.g. an AdamW full-sync reference run): the
+    manifest then carries no ``comm_plan`` / ``codec_calibration`` — there
+    is no replication wire to predict or calibrate.
+    """
+    import jax
+
+    from repro import telemetry
+    from repro.comms import planner as comm_planner
+    from repro.comms.topology import get_topology
+    from repro.launch.mesh import replica_placement
+    from repro.models import transformer
+    from repro.training.state import make_train_plan
+
+    extra = dict(extra or {})
+    if flex is not None:
+        topo = get_topology(topology_name)
+        plan = make_train_plan(cfg, mesh, batch, seq)
+        placement = replica_placement(mesh, plan.repl_axes,
+                                      topo.devices_per_node)
+        params_shapes = jax.eval_shape(
+            functools.partial(transformer.init_model, cfg=cfg),
+            jax.random.PRNGKey(0))
+        shard_numels = comm_planner.local_leaf_numels(
+            params_shapes, param_specs, mesh)
+        extra["comm_plan"] = comm_planner.predict(
+            flex, shard_numels, topo, placement).to_json()
+        extra["codec_calibration"] = telemetry.calibrate_codec(
+            flex, shard_numels)
+    return telemetry.Recorder(
+        sinks=[telemetry.JsonlSink(out_path)],
+        manifest=telemetry.run_manifest(
+            cfg=cfg.name, mesh_shape=mesh.devices.shape,
+            mesh_axes={a: int(n) for a, n in
+                       zip(mesh.axis_names, mesh.devices.shape)},
+            flex=flex, extra=extra))

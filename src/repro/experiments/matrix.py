@@ -1,0 +1,570 @@
+"""Experiment-matrix runner: declarative scenario sweeps with subprocess
+isolation and resumable JSONL results.
+
+The paper's claim is breadth — parity "across language and vision domains"
+under many replication/compression choices — but hand-picked slices (the
+committed convergence settings, the bench rows) exercise only a sliver of
+arch x scheme x codec x sync_impl x overlap space.  This module is the
+scenario-diversity engine (ROADMAP item 4), on the torch_xla
+``experiment_runner.py`` idiom:
+
+  * **Declarative sweep specs** (JSON): named workloads (the same reduced
+    paper-domain problems the convergence harness trains) x axis lists that
+    expand into a cartesian product of cells.
+  * **Subprocess isolation**: each cell runs in its own python process with
+    its own env (``XLA_FLAGS`` fake-device count, ``PYTHONPATH`` — see
+    ``launch.subproc``), because jax pins its device topology at first
+    import: meshes and flags never bleed between cells.
+  * **Compatibility predicate**: forbidden combos (psum x codec, ring x
+    codec=off, fused x non-demo, ...) are skipped BEFORE launch and recorded
+    as explicit ``skipped`` rows with stable reasons — the same rules
+    ``FlexConfig`` enforces, kept in lockstep by a property-style test
+    sweep (tests/test_matrix.py).
+  * **Resumable results**: one JSON line per cell streams into the output
+    file, flushed per cell; a rerun reads the (torn-tail-tolerant) file and
+    re-executes nothing that already completed.  Cells are content-addressed
+    (the id hashes the full normalized cell, workload definition included),
+    so resuming across a spec edit re-runs exactly the cells that changed.
+  * **Calibration loop**: every cell reuses the telemetry manifest /
+    StepRecord machinery, so results carry wire_bytes, step walls, and the
+    priced CommPlan; :func:`calibrate` joins them into a roofline-style
+    predicted-vs-measured report and an aggregated
+    :class:`~repro.comms.topology.CodecOverhead`
+    (``topology.overhead_from_matrix``) for the planner.
+
+Entry points: ``scripts/run_matrix.py`` (CLI: sweep parent + ``--cell``
+child), ``scripts/check_matrix.py`` (the CI matrix-smoke gate),
+:func:`run_sweep` / :func:`run_cell` in-process (tests, benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+import time
+
+SCHEMA = 1
+RESULT_MARKER = "MATRIX_RESULT "
+DEFAULT_TIMEOUT_S = 900.0
+
+SCHEMES = ("demo", "random", "striding", "diloco", "full")
+CODECS = ("auto", "fp32", "bf16", "int8", "off")
+SYNC_IMPLS = ("gather", "psum", "ring", "auto")
+OVERLAP_MODES = ("auto", "on", "off")
+ENCODE_IMPLS = ("auto", "staged", "fused")
+IDX_LAYOUTS = ("local", "flat")
+OPTIMIZERS = ("demo_sgd", "adamw")
+
+# One knob -> one axis.  AXIS_ORDER fixes the cartesian-product enumeration
+# order (and therefore cell order in the output file) regardless of JSON key
+# order in the spec.
+CELL_DEFAULTS = {
+    "workload": None,               # must come from the spec
+    "optimizer": "demo_sgd",
+    "scheme": "demo",
+    "rate": 1 / 8,
+    "chunk_size": 64,
+    "topk": None,
+    "sign": True,
+    "codec": "fp32",
+    "sync_impl": "auto",
+    "idx_layout": "local",
+    "overlap": "auto",
+    "n_buckets": 0,
+    "encode_impl": "auto",
+    "mesh": (2, 4),                 # data x model
+    "devices": 8,                   # fake host devices for the subprocess
+    "steps": 0,                     # 0 = the workload's own step budget
+}
+AXIS_ORDER = tuple(CELL_DEFAULTS)
+
+
+class MatrixError(Exception):
+    """Malformed spec / failed cell launch (message, never a traceback)."""
+
+
+# ---------------------------------------------------------------------------
+# sweep spec
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A parsed sweep: normalized cells in deterministic enumeration order."""
+
+    name: str
+    workloads: dict                 # name -> workload field dict
+    cells: tuple                    # normalized cell dicts, deduped, ordered
+    sha: str                        # content hash of the raw spec JSON
+
+    def by_id(self) -> dict:
+        return {cell_id(c): c for c in self.cells}
+
+
+def _workload_fields() -> set:
+    from repro.experiments import convergence as C
+
+    return {f.name for f in dataclasses.fields(C.Workload)}
+
+
+def load_spec(spec) -> SweepSpec:
+    """Parse a sweep spec (a path to JSON, or the already-loaded dict).
+
+    Schema (see EXPERIMENTS.md §Experiment matrix for the full reference):
+
+      {"name": str,
+       "defaults":  {<axis>: value, ...},          # optional overrides
+       "workloads": {<wname>: {Workload fields}},  # reduced training problems
+       "sweeps":    [{<axis>: [values...]}, ...]}  # each expands to a product
+
+    Every axis must be a :data:`CELL_DEFAULTS` key; every sweep needs a
+    ``workload`` (own or via defaults).  Unknown keys raise — a typo'd axis
+    silently sweeping nothing is how coverage claims rot.
+    """
+    if isinstance(spec, str):
+        try:
+            with open(spec) as f:
+                raw = f.read()
+        except OSError as e:
+            raise MatrixError(f"{spec}: cannot read sweep spec ({e})")
+        try:
+            spec = json.loads(raw)
+        except json.JSONDecodeError as e:
+            raise MatrixError(f"spec is not valid JSON ({e})")
+    else:
+        raw = json.dumps(spec, sort_keys=True)
+    if not isinstance(spec, dict):
+        raise MatrixError("spec must be a JSON object")
+    unknown = set(spec) - {"name", "defaults", "workloads", "sweeps"}
+    if unknown:
+        raise MatrixError(f"unknown top-level spec keys {sorted(unknown)}; "
+                          "have name | defaults | workloads | sweeps")
+    name = spec.get("name") or "sweep"
+    workloads = spec.get("workloads") or {}
+    if not isinstance(workloads, dict) or not workloads:
+        raise MatrixError("spec needs a non-empty 'workloads' object")
+    wl_fields = _workload_fields()
+    for wname, w in workloads.items():
+        bad = set(w) - wl_fields
+        if bad:
+            raise MatrixError(
+                f"workload {wname!r}: unknown fields {sorted(bad)}; "
+                f"Workload has {sorted(wl_fields)}")
+    defaults = dict(CELL_DEFAULTS)
+    for k, v in (spec.get("defaults") or {}).items():
+        if k not in CELL_DEFAULTS:
+            raise MatrixError(f"defaults: unknown axis {k!r}; "
+                              f"axes are {list(AXIS_ORDER)}")
+        if isinstance(v, list) and not v:
+            raise MatrixError(f"defaults.{k}: empty axis list sweeps "
+                              "nothing")
+        defaults[k] = v
+    sweeps = spec.get("sweeps")
+    if not isinstance(sweeps, list) or not sweeps:
+        raise MatrixError("spec needs a non-empty 'sweeps' list")
+    cells, seen = [], set()
+    for i, sweep in enumerate(sweeps):
+        if not isinstance(sweep, dict):
+            raise MatrixError(f"sweeps[{i}] must be an object of axis lists")
+        bad = set(sweep) - set(CELL_DEFAULTS)
+        if bad:
+            raise MatrixError(f"sweeps[{i}]: unknown axes {sorted(bad)}; "
+                              f"axes are {list(AXIS_ORDER)}")
+        axes = []
+        for axis in AXIS_ORDER:
+            vals = sweep.get(axis, [defaults[axis]])
+            if not isinstance(vals, list):
+                vals = [vals]
+            if not vals:
+                raise MatrixError(f"sweeps[{i}].{axis}: empty axis list "
+                                  "sweeps nothing")
+            axes.append(vals)
+        for combo in itertools.product(*axes):
+            cell = dict(zip(AXIS_ORDER, combo))
+            if cell["workload"] is None:
+                raise MatrixError(f"sweeps[{i}]: no 'workload' (in the "
+                                  "sweep or in defaults)")
+            if cell["workload"] not in workloads:
+                raise MatrixError(
+                    f"sweeps[{i}]: workload {cell['workload']!r} not in "
+                    f"spec workloads {sorted(workloads)}")
+            cell = normalize_cell(cell, workloads[cell["workload"]])
+            cid = cell_id(cell)
+            if cid in seen:
+                continue            # overlapping sweeps: first wins
+            seen.add(cid)
+            cells.append(cell)
+    sha = hashlib.sha1(raw.encode()).hexdigest()[:12]
+    return SweepSpec(name=name, workloads=dict(workloads),
+                     cells=tuple(cells), sha=sha)
+
+
+def normalize_cell(cell: dict, workload_cfg: dict) -> dict:
+    """Canonical cell form: every axis present, workload def snapshotted
+    (so the content-addressed id changes when the workload changes), mesh
+    as a list, steps resolved against the workload budget."""
+    out = {k: cell.get(k, CELL_DEFAULTS[k]) for k in AXIS_ORDER}
+    out["mesh"] = [int(x) for x in out["mesh"]]
+    out["devices"] = int(out["devices"])
+    out["steps"] = int(out["steps"]) or int(workload_cfg.get("steps", 0))
+    out["workload_cfg"] = dict(workload_cfg)
+    return out
+
+
+def cell_id(cell: dict) -> str:
+    """Human-scannable slug + content hash; distinct cells never collide."""
+    sig = json.dumps(cell, sort_keys=True, default=str)
+    h = hashlib.sha1(sig.encode()).hexdigest()[:8]
+    slug = f"{cell['workload']}:{cell['scheme']}:{cell['codec']}"
+    for axis in ("sync_impl", "overlap", "encode_impl", "idx_layout",
+                 "optimizer"):
+        if cell.get(axis) != CELL_DEFAULTS[axis]:
+            slug += f":{cell[axis]}"
+    if not cell.get("sign", True):
+        slug += ":nosign"
+    return f"{slug}#{h}"
+
+
+# ---------------------------------------------------------------------------
+# compatibility predicate
+
+
+def compatibility(cell: dict) -> str | None:
+    """Skip reason for a forbidden cell, or None when it may run.
+
+    Mirrors the validation ``FlexConfig`` enforces (psum x codec, ring x
+    codec=off, overlap=on x codec=off, fused x {codec=off, non-demo,
+    flat-idx}) plus the runner-level rules a config object cannot see (mesh
+    vs device budget, vision head).  tests/test_matrix.py sweeps every knob
+    combination and asserts this predicate agrees with ``FlexConfig``
+    construction combo for combo — edit the rules in both places or the
+    sweep fails.  Reasons are stable strings: the matrix-smoke baseline
+    pins them (``scripts/check_matrix.py``).
+    """
+    scheme = cell.get("scheme")
+    if scheme not in SCHEMES:
+        return f"unknown scheme {scheme!r}"
+    opt = cell.get("optimizer", "demo_sgd")
+    if opt not in OPTIMIZERS:
+        return f"unknown optimizer {opt!r}"
+    codec = cell.get("codec", "fp32")
+    if codec not in CODECS:
+        return f"unknown codec {codec!r}"
+    amp = "fp32" if codec == "auto" else codec    # value_bytes default 4
+    sync = cell.get("sync_impl", "auto")
+    if sync not in SYNC_IMPLS:
+        return f"unknown sync_impl {sync!r}"
+    overlap = cell.get("overlap", "auto")
+    if overlap not in OVERLAP_MODES:
+        return f"unknown overlap mode {overlap!r}"
+    encode = cell.get("encode_impl", "auto")
+    if encode not in ENCODE_IMPLS:
+        return f"unknown encode_impl {encode!r}"
+    idx = cell.get("idx_layout", "local")
+    if idx not in IDX_LAYOUTS:
+        return f"unknown idx_layout {idx!r}"
+    if sync == "psum" and amp != "off":
+        return f"psum all-reduces raw values and cannot ride codec={amp}"
+    if sync == "ring" and amp == "off":
+        return "ring streams the encoded buffer; codec=off leaves nothing " \
+               "to forward"
+    if overlap == "on" and amp == "off":
+        return "overlap=on buckets the encoded buffer; codec=off leaves " \
+               "nothing to bucket"
+    if encode == "fused" and amp == "off":
+        return "encode_impl=fused writes the encoded payload; codec=off " \
+               "has no wire payload"
+    if encode == "fused" and scheme != "demo":
+        return f"encode_impl=fused is the DeMo kernel; scheme={scheme} " \
+               "has no packed top-k payload"
+    if encode == "fused" and idx != "local":
+        return "encode_impl=fused emits wire-v2 local indices; " \
+               "idx_layout=flat needs staged"
+    # runner-level rules (no FlexConfig counterpart):
+    mesh = cell.get("mesh", (1, 1))
+    n_mesh = int(mesh[0]) * int(mesh[1])
+    devices = int(cell.get("devices", 0))
+    if devices and n_mesh != devices:
+        return f"mesh {mesh[0]}x{mesh[1]} needs {n_mesh} devices, cell " \
+               f"requests {devices}"
+    wl = cell.get("workload_cfg", {})
+    if wl.get("domain") == "vit" and not wl.get("n_classes"):
+        return "vit workload needs n_classes (the classification head)"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# running one cell (in-process: the --cell subprocess body, tests, benches)
+
+
+def run_cell(cell: dict, telemetry_out: str = "", log=None) -> dict:
+    """Train one cell through the real shard_map step; return the result
+    row body (no status — the caller wraps it).
+
+    Requires jax to already see ``>= mesh[0] * mesh[1]`` devices — the
+    subprocess contract (``launch.subproc.cell_env``) guarantees that for
+    sweep runs; in-process callers (tests, benches) pass 1x1-mesh cells.
+    """
+    import jax
+
+    from repro.experiments import convergence as C
+    from repro.launch.mesh import make_mesh
+
+    log = log or (lambda *_: None)
+    d, m = (int(x) for x in cell["mesh"])
+    if len(jax.devices()) < d * m:
+        raise MatrixError(
+            f"mesh {d}x{m} needs {d * m} devices but jax sees "
+            f"{len(jax.devices())}; launch via scripts/run_matrix.py so the "
+            "cell env pins XLA_FLAGS before the first jax import")
+    wl = C.Workload(**cell["workload_cfg"])
+    if cell["steps"]:
+        wl = dataclasses.replace(wl, steps=int(cell["steps"]))
+    setting = C.Setting(
+        name=cell_id(cell), optimizer=cell["optimizer"],
+        scheme=cell["scheme"], codec=cell["codec"], sign=cell["sign"],
+        rate=float(cell["rate"]), sync_impl=cell["sync_impl"],
+        overlap=cell["overlap"], n_buckets=int(cell["n_buckets"]),
+        encode_impl=cell["encode_impl"], idx_layout=cell["idx_layout"],
+        chunk_size=int(cell["chunk_size"]), topk=cell["topk"])
+    mesh = make_mesh((d, m), ("data", "model"))
+    row = C.run_setting(wl, setting, mesh, log=log,
+                        telemetry_out=telemetry_out)
+    out = {
+        "cell": dict(cell),
+        "workload": cell["workload"],
+        "scheme": cell["scheme"],
+        "codec": cell["codec"],
+        "sync_impl": cell["sync_impl"],
+        "optimizer": cell["optimizer"],
+        "steps": row["steps"],
+        "train_losses": row["train_losses"],
+        "final_train": row["final_train"],
+        "final_val": row["final_val"],
+        "wire_bytes_per_step": row["wire_bytes_per_step"],
+        # wire bytes are static functions of shapes x codec; the smoke gate
+        # compares them exactly on every row carrying this marker
+        "wire_deterministic": True,
+    }
+    if telemetry_out:
+        out.update(_telemetry_summary(telemetry_out))
+    return out
+
+
+def _telemetry_summary(path: str) -> dict:
+    """Step-wall stats + the manifest's priced plan, read back from the
+    cell's own telemetry JSONL (exercising the exact sink format the drift
+    report consumes)."""
+    from repro.telemetry.sinks import read_jsonl
+
+    events = read_jsonl(path)
+    manifest = next((e for e in events if e.get("event") == "manifest"), {})
+    steps = [e for e in events if e.get("event") == "step"]
+    # step 0 carries trace+compile; walls from the warm steps only
+    warm = steps[1:] or steps
+    out = {"telemetry_path": path,
+           "comm_plan": manifest.get("comm_plan"),
+           "codec_calibration": manifest.get("codec_calibration")}
+    if warm:
+        walls = [float(s["wall_s"]) for s in warm]
+        blocks = [float(s["block_s"]) for s in warm]
+        out.update(
+            step_wall_mean_s=sum(walls) / len(walls),
+            step_wall_min_s=min(walls),
+            block_mean_s=sum(blocks) / len(blocks),
+            # the PR 7 exposed-sync estimate: block time above the floor
+            exposed_sync_est_s=sum(blocks) / len(blocks) - min(blocks))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the sweep driver
+
+
+def read_results(path: str) -> list:
+    """All event rows of a results JSONL (torn trailing lines skipped, the
+    same tolerance as ``telemetry.sinks.read_jsonl`` — a killed run's last
+    line re-runs instead of wedging the resume)."""
+    from repro.telemetry.sinks import read_jsonl
+
+    if not os.path.exists(path):
+        return []
+    return read_jsonl(path)
+
+
+def completed_cells(rows: list) -> dict:
+    """cell_id -> row for every terminal row (ok or skipped; error rows
+    re-run on resume — they are records of a failure, not of a result)."""
+    out = {}
+    for r in rows:
+        if r.get("event") == "cell" and r.get("status") in ("ok", "skipped"):
+            out[r["cell_id"]] = r
+    return out
+
+
+def subprocess_launcher(cell: dict, telemetry_out: str = "",
+                        timeout: float = DEFAULT_TIMEOUT_S) -> dict:
+    """Launch one cell as ``scripts/run_matrix.py --cell <json>`` in its own
+    env (the ``launch.subproc`` contract) and parse the marker-prefixed
+    result line.  Raises :class:`MatrixError` with the output tails on any
+    failure — the driver records that as the cell's error row."""
+    from repro.launch import subproc
+
+    script = os.path.join(subproc.REPO_ROOT, "scripts", "run_matrix.py")
+    argv = [script, "--cell", json.dumps(cell)]
+    if telemetry_out:
+        argv += ["--telemetry-out", telemetry_out]
+    env = subproc.cell_env(devices=cell.get("devices", 0))
+    rc, out, err = subproc.run_python(argv, env=env, timeout=timeout)
+    if rc != 0:
+        raise MatrixError(f"cell subprocess exited {rc}:\n"
+                          f"{out[-1500:]}\n{err[-1500:]}")
+    for line in reversed(out.splitlines()):
+        if line.startswith(RESULT_MARKER):
+            return json.loads(line[len(RESULT_MARKER):])
+    raise MatrixError(f"cell subprocess printed no {RESULT_MARKER!r} line:\n"
+                      f"{out[-1500:]}")
+
+
+def run_sweep(spec: SweepSpec, out_path: str, *, resume: bool = True,
+              launcher=None, max_cells: int = 0, telemetry_dir: str = "",
+              timeout: float = DEFAULT_TIMEOUT_S, log=print) -> dict:
+    """Drive every cell of ``spec`` into ``out_path`` (one JSON line each).
+
+    ``resume`` (default) skips cells already terminal in ``out_path`` and
+    APPENDS — completed rows are never rewritten, so a prior partial file
+    stays a byte-identical prefix (the CI resume witness).  ``max_cells``
+    bounds the number of cells LAUNCHED this invocation (skip rows are free
+    and always recorded); the remainder is deferred to the next run and
+    reported, never silently dropped.  ``launcher`` is injectable for tests;
+    the default runs each cell in its own subprocess.
+    """
+    launcher = launcher or (
+        lambda cell, tm: subprocess_launcher(cell, tm, timeout=timeout))
+    existing = read_results(out_path) if resume else []
+    done = completed_cells(existing)
+    d = os.path.dirname(out_path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    if telemetry_dir:
+        os.makedirs(telemetry_dir, exist_ok=True)
+    n = dict(ran=0, ok=0, skipped=0, resumed=0, errors=0, deferred=0)
+    mode = "a" if (resume and existing) else "w"
+    with open(out_path, mode) as f:
+        def emit(row):
+            f.write(json.dumps(row, default=str) + "\n")
+            f.flush()               # crash-tolerant tail, like JsonlSink
+
+        emit({"event": "matrix_manifest", "schema": SCHEMA,
+              "spec_name": spec.name, "spec_sha": spec.sha,
+              "n_cells": len(spec.cells), "resumed_cells": len(done),
+              "created_unix": time.time()})
+        for i, cell in enumerate(spec.cells):
+            cid = cell_id(cell)
+            if cid in done:
+                n["resumed"] += 1
+                continue
+            reason = compatibility(cell)
+            base = {"event": "cell", "schema": SCHEMA, "cell_id": cid,
+                    "spec_name": spec.name}
+            if reason is not None:
+                n["skipped"] += 1
+                log(f"[matrix] skip {i + 1}/{len(spec.cells)} {cid}: "
+                    f"{reason}")
+                emit({**base, "status": "skipped", "skip_reason": reason,
+                      "cell": dict(cell)})
+                continue
+            if max_cells and n["ran"] >= max_cells:
+                n["deferred"] += 1
+                continue
+            n["ran"] += 1
+            log(f"[matrix] run {i + 1}/{len(spec.cells)} {cid} "
+                f"({cell['steps']} steps, mesh "
+                f"{cell['mesh'][0]}x{cell['mesh'][1]}, "
+                f"{cell['devices']} devices)")
+            tm_out = os.path.join(telemetry_dir, f"{_safe(cid)}.jsonl") \
+                if telemetry_dir else ""
+            t0 = time.time()
+            try:
+                body = launcher(cell, tm_out)
+            except Exception as e:  # noqa: BLE001 - one bad cell must not
+                n["errors"] += 1    # kill the sweep; the gate flags the row
+                log(f"[matrix] ERROR {cid}: {e}")
+                emit({**base, "status": "error", "error": str(e),
+                      "cell": dict(cell), "started_unix": t0,
+                      "duration_s": time.time() - t0})
+                continue
+            n["ok"] += 1
+            emit({**base, "status": "ok", "started_unix": t0,
+                  "duration_s": time.time() - t0, **body})
+    log(f"[matrix] {spec.name}: ran {n['ran']} ({n['ok']} ok, "
+        f"{n['errors']} errors), skipped {n['skipped']}, resumed "
+        f"{n['resumed']}, deferred {n['deferred']} of {len(spec.cells)} "
+        f"cells -> {out_path}")
+    return {**n, "n_cells": len(spec.cells), "out_path": out_path}
+
+
+def _safe(cid: str) -> str:
+    return "".join(c if c.isalnum() or c in "-_" else "_" for c in cid)
+
+
+# ---------------------------------------------------------------------------
+# calibration loop: measured cells -> planner overhead + roofline report
+
+
+def calibrate(results_path: str) -> dict:
+    """Predicted-vs-measured report over a sweep's completed cells.
+
+    Per ok cell: the manifest's priced CommPlan (serialized / ring-pipelined
+    / bucket-overlapped seconds) joined against the measured warm step walls
+    — the roofline view of where each cell's step time goes.  Aggregated:
+    the mean measured codec throughput as a
+    :class:`~repro.comms.topology.CodecOverhead`
+    (``topology.overhead_from_matrix``) ready for ``planner.predict`` /
+    ``solve``.  Time ratios are diagnostics (fake-device walls vs modeled
+    cluster seconds), required finite only — the exact contract is the wire
+    join, same as ``scripts/report_drift.py``.
+    """
+    from repro.comms.topology import overhead_from_matrix
+
+    rows = [r for r in read_results(results_path)
+            if r.get("event") == "cell" and r.get("status") == "ok"]
+    if not rows:
+        raise MatrixError(f"{results_path}: no completed cells to calibrate "
+                          "from; run the sweep first")
+    cells = []
+    for r in rows:
+        plan = r.get("comm_plan") or {}
+        wall = r.get("step_wall_mean_s")
+        entry = {
+            "cell_id": r.get("cell_id"),
+            "wire_bytes_per_step": r.get("wire_bytes_per_step"),
+            "wire_ratio": None,
+            "comm_seconds": plan.get("comm_seconds"),
+            "comm_seconds_pipelined": plan.get("comm_seconds_pipelined"),
+            "comm_seconds_overlapped": plan.get("comm_seconds_overlapped"),
+            "step_wall_mean_s": wall,
+            "block_mean_s": r.get("block_mean_s"),
+            "exposed_sync_est_s": r.get("exposed_sync_est_s"),
+        }
+        pred = plan.get("wire_bytes_per_step")
+        meas = r.get("wire_bytes_per_step")
+        if isinstance(pred, (int, float)) and isinstance(meas, (int, float)) \
+                and pred > 0:
+            entry["wire_ratio"] = meas / pred
+        if isinstance(wall, (int, float)) and wall > 0 and \
+                isinstance(plan.get("comm_seconds"), (int, float)):
+            # modeled comm share of the measured step: > 1 means the modeled
+            # cluster would be comm-bound at this cell's measured compute
+            entry["comm_fraction_of_wall"] = plan["comm_seconds"] / wall
+        cells.append(entry)
+    try:
+        ov = overhead_from_matrix(results_path)
+        overhead = {"encode_s_per_byte": ov.encode_s_per_byte,
+                    "decode_s_per_byte": ov.decode_s_per_byte,
+                    "source": ov.source}
+    except KeyError:
+        overhead = None             # e.g. a codec="off"-only sweep
+    return {"results": results_path, "n_cells": len(cells),
+            "codec_overhead": overhead, "cells": cells}

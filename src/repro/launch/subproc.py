@@ -1,0 +1,78 @@
+"""Subprocess environment contract for isolated jax runs.
+
+jax fixes its device topology at first import: the fake-CPU-device count
+(``--xla_force_host_platform_device_count``) is an ``XLA_FLAGS`` value that
+must be set BEFORE the process imports jax, and two runs wanting different
+counts can never share one process.  Everything in the repo that launches an
+isolated jax run — the experiment-matrix runner (one subprocess per cell so
+meshes and flags never bleed between cells), the multi-device benches, the
+dist tests — needs the same three-line contract:
+
+  * ``XLA_FLAGS`` with the requested fake-device count (REPLACING any count
+    the parent already carries: the parent's topology must not leak),
+  * ``PYTHONPATH`` carrying ``src`` and the repo root,
+  * the parent's remaining environment (``JAX_PLATFORMS=cpu`` etc.) intact.
+
+This module is that contract, stdlib-only and importable before jax.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def set_host_device_count(flags: str, devices: int) -> str:
+    """``XLA_FLAGS`` with the fake-device count pinned to ``devices``.
+
+    Any existing ``--xla_force_host_platform_device_count=N`` is REPLACED
+    (not appended after): XLA takes the last occurrence, but a cell env that
+    silently depends on flag ordering is exactly the bleed this contract
+    exists to prevent.  ``devices <= 0`` strips the flag entirely (the run
+    takes the platform's real device count).
+    """
+    flags = re.sub(rf"{_DEVICE_FLAG}=\d+\s*", "", flags or "").strip()
+    if devices > 0:
+        flags = f"{flags} {_DEVICE_FLAG}={devices}".strip()
+    return flags
+
+
+def cell_env(devices: int = 0, repo_root: str = REPO_ROOT,
+             extra: dict | None = None) -> dict:
+    """A copy of ``os.environ`` fulfilling the isolated-run contract."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = set_host_device_count(env.get("XLA_FLAGS", ""),
+                                             devices)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo_root, "src"), repo_root,
+                    env.get("PYTHONPATH", "")) if p)
+    if extra:
+        env.update({k: str(v) for k, v in extra.items()})
+    return env
+
+
+def run_python(argv: list, env: dict, timeout: float = 900.0,
+               cwd: str = REPO_ROOT):
+    """Run ``python argv...`` under ``env``; returns (rc, stdout, stderr).
+
+    A timeout is reported as rc 124 (the coreutils convention) with the
+    captured output so far in stderr — callers record it as an error row
+    instead of hanging the whole sweep on one wedged cell.
+    """
+    try:
+        proc = subprocess.run([sys.executable] + list(argv),
+                              capture_output=True, text=True, env=env,
+                              cwd=cwd, timeout=timeout)
+    except subprocess.TimeoutExpired as e:
+        out = e.stdout.decode() if isinstance(e.stdout, bytes) else \
+            (e.stdout or "")
+        err = e.stderr.decode() if isinstance(e.stderr, bytes) else \
+            (e.stderr or "")
+        return 124, out, f"timeout after {timeout:g}s\n{err}"
+    return proc.returncode, proc.stdout, proc.stderr

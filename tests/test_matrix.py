@@ -1,0 +1,552 @@
+"""Experiment-matrix runner: spec parsing, the compatibility predicate
+(property-style agreement with FlexConfig validation on every combo), the
+resumable results protocol (completed cells skipped, torn tails re-run), the
+subprocess env contract, and the scripts/check_matrix.py gate."""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                       "check_matrix.py")
+_spec = importlib.util.spec_from_file_location("check_matrix", _SCRIPT)
+check_matrix = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_matrix)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+SMOKE_SPEC = os.path.join(REPO, "experiments", "matrix", "smoke.json")
+SMOKE_BASELINE = os.path.join(REPO, "experiments", "matrix",
+                              "smoke_baseline.json")
+
+
+def _tiny_spec(extra_sweeps=()):
+    return {
+        "name": "tiny",
+        "defaults": {"workload": "lm", "mesh": [2, 4], "devices": 8},
+        "workloads": {
+            "lm": {"domain": "lm", "arch": "qwen2.5-3b", "n_layers": 1,
+                   "d_model": 32, "vocab": 32, "batch": 2, "seq": 8,
+                   "steps": 2, "eval_every": 2, "eval_batches": 1,
+                   "lr": 0.02, "seed": 0},
+        },
+        "sweeps": [{"scheme": ["demo", "random"]}, *extra_sweeps],
+    }
+
+
+# ---------------------------------------------------------------------------
+# sweep-spec parsing + cell identity
+
+
+def test_load_spec_enumerates_in_canonical_order():
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec())
+    assert spec.name == "tiny"
+    assert [c["scheme"] for c in spec.cells] == ["demo", "random"]
+    for c in spec.cells:
+        assert set(matrix.AXIS_ORDER) <= set(c)
+        assert c["workload_cfg"]["arch"] == "qwen2.5-3b"
+        assert c["steps"] == 2          # resolved from the workload budget
+    # overlapping sweeps dedup: first occurrence wins
+    spec2 = matrix.load_spec(_tiny_spec([{"scheme": ["demo"]}]))
+    assert len(spec2.cells) == 2
+
+
+def test_load_spec_rejects_malformed():
+    from repro.experiments import matrix
+
+    bad = _tiny_spec()
+    bad["typo"] = 1
+    with pytest.raises(matrix.MatrixError, match="unknown top-level"):
+        matrix.load_spec(bad)
+    bad = _tiny_spec()
+    bad["sweeps"] = [{"schemez": ["demo"]}]
+    with pytest.raises(matrix.MatrixError, match="unknown axes"):
+        matrix.load_spec(bad)
+    bad = _tiny_spec()
+    bad["workloads"]["lm"]["d_modle"] = 32
+    with pytest.raises(matrix.MatrixError, match="unknown fields"):
+        matrix.load_spec(bad)
+    bad = _tiny_spec()
+    bad["sweeps"] = [{"workload": ["nope"]}]
+    with pytest.raises(matrix.MatrixError, match="not in spec workloads"):
+        matrix.load_spec(bad)
+    bad = _tiny_spec()
+    del bad["defaults"]["workload"]
+    with pytest.raises(matrix.MatrixError, match="no 'workload'"):
+        matrix.load_spec(bad)
+    bad = _tiny_spec()
+    bad["defaults"]["codec"] = []
+    with pytest.raises(matrix.MatrixError, match="empty axis"):
+        matrix.load_spec(bad)
+
+
+def test_cell_id_content_addressed():
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec())
+    cell = spec.cells[0]
+    cid = matrix.cell_id(cell)
+    assert cid.startswith("lm:demo:fp32#")
+    # key order does not matter; content does
+    shuffled = dict(reversed(list(cell.items())))
+    assert matrix.cell_id(shuffled) == cid
+    changed = copy.deepcopy(cell)
+    changed["workload_cfg"]["d_model"] = 64
+    assert matrix.cell_id(changed) != cid       # workload edit -> new cell
+    tweaked = dict(cell, sync_impl="ring")
+    assert matrix.cell_id(tweaked) != cid
+    assert "ring" in matrix.cell_id(tweaked)    # non-default knob in slug
+
+
+# ---------------------------------------------------------------------------
+# compatibility predicate vs FlexConfig (the property sweep)
+
+
+def _combo_cell(**axes):
+    from repro.experiments import matrix
+
+    cell = {k: v for k, v in matrix.CELL_DEFAULTS.items()}
+    cell.update(mesh=[1, 1], devices=1, steps=1, workload="lm",
+                workload_cfg={"domain": "lm"})
+    cell.update(axes)
+    return cell
+
+
+def test_compatibility_agrees_with_flexconfig_everywhere():
+    """Property sweep: over EVERY (scheme x codec x sync x overlap x encode
+    x idx_layout) combo, the predicate skips exactly the combos FlexConfig
+    refuses to construct.  This is the lockstep contract: edit the rules in
+    one place only and this fails on the drifted combo."""
+    import itertools
+
+    from repro.core import FlexConfig
+    from repro.experiments import matrix
+
+    n_skip = 0
+    for scheme, codec, sync, overlap, encode, idx in itertools.product(
+            matrix.SCHEMES, matrix.CODECS, matrix.SYNC_IMPLS,
+            matrix.OVERLAP_MODES, matrix.ENCODE_IMPLS, matrix.IDX_LAYOUTS):
+        cell = _combo_cell(scheme=scheme, codec=codec, sync_impl=sync,
+                           overlap=overlap, encode_impl=encode,
+                           idx_layout=idx)
+        reason = matrix.compatibility(cell)
+        try:
+            FlexConfig(scheme=scheme, codec=codec, sync_impl=sync,
+                       overlap=overlap, encode_impl=encode, idx_layout=idx)
+            raises = False
+        except ValueError:
+            raises = True
+        combo = (scheme, codec, sync, overlap, encode, idx)
+        assert (reason is not None) == raises, (
+            f"predicate and FlexConfig disagree on {combo}: "
+            f"reason={reason!r} raises={raises}")
+        n_skip += reason is not None
+    assert n_skip > 0               # the sweep actually exercised skips
+
+
+def test_compatibility_runner_level_rules():
+    from repro.experiments import matrix
+
+    assert matrix.compatibility(_combo_cell()) is None
+    assert "unknown scheme" in matrix.compatibility(
+        _combo_cell(scheme="nope"))
+    assert "unknown optimizer" in matrix.compatibility(
+        _combo_cell(optimizer="sgd"))
+    r = matrix.compatibility(_combo_cell(mesh=[2, 4], devices=4))
+    assert "needs 8 devices" in r
+    r = matrix.compatibility(_combo_cell(workload_cfg={"domain": "vit"}))
+    assert "n_classes" in r
+    assert matrix.compatibility(
+        _combo_cell(workload_cfg={"domain": "vit", "n_classes": 8})) is None
+
+
+def test_committed_smoke_spec_shape():
+    """The committed smoke sweep must keep its coverage promise: LM + ViT,
+    all 5 schemes, and at least one explicitly skipped cell per forbidden-
+    combo family."""
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(SMOKE_SPEC)
+    assert 8 <= len(spec.cells) <= 16
+    domains = {c["workload_cfg"]["domain"] for c in spec.cells}
+    assert domains == {"lm", "vit"}
+    runnable = [c for c in spec.cells if matrix.compatibility(c) is None]
+    assert {c["scheme"] for c in runnable} == set(matrix.SCHEMES)
+    reasons = [matrix.compatibility(c) for c in spec.cells
+               if matrix.compatibility(c) is not None]
+    assert len(reasons) >= 3
+    assert len(set(reasons)) == len(reasons)    # distinct rule families
+
+
+# ---------------------------------------------------------------------------
+# resumable sweep protocol (stub launcher — no subprocesses, no jax mesh)
+
+
+def _fake_body(cell, tm):
+    return {"cell": dict(cell), "workload": cell["workload"],
+            "scheme": cell["scheme"], "codec": cell["codec"],
+            "wire_bytes_per_step": 1000.0, "wire_deterministic": True,
+            "final_train": 1.0, "final_val": 1.0, "steps": cell["steps"],
+            "train_losses": [1.0]}
+
+
+def _counting_launcher(calls):
+    def launch(cell, tm):
+        calls.append(cell["scheme"])
+        return _fake_body(cell, tm)
+    return launch
+
+
+def test_run_sweep_resume_skips_completed(tmp_path):
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec([{"sync_impl": ["psum"]}]))
+    out = str(tmp_path / "r.jsonl")
+    calls = []
+    s1 = matrix.run_sweep(spec, out, launcher=_counting_launcher(calls),
+                          log=lambda *_: None)
+    assert (s1["ran"], s1["skipped"], s1["errors"]) == (2, 1, 0)
+    assert calls == ["demo", "random"]
+    first = open(out).read()
+    calls.clear()
+    s2 = matrix.run_sweep(spec, out, launcher=_counting_launcher(calls),
+                          log=lambda *_: None)
+    assert calls == []                          # ZERO re-execution
+    assert (s2["ran"], s2["resumed"]) == (0, 3)  # skip rows resume too
+    # completed rows are never rewritten: the first run is a byte prefix
+    assert open(out).read().startswith(first)
+
+
+def test_run_sweep_torn_tail_reruns_only_torn_cell(tmp_path):
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec())
+    out = str(tmp_path / "r.jsonl")
+    matrix.run_sweep(spec, out, launcher=_counting_launcher([]),
+                     log=lambda *_: None)
+    lines = open(out).read().splitlines(keepends=True)
+    with open(out, "w") as f:                   # tear the last row mid-line
+        f.writelines(lines[:-1])
+        f.write(lines[-1][: len(lines[-1]) // 2])
+    calls = []
+    matrix.run_sweep(spec, out, launcher=_counting_launcher(calls),
+                     log=lambda *_: None)
+    assert calls == ["random"]                  # torn cell re-ran, demo not
+    rows = matrix.completed_cells(matrix.read_results(out))
+    assert len(rows) == 2
+
+
+def test_run_sweep_error_rows_recorded_and_rerun(tmp_path):
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec())
+    out = str(tmp_path / "r.jsonl")
+
+    def flaky(cell, tm):
+        if cell["scheme"] == "random":
+            raise matrix.MatrixError("boom")
+        return _fake_body(cell, tm)
+
+    s1 = matrix.run_sweep(spec, out, launcher=flaky, log=lambda *_: None)
+    assert (s1["ok"], s1["errors"]) == (1, 1)
+    err = [r for r in matrix.read_results(out) if r.get("status") == "error"]
+    assert len(err) == 1 and "boom" in err[0]["error"]
+    calls = []
+    s2 = matrix.run_sweep(spec, out, launcher=_counting_launcher(calls),
+                          log=lambda *_: None)
+    assert calls == ["random"]                  # only the failed cell
+    assert (s2["ok"], s2["resumed"]) == (1, 1)
+
+
+def test_run_sweep_max_cells_defers(tmp_path):
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec([{"sync_impl": ["psum"]}]))
+    out = str(tmp_path / "r.jsonl")
+    s1 = matrix.run_sweep(spec, out, launcher=_counting_launcher([]),
+                          max_cells=1, log=lambda *_: None)
+    # skips are free and always recorded; only launches count vs the budget
+    assert (s1["ran"], s1["deferred"], s1["skipped"]) == (1, 1, 1)
+    s2 = matrix.run_sweep(spec, out, launcher=_counting_launcher([]),
+                          log=lambda *_: None)
+    assert (s2["ran"], s2["resumed"]) == (1, 2)
+
+
+def test_run_sweep_no_resume_truncates(tmp_path):
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec())
+    out = str(tmp_path / "r.jsonl")
+    matrix.run_sweep(spec, out, launcher=_counting_launcher([]),
+                     log=lambda *_: None)
+    calls = []
+    matrix.run_sweep(spec, out, resume=False,
+                     launcher=_counting_launcher(calls), log=lambda *_: None)
+    assert calls == ["demo", "random"]          # everything re-ran
+    manifests = [r for r in matrix.read_results(out)
+                 if r.get("event") == "matrix_manifest"]
+    assert len(manifests) == 1                  # the file was truncated
+
+
+# ---------------------------------------------------------------------------
+# the in-process cell body (1x1 mesh: real shard_map step, single device)
+
+
+def test_run_cell_trains_and_reports_telemetry(tmp_path):
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec())
+    cell = dict(spec.cells[0], mesh=[1, 1], devices=1)
+    tm = str(tmp_path / "cell.jsonl")
+    body = matrix.run_cell(cell, telemetry_out=tm)
+    assert body["scheme"] == "demo" and body["wire_deterministic"]
+    assert len(body["train_losses"]) == 2
+    assert body["wire_bytes_per_step"] >= 0
+    assert body["comm_plan"]["wire_bytes_per_step"] >= 0
+    assert body["codec_calibration"]["encode_MBps"] > 0
+    assert body["step_wall_mean_s"] > 0
+    assert os.path.exists(tm)
+
+
+def test_run_cell_refuses_oversized_mesh():
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(_tiny_spec())
+    with pytest.raises(matrix.MatrixError, match="XLA_FLAGS"):
+        matrix.run_cell(dict(spec.cells[0], mesh=[4, 4], devices=16))
+
+
+# ---------------------------------------------------------------------------
+# calibration loop: overhead_from_matrix + the roofline report
+
+
+def _results_file(tmp_path, rows):
+    p = str(tmp_path / "res.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps({"event": "matrix_manifest", "n_cells":
+                            len(rows)}) + "\n")
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    return p
+
+
+def _ok_row(cid, wire=1000.0, cal=True, **extra):
+    row = {"event": "cell", "cell_id": cid, "status": "ok",
+           "wire_bytes_per_step": wire, "wire_deterministic": True,
+           "workload": "lm", "scheme": "demo", "codec": "fp32",
+           "step_wall_mean_s": 0.01, "block_mean_s": 0.002,
+           "exposed_sync_est_s": 0.001,
+           "comm_plan": {"wire_bytes_per_step": wire, "comm_seconds": 0.02,
+                         "comm_seconds_pipelined": 0.015,
+                         "comm_seconds_overlapped": 0.012}}
+    if cal:
+        row["codec_calibration"] = {"amp": "fp32", "encode_MBps": 100.0,
+                                    "decode_MBps": 200.0}
+    row.update(extra)
+    return row
+
+
+def test_overhead_from_matrix_aggregates(tmp_path):
+    from repro.comms.topology import overhead_from_matrix
+
+    p = _results_file(tmp_path, [
+        _ok_row("a#1", cal=True),
+        _ok_row("b#2", cal=True,
+                codec_calibration={"amp": "fp32", "encode_MBps": 300.0,
+                                   "decode_MBps": 600.0}),
+        _ok_row("c#3", cal=False),              # codec=off cell: no block
+        {"event": "cell", "cell_id": "d#4", "status": "skipped",
+         "skip_reason": "x"},
+    ])
+    with open(p, "a") as f:
+        f.write('{"torn')                       # tolerated, like resume
+    ov = overhead_from_matrix(p)
+    # mean of (100, 300) MB/s encode, (200, 600) MB/s decode
+    assert ov.encode_s_per_byte == pytest.approx(1.0 / 200e6)
+    assert ov.decode_s_per_byte == pytest.approx(1.0 / 400e6)
+    assert "2 cells" in ov.source
+
+
+def test_overhead_from_matrix_raises_without_calibration(tmp_path):
+    from repro.comms.topology import overhead_from_matrix
+
+    p = _results_file(tmp_path, [_ok_row("a#1", cal=False)])
+    with pytest.raises(KeyError):
+        overhead_from_matrix(p)
+    with pytest.raises(FileNotFoundError):
+        overhead_from_matrix(str(tmp_path / "missing.jsonl"))
+
+
+def test_calibrate_report_joins_predicted_and_measured(tmp_path):
+    from repro.experiments import matrix
+
+    p = _results_file(tmp_path, [_ok_row("a#1")])
+    rep = matrix.calibrate(p)
+    assert rep["n_cells"] == 1
+    cell = rep["cells"][0]
+    assert cell["wire_ratio"] == pytest.approx(1.0)   # exact wire join
+    assert cell["comm_fraction_of_wall"] == pytest.approx(2.0)
+    assert rep["codec_overhead"]["encode_s_per_byte"] > 0
+    with pytest.raises(matrix.MatrixError, match="no completed cells"):
+        matrix.calibrate(_results_file(tmp_path, []))
+
+
+# ---------------------------------------------------------------------------
+# subprocess env contract
+
+
+def test_set_host_device_count_replaces_not_appends():
+    from repro.launch import subproc
+
+    flags = subproc.set_host_device_count("", 8)
+    assert flags == "--xla_force_host_platform_device_count=8"
+    # an existing count is REPLACED (parent topology must not leak)
+    flags = subproc.set_host_device_count(
+        "--foo=1 --xla_force_host_platform_device_count=2 --bar=2", 4)
+    assert flags.count("device_count") == 1
+    assert "device_count=4" in flags and "--foo=1" in flags
+    # devices <= 0 strips the flag entirely
+    assert "device_count" not in subproc.set_host_device_count(flags, 0)
+
+
+def test_cell_env_pins_pythonpath_and_flags():
+    from repro.launch import subproc
+
+    env = subproc.cell_env(devices=4, extra={"MARK": 1})
+    assert "--xla_force_host_platform_device_count=4" in env["XLA_FLAGS"]
+    parts = env["PYTHONPATH"].split(os.pathsep)
+    assert parts[0].endswith(os.path.join("repo", "src"))
+    assert env["MARK"] == "1"
+
+
+def test_run_python_captures_and_times_out():
+    from repro.launch import subproc
+
+    rc, out, err = subproc.run_python(
+        ["-c", "print('hi')"], env=dict(os.environ))
+    assert (rc, out.strip()) == (0, "hi")
+    rc, _, err = subproc.run_python(
+        ["-c", "import time; time.sleep(30)"], env=dict(os.environ),
+        timeout=0.5)
+    assert rc == 124 and "timeout" in err
+
+
+# ---------------------------------------------------------------------------
+# scripts/check_matrix.py gate
+
+
+def _gate(tmp_path, rows, baseline_cells=None, update=False):
+    res = _results_file(tmp_path, rows)
+    bpath = str(tmp_path / "baseline.json")
+    if baseline_cells is not None:
+        with open(bpath, "w") as f:
+            json.dump({"schema": 1, "cells": baseline_cells}, f)
+    argv = [res, "--baseline", bpath] + (["--update"] if update else [])
+    return check_matrix.main(argv), bpath
+
+
+def _bcell(cid, status="ok", wire=1000.0, reason=None):
+    c = {"cell_id": cid, "status": status, "wire_deterministic": True,
+         "wire_bytes_per_step": wire}
+    if reason:
+        c.update(status="skipped", skip_reason=reason)
+        del c["wire_bytes_per_step"], c["wire_deterministic"]
+    return c
+
+
+def test_check_matrix_passes_on_match(tmp_path, capsys):
+    rows = [_ok_row("a#1"), {"event": "cell", "cell_id": "b#2",
+                             "status": "skipped", "skip_reason": "why"}]
+    rc, _ = _gate(tmp_path, rows,
+                  [_bcell("a#1"), _bcell("b#2", reason="why")])
+    assert rc == 0
+    assert "matrix gate: OK" in capsys.readouterr().out
+
+
+def test_check_matrix_fails_on_error_row(tmp_path, capsys):
+    rows = [_ok_row("a#1"),
+            {"event": "cell", "cell_id": "b#2", "status": "error",
+             "error": "exploded"}]
+    rc, _ = _gate(tmp_path, rows, [_bcell("a#1"), _bcell("b#2")])
+    assert rc == 1
+    assert "exploded" in capsys.readouterr().out
+
+
+def test_check_matrix_fails_on_wire_drift(tmp_path, capsys):
+    rc, _ = _gate(tmp_path, [_ok_row("a#1", wire=999.0)],
+                  [_bcell("a#1", wire=1000.0)])
+    assert rc == 1
+    assert "wire_bytes_per_step" in capsys.readouterr().out
+
+
+def test_check_matrix_fails_on_skip_reason_drift(tmp_path, capsys):
+    rows = [{"event": "cell", "cell_id": "a#1", "status": "skipped",
+             "skip_reason": "new reason"}]
+    rc, _ = _gate(tmp_path, rows, [_bcell("a#1", reason="old reason")])
+    assert rc == 1
+    assert "skip reason drifted" in capsys.readouterr().out
+
+
+def test_check_matrix_fails_on_missing_and_extra_cells(tmp_path, capsys):
+    rc, _ = _gate(tmp_path, [_ok_row("extra#9")], [_bcell("gone#1")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "missing from results" in out
+    assert "not in the committed baseline" in out
+
+
+def test_check_matrix_last_terminal_row_wins(tmp_path):
+    # a resumed file: old error row followed by the successful re-run
+    rows = [{"event": "cell", "cell_id": "a#1", "status": "error",
+             "error": "flake"},
+            _ok_row("a#1")]
+    rc, _ = _gate(tmp_path, rows, [_bcell("a#1")])
+    assert rc == 0
+    # and a late stale error never shadows an earlier success
+    rc, _ = _gate(tmp_path, list(reversed(rows)), [_bcell("a#1")])
+    assert rc == 0
+
+
+def test_check_matrix_update_writes_baseline(tmp_path, capsys):
+    rows = [_ok_row("a#1"), {"event": "cell", "cell_id": "b#2",
+                             "status": "skipped", "skip_reason": "why"}]
+    rc, bpath = _gate(tmp_path, rows, update=True)
+    assert rc == 0
+    cells = json.load(open(bpath))["cells"]
+    assert [c["cell_id"] for c in cells] == ["a#1", "b#2"]
+    assert cells[0]["wire_bytes_per_step"] == 1000.0
+    # refreshing from a run with error rows is refused (exit 2)
+    rows.append({"event": "cell", "cell_id": "c#3", "status": "error",
+                 "error": "x"})
+    rc, _ = _gate(tmp_path, rows, update=True)
+    assert rc == 2
+
+
+def test_check_matrix_rejects_non_matrix_file(tmp_path):
+    p = str(tmp_path / "junk.jsonl")
+    with open(p, "w") as f:
+        f.write('{"event": "other"}\n')
+    assert check_matrix.main([p, "--baseline", p]) == 2
+
+
+def test_committed_smoke_baseline_is_consistent():
+    """The committed baseline must describe the committed spec: same cell
+    ids, every runnable cell ok, every forbidden cell skipped with the
+    predicate's CURRENT reason."""
+    from repro.experiments import matrix
+
+    spec = matrix.load_spec(SMOKE_SPEC)
+    with open(SMOKE_BASELINE) as f:
+        cells = {c["cell_id"]: c for c in json.load(f)["cells"]}
+    assert set(cells) == set(spec.by_id())
+    for cid, cell in spec.by_id().items():
+        reason = matrix.compatibility(cell)
+        if reason is None:
+            assert cells[cid]["status"] == "ok", cid
+            assert cells[cid]["wire_bytes_per_step"] > 0, cid
+        else:
+            assert cells[cid]["status"] == "skipped", cid
+            assert cells[cid]["skip_reason"] == reason, cid
