@@ -140,6 +140,7 @@ def run():
     })
 
     rows.extend(_ring_vs_gather_rows(tree, numels, n))
+    rows.extend(_gossip_rows(tree, numels, n))
     rows.extend(_decode_variants(k, n))
     return rows
 
@@ -248,6 +249,74 @@ def _ring_vs_gather_rows(tree, numels, n):
         # the tentpole's memory claim, on MEASURED per-replica live bytes:
         # the streaming ring never materializes the (|R|, B) gathered stack.
         assert peak["ring"] < peak["gather"], (scheme, peak)
+    return rows
+
+
+def _gossip_rows(tree, numels, n):
+    """Partial-participation gossip transport at |R| = 8.
+
+    Two invariants the rows witness (and assert):
+
+      * ``participation=1.0`` selects every hop, and ``jnp.where`` with an
+        all-True gate returns the fold branch's exact bits — the gossip
+        transport is BITWISE identical to ``sync_impl="ring"`` at p=1.0;
+      * gossip gates FOLDING, never transfer: every replica still ships its
+        full encoded buffer each step, so the measured wire bytes equal the
+        CommPlan prediction exactly at ANY p (``wire_ratio`` is 1.0, the
+        planner's partial-participation pricing contract).
+    """
+    import numpy as np
+
+    step = jnp.asarray(0)
+    rng = np.random.RandomState(11)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(rng.randn(RING_R, *x.shape).astype(np.float32)),
+        tree)
+    k = compression.rate_to_topk(RATE, CHUNK)
+    flex_kw = dict(scheme="demo", chunk_size=CHUNK, topk=k,
+                   extract_impl="packed")
+
+    def run_impl(flex):
+        rep = flex.make()
+
+        def g(mm):
+            q, _, _ = communicate_tree(rep, mm, step=step,
+                                       axes=("r",), sign=True)
+            return q
+
+        jf = jax.jit(lambda m: jax.vmap(g, axis_name="r")(m))
+        return jf, _time(jf, stacked, n=n), _wire_live_stats(g, tree)
+
+    ring_f, _, _ = run_impl(FlexConfig(sync_impl="ring", **flex_kw))
+    ring_q = jax.device_get(ring_f(stacked))
+
+    rows = []
+    for p in (1.0, 0.5):
+        flex = FlexConfig(sync_impl="gossip", participation=p, **flex_kw)
+        jf, wall, (_, prims) = run_impl(flex)
+        # gossip is ppermute hops like the ring: no gathered collective
+        assert "ppermute" in prims and "all_gather" not in prims, \
+            (p, sorted(prims))
+        if p == 1.0:
+            got = jax.device_get(jf(stacked))
+            for a, b in zip(jax.tree_util.tree_leaves(got),
+                            jax.tree_util.tree_leaves(ring_q)):
+                assert a.tobytes() == b.tobytes(), \
+                    "gossip p=1.0 must be bitwise identical to ring"
+        wire = planner.scheme_wire_bytes(flex, numels)
+        plan = planner.predict(flex, numels, "ethernet-100g", RING_R)
+        assert plan.wire_bytes == wire, (plan.wire_bytes, wire)
+        rows.append({
+            "scheme": f"demo:gossip:p{p:g}:R{RING_R}",
+            "sync_impl": "gossip",
+            "participation": p,
+            "n_rep": RING_R,
+            "wire_bytes_actual": wire,
+            "wire_bytes_modeled": plan.wire_bytes,
+            "wire_ratio": wire / plan.wire_bytes,
+            "step_us": wall * 1e6,
+            "comm_seconds_pipelined": plan.comm_seconds_pipelined,
+        })
     return rows
 
 

@@ -171,6 +171,18 @@ def compare_domain(domain: str, cur: dict, base: dict, exact_tol: float,
                 f"{crow.get('wire_bytes_per_step')} (exact check)")
         if brow.get("deterministic"):
             _check_trajectory(tag, crow, brow, exact_tol, failures)
+        if brow.get("faults"):
+            # a fault row that ran the pristine transport (zero degraded
+            # hops) silently stopped testing anything — gate the counter
+            counter = ("fault_hops_dropped"
+                       if brow.get("on_straggler") == "skip"
+                       else "fault_hops_stale")
+            cv = crow.get(counter)
+            if not isinstance(cv, (int, float)) or not cv > 0:
+                failures.append(
+                    f"{tag}.{counter}: expected > 0 for a fault-injected "
+                    f"row, got {cv!r} — the degraded transport never "
+                    "engaged")
         if full_length:
             for field in ("final_train", "final_val",
                           "final_val_ratio_vs_ref"):

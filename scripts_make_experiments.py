@@ -384,7 +384,8 @@ def matrix_section():
         "",
         "Axes (= `matrix.CELL_DEFAULTS`): workload, optimizer, scheme, "
         "rate, chunk_size, topk, sign, codec, sync_impl, idx_layout, "
-        "overlap, n_buckets, encode_impl, mesh, devices, steps. Each sweep "
+        "overlap, n_buckets, encode_impl, participation, on_straggler, "
+        "faults, mesh, devices, steps. Each sweep "
         "entry expands to the cartesian product of its axis lists (absent "
         "axes take defaults); unknown axes/fields raise. Cells are "
         "content-addressed (`cell_id` hashes the full normalized cell, "
@@ -418,6 +419,57 @@ def matrix_section():
         "reasons, and exact wire bytes against this baseline.",
     ]
     return "\n".join(lines)
+
+
+def faults_section():
+    """Fault-tolerant elastic replication (ROADMAP item 2): the FaultPlan
+    schema, the degrade policies, and the fault-injected convergence gate."""
+    return "\n".join([
+        "## §Fault plans — failure injection, degraded sync, partial "
+        "participation (comms/faults.py)",
+        "",
+        "A `FaultPlan` is deterministic seeded DATA threaded into the ring "
+        "transport as traced values — never host branching — so the same "
+        "plan reproduces the same degraded trajectory bit-for-bit. The "
+        "`faults` matrix axis and `--fault-plan` launcher flag take the "
+        "JSON form:",
+        "",
+        "```json",
+        "{\"events\": [",
+        "   {\"kind\": \"dead_from\", \"replica\": 1, \"step\": 3},",
+        "   {\"kind\": \"slow\",      \"replica\": 2, \"factor\": 4.0},",
+        "   {\"kind\": \"drop\",      \"replica\": 0, \"rate\": 0.25}],",
+        " \"seed\": 0, \"deadline_factor\": 2.0, \"drop_rate\": 0.0}",
+        "```",
+        "",
+        "`dead_from` kills a replica's OUTGOING payloads from `step` on "
+        "(its incoming links stay live); `slow` misses the hop deadline "
+        "only when `factor > deadline_factor`; `drop` loses that replica's "
+        "payloads at `rate` per (step, hop) under the plan seed "
+        "(`drop_rate` applies plan-wide). `on_straggler` picks the degrade "
+        "policy for missed hops:",
+        "",
+        "| policy | fold semantics | divisor | counter |",
+        "|---|---|---|---|",
+        "| fail (default) | pristine path, byte-identical HLO | R | — |",
+        "| stale_fold | fold the in-flight buffer's LAST payload "
+        "(a dead origin's successor folds twice) | R | hops_stale |",
+        "| skip | fold only arrived payloads | 1 + arrived | hops_dropped |",
+        "",
+        "`sync_impl=\"gossip\"` + `participation=p` folds a seeded "
+        "per-(step, replica) subset of ring hops (`n_sel = round(p * "
+        "(R-1))`, static): wire bytes are UNCHANGED (gossip gates folding, "
+        "not transfer — the planner's `wire_ratio` stays exactly 1.000) "
+        "and `p=1.0` is bitwise identical to `ring` (CI multidevice "
+        "witness). Elastic catch-up: `checkpoint.io.pack_momentum_blob` "
+        "ships the whole momentum pytree as one versioned uint8 blob; "
+        "`seed_momentum_from_blob` is bit-exact, so a rejoining replica "
+        "continues the exact trajectory it would have had without "
+        "leaving (tests/test_faults.py). The committed convergence row "
+        "`demo-faults-stale-dead` (replica 1 dead from step 3, "
+        "stale_fold) must finish with `fault_hops_stale > 0` AND hold "
+        "paper parity — gated by scripts/check_convergence.py.",
+    ])
 
 
 def overlap_section():
@@ -534,6 +586,7 @@ def main():
         convergence_section(),
         convergence_parity_section(),
         matrix_section(),
+        faults_section(),
         overlap_section(),
         perf_section(),
         extensions_section(),

@@ -4,6 +4,19 @@ Leaves are addressed by their pytree key-path, so any of this framework's
 state dicts round-trips. Arrays are gathered to host (CPU-scale runs); at
 production scale the dry-run never materializes weights, and a real
 deployment would plug per-shard IO into `shard_hook`.
+
+Writes are atomic: both files land under temporary names and are promoted
+with ``os.replace``, the ``.json`` index last.  ``latest`` keys on the
+``.json``, so a crash mid-save (including a torn ``.npz``) can never leave a
+directory whose newest index points at a partial payload — the previous
+checkpoint stays restorable.
+
+``pack_momentum_blob`` / ``seed_momentum_from_blob`` serve elastic
+membership (ROADMAP item 2): the whole momentum pytree rides ONE contiguous
+versioned uint8 blob (the dense v2 wire format, fp32 amplitudes — a pure
+bitcast, so the round-trip is bit-exact).  A replica joining mid-run seeds
+its decoupled momentum from a peer's blob and is deterministically caught
+up: from that step on it extracts/folds the same payloads as everyone else.
 """
 from __future__ import annotations
 
@@ -14,6 +27,9 @@ import re
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.comms import codecs
+from repro.core import packing
 
 
 def _key(path) -> str:
@@ -34,9 +50,13 @@ def save(path: str, tree, step: int | None = None, shard_hook=None) -> None:
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
         })
-    np.savez(path + ".npz", **arrays)
-    with open(path + ".json", "w") as f:
+    # temp + os.replace; payload first, index last (restore keys on .json).
+    np.savez(path + ".tmp.npz", **arrays)
+    os.replace(path + ".tmp.npz", path + ".npz")
+    tmp = path + ".json.tmp"
+    with open(tmp, "w") as f:
         json.dump(index, f)
+    os.replace(tmp, path + ".json")
 
 
 def restore(path: str, like):
@@ -57,6 +77,52 @@ def restore(path: str, like):
             raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {leaf.shape}")
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), index.get("step")
+
+
+def _value_layout(tree):
+    flat = jax.tree_util.tree_flatten(tree)[0]
+    return flat, packing.plan_values([int(np.prod(l.shape) or 1) if l.shape
+                                      else 1 for l in flat])
+
+
+def pack_momentum_blob(tree) -> jnp.ndarray:
+    """The momentum pytree as ONE contiguous versioned uint8 blob.
+
+    Leaf values are laid end to end (``packing.plan_values`` order — the
+    same static layout every replica derives from the tree structure) and
+    encoded through ``DenseCodec(n_total, "fp32")``: the v2 wire header
+    followed by raw fp32 bits.  Suitable both for checkpointing and for
+    shipping to a replica joining mid-run.
+    """
+    flat, layout = _value_layout(tree)
+    stream = packing.pack_values(
+        [jnp.asarray(l).reshape(-1) for l in flat], layout)
+    return codecs.DenseCodec(n_values=layout.n_total,
+                             amp_dtype="fp32").encode(stream)
+
+
+def seed_momentum_from_blob(blob, like):
+    """Elastic catch-up: rebuild a momentum pytree bit-exactly from a blob.
+
+    Validates the versioned header (``parse_header`` / ``codec_for_header``
+    reject bad magic, unknown versions, and length mismatches), then
+    bitcast-decodes and unpacks into the structure of ``like``. fp32
+    amplitudes are a pure bitcast, so ``seed_momentum_from_blob(
+    pack_momentum_blob(m), m)`` returns ``m``'s exact bits and the joining
+    replica's trajectory is indistinguishable from one that never left.
+    """
+    flat, layout = _value_layout(like)
+    blob = jnp.asarray(blob, jnp.uint8)
+    codec = codecs.codec_for_header(codecs.parse_header(blob))
+    if codec.n_values != layout.n_total:
+        raise ValueError(
+            f"momentum blob holds {codec.n_values} values; receiving tree "
+            f"needs {layout.n_total}")
+    parts = packing.unpack_values(codec.decode(blob), layout)
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = [p.reshape(l.shape).astype(l.dtype)
+              for p, l in zip(parts, flat)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def latest(dirpath: str, prefix: str = "ckpt_"):

@@ -1,0 +1,270 @@
+"""Deterministic fault injection for the replication transports.
+
+The paper trains over "interlinked online nodes", where links flake and
+replicas stall or die — but a test harness cannot wait for real failures.
+This module is the seeded fault model the ring-family transports
+(``replicators.base.ring_gather_decode`` with ``sync_impl`` ring / gossip)
+thread through their hop folds PURELY AS TRACED DATA: a :class:`FaultPlan`
+is a static tuple of events plus a stateless PRNG, so an injected run is a
+pure function of (plan, step) — bit-reproducible, CI-checkable, and free of
+any host-side callback in the compiled program.
+
+Event kinds (all keyed on the SENDER's flat replica id — row-major over the
+replication axes, ``axes[0]`` outermost, the same numbering as the leading
+dim of ``base.gather_stack``):
+
+  * ``dead_from`` -- the replica's outgoing hops all fail from ``step`` on
+    (a crashed / departed peer; it may keep receiving in simulation, which
+    models the survivors' view of the ring).
+  * ``slow``      -- the replica's outgoing hops take ``factor`` x the
+    nominal hop time from ``step`` on.  A hop misses the per-hop deadline —
+    and therefore fails like a drop — iff ``factor > deadline_factor``.
+  * ``drop``      -- each of the replica's outgoing hops independently fails
+    with probability ``rate`` from ``step`` on (seeded per
+    (step, sender, hop): deterministic across reruns and replicas).
+
+What a failed hop DOES is the receiver's ``on_straggler`` policy
+(``stale_fold`` re-folds the stale last-received buffer, ``skip`` drops the
+contribution and renormalizes; see ``replicators/base.py``).  The traced
+counters those policies emit (``hops_stale`` / ``hops_dropped``) ride the
+side-channel collector below — the trace-time :mod:`repro.telemetry.trace`
+hooks collect only STATIC ints, so data-dependent counts need their own
+channel, drained by the optimizer inside the same trace.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+
+FAULT_KINDS = ("dead_from", "slow", "drop")
+
+# fixed base seed for the gossip neighbor selection (decorrelated from the
+# model/data PRNG streams; the per-(step, replica) fold_in does the rest).
+GOSSIP_SEED = 0x9E3779B9
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected failure, keyed on the sender's flat replica id."""
+
+    kind: str                 # dead_from | slow | drop
+    replica: int              # flat replica id whose OUTGOING hops fail
+    step: int = 0             # first step the event is active (inclusive)
+    factor: float = 1.0       # slow: hop-time multiplier vs nominal
+    rate: float = 0.0         # drop: per-hop failure probability
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"have {' | '.join(FAULT_KINDS)}")
+        if self.replica < 0:
+            raise ValueError(f"fault replica must be >= 0, got {self.replica}")
+        if self.kind == "drop" and not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"drop rate must be in [0, 1], got {self.rate}")
+        if self.kind == "slow" and self.factor < 1.0:
+            raise ValueError(f"slow factor must be >= 1, got {self.factor}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, seeded schedule of link/replica failures.
+
+    Frozen and hashable (events are a tuple), so it can sit inside a
+    ``FlexConfig`` without breaking config hashing, and ``to_json`` /
+    ``from_json`` round-trip it through run manifests and CLI flags.
+    """
+
+    events: tuple = ()                    # tuple[FaultEvent, ...]
+    seed: int = 0                         # PRNG stream for random drops
+    deadline_factor: float = 2.0          # per-hop deadline vs nominal time
+    drop_rate: float = 0.0                # global per-hop failure probability
+
+    def __post_init__(self):
+        if not (0.0 <= self.drop_rate <= 1.0):
+            raise ValueError(
+                f"drop_rate must be in [0, 1], got {self.drop_rate}")
+        if self.deadline_factor < 1.0:
+            raise ValueError("deadline_factor must be >= 1 (a deadline below "
+                             f"the nominal hop time fails every hop), got "
+                             f"{self.deadline_factor}")
+        for ev in self.events:
+            if not isinstance(ev, FaultEvent):
+                raise TypeError(f"events must be FaultEvent, got {type(ev)}")
+
+    @property
+    def active(self) -> bool:
+        """True iff the plan can gate at least one hop."""
+        return bool(self.events) or self.drop_rate > 0.0
+
+    def hop_ok(self, step, sender, hop: int):
+        """Traced bool: does the hop whose buffer ORIGINATED at ``sender``
+        arrive before the per-hop deadline at ``step``?
+
+        ``step`` and ``sender`` are traced int32 scalars; the event tuple is
+        unrolled at trace time, so the compiled program contains only the
+        comparisons (and stateless PRNG draws) of the events actually in the
+        plan — an empty plan stages nothing.
+        """
+        step = jnp.asarray(step, jnp.int32)
+        sender = jnp.asarray(sender, jnp.int32)
+        ok = jnp.ones((), jnp.bool_)
+        for i, ev in enumerate(self.events):
+            hit = (sender == ev.replica) & (step >= ev.step)
+            if ev.kind == "dead_from":
+                ok = ok & ~hit
+            elif ev.kind == "slow":
+                if ev.factor > self.deadline_factor:
+                    ok = ok & ~hit
+            elif ev.kind == "drop" and ev.rate > 0.0:
+                u = _hop_uniform(self.seed + i + 1, step, sender, hop)
+                ok = ok & ~(hit & (u < ev.rate))
+        if self.drop_rate > 0.0:
+            u = _hop_uniform(self.seed, step, sender, hop)
+            ok = ok & ~(u < self.drop_rate)
+        return ok
+
+    def expected_miss_rate(self, n_replicas: int) -> float:
+        """Modeled steady-state fraction of hops missing their deadline —
+        the planner's straggler-rate input (``CommPlan.straggler_rate``).
+
+        Counts each dead / past-deadline-slow sender as killing its
+        ``1/n_replicas`` share of hops and folds in the random drop rates;
+        a model for pricing, not a per-step truth (events with late start
+        steps still count in full).
+        """
+        if n_replicas <= 1:
+            return 0.0
+        frac = float(self.drop_rate)
+        for ev in self.events:
+            if ev.kind == "dead_from":
+                frac += 1.0 / n_replicas
+            elif ev.kind == "slow" and ev.factor > self.deadline_factor:
+                frac += 1.0 / n_replicas
+            elif ev.kind == "drop":
+                frac += ev.rate / n_replicas
+        return min(1.0, frac)
+
+    def to_json(self) -> dict:
+        return {
+            "seed": self.seed,
+            "deadline_factor": self.deadline_factor,
+            "drop_rate": self.drop_rate,
+            "events": [dataclasses.asdict(ev) for ev in self.events],
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict | str) -> "FaultPlan":
+        if isinstance(obj, str):
+            obj = json.loads(obj)
+        known = {"seed", "deadline_factor", "drop_rate", "events"}
+        extra = set(obj) - known
+        if extra:
+            raise ValueError(f"unknown FaultPlan fields {sorted(extra)}; "
+                             f"have {sorted(known)}")
+        events = tuple(FaultEvent(**ev) for ev in obj.get("events", ()))
+        return cls(events=events, seed=int(obj.get("seed", 0)),
+                   deadline_factor=float(obj.get("deadline_factor", 2.0)),
+                   drop_rate=float(obj.get("drop_rate", 0.0)))
+
+
+def _hop_uniform(seed: int, step, sender, hop: int):
+    """Stateless per-(step, sender, hop) uniform draw in [0, 1)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    key = jax.random.fold_in(key, sender)
+    key = jax.random.fold_in(key, hop)
+    return jax.random.uniform(key, ())
+
+
+# ---------------------------------------------------------------------------
+# gossip (partial participation) neighbor selection
+
+
+def gossip_n_sel(participation: float, n_hops: int) -> int:
+    """How many of the ``n_hops`` ring arrivals a replica folds per step —
+    a STATIC python int (the gossip divisor must not be data-dependent).
+
+    ``participation=1.0`` selects every hop (gossip == ring, bit-identical
+    on sign payloads); anything lower folds at least one neighbor, so a
+    replica is never isolated.
+    """
+    if not (0.0 < participation <= 1.0):
+        raise ValueError(
+            f"participation must be in (0, 1], got {participation}")
+    if n_hops <= 0:
+        return 0
+    return max(1, min(n_hops, int(round(participation * n_hops))))
+
+
+def gossip_gate(step, replica, n_hops: int, n_sel: int,
+                seed: int = GOSSIP_SEED):
+    """``(n_hops,)`` traced bool gate: exactly ``n_sel`` hops selected,
+    uniformly at random, re-drawn per (step, replica).
+
+    A seeded permutation thresholded at ``n_sel`` — so the selected subset
+    is exchangeable across hops, the count is exactly ``n_sel`` (the static
+    divisor stays honest), and at ``n_sel == n_hops`` the gate is
+    identically True (``jnp.where(True, fold, acc)`` returns the fold's
+    exact bits: gossip at p=1.0 IS the ring).
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    key = jax.random.fold_in(key, replica)
+    perm = jax.random.permutation(key, n_hops)
+    return perm < n_sel
+
+
+# ---------------------------------------------------------------------------
+# traced-counter side channel (hops_stale / hops_dropped)
+#
+# The telemetry trace hooks (repro.telemetry.trace) collect STATIC
+# shape-derived ints at trace time and stage nothing into the program.
+# Fault counters are the opposite: data-dependent traced scalars that must
+# ride the step outputs.  Same stack idiom, different cargo — the transport
+# emits traced values during tracing, and the optimizer (which opened the
+# window inside the same trace) drains them into its extras.
+
+_COUNTERS: list[dict] = []
+
+FAULT_COUNTERS = ("hops_stale", "hops_dropped")
+
+
+def counters_active() -> bool:
+    return bool(_COUNTERS)
+
+
+@contextlib.contextmanager
+def collect_counters() -> Iterator[dict]:
+    """Open a window collecting traced fault counters (name -> scalar).
+
+    Must be entered and drained within ONE trace of the enclosing jitted
+    function — the collected values are tracers belonging to that trace.
+    """
+    d: dict = {}
+    _COUNTERS.append(d)
+    try:
+        yield d
+    finally:
+        _COUNTERS.remove(d)
+
+
+def emit_counter(name: str, value) -> None:
+    """Accumulate a traced scalar into every open collector window."""
+    for d in _COUNTERS:
+        prev = d.get(name)
+        d[name] = value if prev is None else prev + value
+
+
+def flat_replica_strides(axes: Sequence[str],
+                         sizes: dict) -> dict:
+    """Row-major strides over ``axes`` (``axes[0]`` outermost) — the flat
+    replica numbering shared by FaultPlan events, the gossip gate, and the
+    leading dim of ``base.gather_stack``."""
+    strides, s = {}, 1
+    for ax in reversed(tuple(axes)):
+        strides[ax] = s
+        s *= sizes[ax]
+    return strides

@@ -38,9 +38,10 @@ from typing import Sequence
 import jax
 
 from repro.comms import codecs
+from repro.comms import faults as comm_faults
 from repro.comms.topology import (CodecOverhead, Placement, Topology,
                                   bucketed_overlap_seconds, get_topology,
-                                  step_comm_seconds)
+                                  resolve_overhead, step_comm_seconds)
 from repro.core import compression
 from repro.core.flexdemo import FlexConfig
 from repro.core.packing import DEFAULT_N_BUCKETS
@@ -73,6 +74,13 @@ class CommPlan:
     # priced with no compute to hide under and one bucket
     comm_seconds_overlapped: float = 0.0
     n_buckets: int = 1
+    # fault surface (comms.faults): participation < 1 prices the gossip
+    # transport at its n_sel folded hops; straggler_rate is the expected
+    # per-hop miss probability of the flex's FaultPlan, charged as a
+    # deadline-stretch multiplier on every transport price. wire_bytes stays
+    # the full per-replica payload — gossip gates FOLDING, not transfer.
+    participation: float = 1.0
+    straggler_rate: float = 0.0
 
     def to_json(self) -> dict:
         """Flat JSON form (telemetry manifests / dry-run records): every
@@ -244,9 +252,22 @@ def predict(flex: FlexConfig, params, topology, placement,
     (``comm_seconds_overlapped``): the seconds left exposed after hiding the
     bucketed collectives behind ``compute_s`` of backprop.  ``n_buckets=0``
     prices the engine at its :data:`~repro.core.packing.DEFAULT_N_BUCKETS`.
+
+    ``overhead`` also accepts a calibration-source path (or ``"auto"`` for
+    the committed bench baseline) — see :func:`topology.resolve_overhead`.
+
+    Fault-surface pricing: ``flex.participation < 1`` prices the transports
+    as a gossip ring that folds only ``n_sel`` of the ``|R| - 1`` hops (the
+    chain a real partial-participation transport would drain), and an active
+    ``flex.fault_plan`` stretches every hop toward its deadline by the
+    plan's expected per-hop miss rate:
+    ``x (1 + miss_rate * (deadline_factor - 1))``.  ``wire_bytes`` is NOT
+    discounted — gossip gates folding, not transfer, so the measured bytes
+    per replica stay the full payload.
     """
     topology = get_topology(topology) if isinstance(topology, str) else topology
     placement = _resolve_placement(placement, topology)
+    overhead = resolve_overhead(overhead)
     numels = leaf_numels(params)
     numel = sum(numels)
     amp = flex.resolve_codec()
@@ -267,23 +288,39 @@ def predict(flex: FlexConfig, params, topology, placement,
     else:
         raise KeyError(f"unknown scheme {flex.scheme!r}")
 
-    comm = step_comm_seconds(wire, placement, topology, overhead=overhead)
-    ring = step_comm_seconds(wire, placement, topology, overhead=overhead,
-                             ring_pipelined=True)
+    # fault-surface pricing inputs (both default to the pristine transport)
+    p = getattr(flex, "participation", 1.0)
+    plan_ = getattr(flex, "fault_plan", None)
+    n_hops = placement.n_replicas - 1
+    eff = placement
+    if p < 1.0 and n_hops > 0:
+        # gossip folds n_sel of the ring's hops: price the transports on the
+        # shorter folded chain (encode + n_sel pipelined hop/decode stages)
+        n_sel = comm_faults.gossip_n_sel(p, n_hops)
+        eff = dataclasses.replace(placement, n_replicas=n_sel + 1)
+        quality *= (n_sel + 1) / placement.n_replicas
+    miss = (plan_.expected_miss_rate(placement.n_replicas)
+            if plan_ is not None and plan_.active else 0.0)
+    stretch = 1.0 + miss * (getattr(plan_, "deadline_factor", 2.0) - 1.0)
+
+    comm = stretch * step_comm_seconds(wire, eff, topology, overhead=overhead)
+    ring = stretch * step_comm_seconds(wire, eff, topology, overhead=overhead,
+                                       ring_pipelined=True)
     link_spec = topology.link_for(placement.crosses_node)
     buckets = n_buckets if n_buckets else DEFAULT_N_BUCKETS
     # the bucketed wire adds one header per extra bucket (exact, matching
     # the replicators' per-bucket codecs)
     bucketed_wire = wire + (buckets - 1) * codecs.HEADER_BYTES
-    overlapped = bucketed_overlap_seconds(
-        bucketed_wire, placement.n_replicas, link_spec, n_buckets=buckets,
+    overlapped = stretch * bucketed_overlap_seconds(
+        bucketed_wire, eff.n_replicas, link_spec, n_buckets=buckets,
         compute_s=compute_s, overhead=overhead)
     return CommPlan(flex=flex, wire_bytes=int(wire), comm_seconds=comm,
                     quality=quality, link=link_spec.name,
                     n_replicas=placement.n_replicas,
                     feasible=(budget_s is None or comm <= budget_s),
                     comm_seconds_pipelined=ring,
-                    comm_seconds_overlapped=overlapped, n_buckets=buckets)
+                    comm_seconds_overlapped=overlapped, n_buckets=buckets,
+                    participation=p, straggler_rate=miss)
 
 
 def solve(params, topology, placement, *,
@@ -312,6 +349,12 @@ def solve(params, topology, placement, *,
         become feasible once buckets shrink the drain 1/B-fold.  The chosen
         plan's flex is emitted with ``overlap="on"`` so the engine the
         feasibility check priced is the one the trainer runs.
+
+    ``overhead`` accepts a ready :class:`CodecOverhead`, ``None``, or a
+    calibration-source string (``"auto"`` = the committed
+    ``experiments/bench/comms.json`` baseline; any ``.json``/``.jsonl``
+    path is sniffed by :func:`topology.resolve_overhead`) — measured codec
+    cost as a planner default instead of a caller chore.
     """
     overlap_mode = budget_s is None
     if overlap_mode:
@@ -320,6 +363,7 @@ def solve(params, topology, placement, *,
         budget_s = target_overlap * compute_s
     topology = get_topology(topology) if isinstance(topology, str) else topology
     placement = _resolve_placement(placement, topology)
+    overhead = resolve_overhead(overhead)
     kw = dict(overhead=overhead, n_buckets=n_buckets,
               compute_s=compute_s if overlap_mode else 0.0)
 

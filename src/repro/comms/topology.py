@@ -150,6 +150,37 @@ ZERO_OVERHEAD = CodecOverhead()
 _DEFAULT_BENCH = os.path.join("experiments", "bench", "comms.json")
 
 
+def resolve_overhead(src) -> CodecOverhead | None:
+    """Resolve a planner ``overhead`` argument to a :class:`CodecOverhead`.
+
+    ``None`` and ready-made :class:`CodecOverhead` values pass through.  A
+    string calibrates from disk (ROADMAP item 4's follow-up — measured
+    overhead as a first-class planner default instead of a caller chore):
+
+      * ``"auto"``       -- the committed comms-bench baseline
+                            (``experiments/bench/comms.json``);
+      * ``*.json``       -- a comms-bench row set (:func:`overhead_from_bench`);
+      * ``*.jsonl``      -- a telemetry event log or an experiment-matrix
+                            results file; telemetry's manifest block is tried
+                            first, then the matrix cell aggregate.
+
+    Raises like the underlying calibrators on a missing/uncalibratable
+    source — never silently falls back to zero overhead.
+    """
+    if src is None or isinstance(src, CodecOverhead):
+        return src
+    if not isinstance(src, str):
+        raise TypeError(f"overhead must be CodecOverhead | str | None, "
+                        f"got {type(src).__name__}")
+    path = _DEFAULT_BENCH if src == "auto" else src
+    if path.endswith(".jsonl"):
+        try:
+            return overhead_from_telemetry(path)
+        except KeyError:
+            return overhead_from_matrix(path)
+    return overhead_from_bench(path)
+
+
 def overhead_from_bench(path: str = _DEFAULT_BENCH,
                         amp_dtype: str = "fp32") -> CodecOverhead:
     """Calibrate :class:`CodecOverhead` from a saved comms-bench row set.

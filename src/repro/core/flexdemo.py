@@ -72,11 +72,25 @@ class FlexConfig:
     # or "fused" (single-launch Pallas DCT + top-k + sign + byte pack;
     # requires a codec and the "local" idx layout).  "auto" -> staged.
     encode_impl: str = "auto"
+    # Fault-tolerance surface (rbase.validate_fault_config, comms.faults):
+    #   participation -- fraction of ring neighbors each replica folds per
+    #     step (sync_impl="gossip" only; 1.0 == full ring, bit-identical).
+    #   on_straggler  -- degrade policy for hops an active FaultPlan fails:
+    #     fail (today's stall contract) | stale_fold (re-fold the stale
+    #     last-received buffer, divisor stays |R|) | skip (drop + traced
+    #     renormalization).
+    #   fault_plan    -- a comms.faults.FaultPlan of seeded, deterministic
+    #     slow / drop / dead_from events threaded into the ring hops as
+    #     traced data (None = no injection; the transports stage the exact
+    #     fault-free program).
+    participation: float = 1.0
+    on_straggler: str = "fail"
+    fault_plan: object = None
 
     def __post_init__(self):
         if self.sync_impl not in rbase.SYNC_IMPLS:
             raise ValueError(f"unknown sync_impl {self.sync_impl!r}; "
-                             "have gather | psum | ring | auto")
+                             "have gather | psum | ring | gossip | auto")
         if self.idx_layout not in ("local", "flat"):
             raise ValueError(f"unknown idx_layout {self.idx_layout!r}; "
                              "have local (wire v2) | flat (wire v1)")
@@ -90,16 +104,16 @@ class FlexConfig:
                 f"wire codec (codec={self.codec!r} resolves to "
                 f"{amp!r}); use codec='off' with psum, or "
                 "keep sync_impl='gather'/'ring' to ride the codec")
-        if self.sync_impl == "ring" and amp == "off":
+        if self.sync_impl in ("ring", "gossip") and amp == "off":
             # the mirror of the psum contract: the streaming ring forwards
             # the ENCODED byte buffer hop by hop — codec="off" leaves nothing
             # to stream.
             raise ValueError(
-                "sync_impl='ring' streams the encoded wire buffer around "
-                f"the ring, and codec={self.codec!r} (resolving to 'off') "
-                "leaves no byte buffer to forward; keep a codec on for "
-                "ring, or use sync_impl='gather' (or 'psum') for the raw "
-                "collectives")
+                f"sync_impl={self.sync_impl!r} streams the encoded wire "
+                f"buffer around the ring, and codec={self.codec!r} "
+                "(resolving to 'off') leaves no byte buffer to forward; "
+                "keep a codec on, or use sync_impl='gather' (or 'psum') "
+                "for the raw collectives")
         # explicit ring + sign=False is honoured but warns: the rotated
         # per-replica fold leaves replicas ulp-apart every sync (see
         # rbase.resolve_sync_impl — "auto" avoids the combination).
@@ -117,6 +131,29 @@ class FlexConfig:
             raise ValueError(
                 "encode_impl='fused' emits wire v2 in-chunk positions; "
                 f"idx_layout={self.idx_layout!r} needs encode_impl='staged'")
+        # fault-tolerance surface: same messages here and at the replicator
+        # level (validate_fault_config), plus the scheme-level rules — the
+        # gossip/fault gating generalizes the ring-family transports of the
+        # per-step schemes; diloco's outer sync and scheme="none" have no
+        # per-step ring to degrade.
+        fault_surface = (self.fault_plan is not None
+                         or self.sync_impl == "gossip"
+                         or self.participation < 1.0
+                         or self.on_straggler != "fail")
+        if fault_surface and self.scheme in ("diloco", "none"):
+            raise ValueError(
+                f"scheme={self.scheme!r} has no per-step ring to degrade "
+                "(diloco syncs on its outer cadence, none never syncs); the "
+                "fault surface (gossip / participation / on_straggler / "
+                "fault_plan) needs a per-step scheme: demo, random, "
+                "striding, or full")
+        rbase.validate_fault_config(
+            sync_impl=self.sync_impl, amp=amp,
+            participation=self.participation,
+            on_straggler=self.on_straggler, fault_plan=self.fault_plan,
+            overlap_on=rbase.resolve_overlap(self.overlap, amp=amp,
+                                             n_buckets=self.n_buckets),
+            sign=self.sign)
 
     def resolve_codec(self) -> str:
         """Amplitude encoding for the wire codec ("off" disables)."""
@@ -134,6 +171,12 @@ class FlexConfig:
         wire = compression.WireFormat(value_bytes=self.value_bytes)
         amp = self.resolve_codec()
         lap = dict(overlap=self.overlap, n_buckets=self.n_buckets)
+        if self.scheme in ("demo", "random", "striding", "full"):
+            # the per-step schemes carry the fault surface; diloco/none are
+            # validated above to keep its defaults.
+            lap.update(participation=self.participation,
+                       on_straggler=self.on_straggler,
+                       fault_plan=self.fault_plan)
         if self.scheme == "demo":
             k = self.topk
             if k is None:

@@ -18,11 +18,17 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.comms import faults as comm_faults
 from repro.core import compression, flexdemo
 from repro.core.optimizers import base
 from repro.utils.tree import tree_zeros_like
 
 TELEMETRY_METRICS = ("energy_retained", "sign_agree")
+
+# traced per-step fault counters (mean over replicas after the step's pmean):
+# emitted by the gated ring-family transports through the comms.faults
+# side channel, drained here inside the same trace.
+FAULT_METRICS = comm_faults.FAULT_COUNTERS
 
 
 def _quality_stats(m, q, m_res):
@@ -64,6 +70,10 @@ def demo_sgd(
     telemetry: bool = False,
 ) -> base.Optimizer:
     replicator = flex.make()
+    # static: an active FaultPlan with a degrade policy emits the traced
+    # hops_stale/hops_dropped counters, which must surface as step metrics.
+    faults_on = (flex.fault_plan is not None and flex.fault_plan.active
+                 and flex.on_straggler != "fail")
 
     def init(params):
         return {
@@ -77,9 +87,20 @@ def demo_sgd(
             lambda mm, g: momentum_decay * mm + g.astype(jnp.float32),
             state["m"], grads,
         )
-        q, m_res, wire = flexdemo.communicate_tree(
-            replicator, m, step=step, axes=axes, sign=flex.sign
-        )
+        fault_counts = {}
+        if faults_on:
+            # collect the transports' traced counters within THIS trace.
+            with comm_faults.collect_counters() as fc:
+                q, m_res, wire = flexdemo.communicate_tree(
+                    replicator, m, step=step, axes=axes, sign=flex.sign
+                )
+            fault_counts = {
+                name: jnp.asarray(fc.get(name, 0.0), jnp.float32)
+                for name in FAULT_METRICS}
+        else:
+            q, m_res, wire = flexdemo.communicate_tree(
+                replicator, m, step=step, axes=axes, sign=flex.sign
+            )
         eta = base.resolve_lr(lr, step)
 
         def upd(qq, p):
@@ -91,6 +112,7 @@ def demo_sgd(
         updates = jax.tree_util.tree_map(upd, q, params)
         new_state = {"m": m_res, "step": step + 1}
         extras = {"lr": eta}
+        extras.update(fault_counts)
         if telemetry:
             extras.update(_quality_stats(m, q, m_res))
         return updates, new_state, base.OptimizerAux(wire, extras)
@@ -125,7 +147,8 @@ def demo_sgd(
         postprocess_params=functools.partial(_post, replicator),
         with_use_kernel=with_use_kernel,
         with_telemetry=with_telemetry,
-        telemetry_metrics=TELEMETRY_METRICS if telemetry else (),
+        telemetry_metrics=((TELEMETRY_METRICS if telemetry else ())
+                           + (FAULT_METRICS if faults_on else ())),
     )
 
 

@@ -37,14 +37,28 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+# jax-only at import time — no cycle through repro.core (see comms __init__).
+from repro.comms import faults as comm_faults
+
 # stdlib-only at import time (see telemetry package docstring), so the wire
 # chokepoints below can report trace-time byte counts without an import cycle.
 from repro.telemetry import trace as tmtrace
 
-SYNC_IMPLS = ("gather", "psum", "ring", "auto")
+SYNC_IMPLS = ("gather", "psum", "ring", "gossip", "auto")
 
 OVERLAP_MODES = ("auto", "on", "off")
 ENCODE_IMPLS = ("auto", "staged", "fused")
+
+# Degrade policy for a ring-family hop that misses its deadline (a FaultPlan
+# event fired for the buffer's origin replica):
+#   fail       -- today's contract: no gating whatsoever is staged; a real
+#                 deployment stalls/aborts on the failed collective.
+#   stale_fold -- fold the STALE last-received buffer in the failed hop's
+#                 place (the divisor stays |R|: degraded averaging, never a
+#                 stall) and keep forwarding it downstream.
+#   skip       -- drop the contribution entirely and renormalize by the
+#                 traced count of buffers actually folded.
+ON_STRAGGLER = ("fail", "stale_fold", "skip")
 
 
 def resolve_overlap(overlap: str, *, amp: str, n_buckets: int = 0) -> bool:
@@ -122,30 +136,95 @@ def resolve_sync_impl(impl: str, amp: str, sign: bool = True) -> str:
     """
     if impl not in SYNC_IMPLS:
         raise ValueError(f"unknown sync_impl {impl!r}; have "
-                         "gather | psum | ring | auto")
+                         "gather | psum | ring | gossip | auto")
     if impl == "auto":
         return "ring" if (amp != "off" and sign) else "gather"
     if impl == "psum" and amp != "off":
         raise ValueError("sync_impl='psum' all-reduces raw values and cannot "
                          f"ride the wire codec (codec={amp!r}); set "
                          "codec='off', or keep gather/ring to ride the codec")
-    if impl == "ring" and amp == "off":
-        raise ValueError("sync_impl='ring' streams the encoded wire buffer "
-                         "around the ring, and codec='off' leaves no byte "
-                         "buffer to forward; keep a codec on for ring, or "
-                         "use sync_impl='gather' (or 'psum') for the raw "
-                         "collectives")
-    if impl == "ring" and not sign:
+    if impl in ("ring", "gossip") and amp == "off":
+        raise ValueError(f"sync_impl={impl!r} streams the encoded wire "
+                         "buffer around the ring, and codec='off' leaves no "
+                         "byte buffer to forward; keep a codec on for "
+                         f"{impl}, or use sync_impl='gather' (or 'psum') "
+                         "for the raw collectives")
+    if impl in ("ring", "gossip") and not sign:
         # honoured, but hazardous: each replica folds arriving buffers in
         # its own rotated ring order, and unsigned (non-ternary) fp sums are
         # bracketing-sensitive — replicas end each sync ulp-apart and the
         # drift compounds across steps with nothing re-synchronizing them.
         warnings.warn(
-            "sync_impl='ring' with unsigned payloads folds in per-replica "
+            f"sync_impl={impl!r} with unsigned payloads folds in per-replica "
             "ring order: synced results drift apart by ulps per step; use "
             "sign=True (ternary payloads fold exactly) or sync_impl="
             "'gather' for bit-identical replicas", stacklevel=3)
     return impl
+
+
+def validate_fault_config(*, sync_impl: str, amp: str, participation: float,
+                          on_straggler: str, fault_plan,
+                          overlap_on: bool, sign: bool = True) -> None:
+    """Validate the fault-tolerance surface against the transport.
+
+    Shared by ``FlexConfig.__post_init__`` and the replicators' own
+    ``__post_init__`` so the same message fires at both levels (the psum /
+    ring x codec contract's idiom), and mirrored rule-for-rule by
+    ``experiments.matrix.compatibility``.
+    """
+    if on_straggler not in ON_STRAGGLER:
+        raise ValueError(f"unknown on_straggler {on_straggler!r}; have "
+                         "fail | stale_fold | skip")
+    if not (0.0 < participation <= 1.0):
+        raise ValueError(
+            f"participation must be in (0, 1], got {participation}")
+    if participation < 1.0 and sync_impl != "gossip":
+        raise ValueError(
+            "participation < 1 is the gossip transport's knob (each replica "
+            "folds a seeded random neighbor subset per step); set "
+            f"sync_impl='gossip', not {sync_impl!r}")
+    with warnings.catch_warnings():
+        # validation-only resolution: the transport itself re-resolves (and
+        # warns) at sync time, so don't double-fire the ring/nosign warning.
+        warnings.simplefilter("ignore")
+        resolved = resolve_sync_impl(sync_impl, amp, sign)
+    if fault_plan is not None and fault_plan.active:
+        if on_straggler == "fail":
+            raise ValueError(
+                "a FaultPlan with on_straggler='fail' keeps today's "
+                "stall-on-failure contract — nothing to inject; pick a "
+                "degrade policy: on_straggler='stale_fold' or 'skip'")
+        if resolved not in ("ring", "gossip"):
+            raise ValueError(
+                "fault injection gates the ring-family hop folds; "
+                f"sync_impl={sync_impl!r} resolves to {resolved!r}, which "
+                "has no hops to gate — use sync_impl='ring' or 'gossip'")
+    if on_straggler != "fail" and resolved not in ("ring", "gossip"):
+        raise ValueError(
+            f"on_straggler={on_straggler!r} degrades ring-family hops; "
+            f"sync_impl={sync_impl!r} resolves to {resolved!r}, which has "
+            "no per-hop deadline to degrade — use sync_impl='ring' or "
+            "'gossip' (or keep on_straggler='fail')")
+    if overlap_on and (sync_impl == "gossip" or participation < 1.0
+                       or (fault_plan is not None and fault_plan.active)):
+        raise ValueError(
+            "the bucketed overlap engine (overlap='on') runs the monolithic "
+            "ring-family transports only; gossip / partial participation / "
+            "fault injection with bucketed double-buffered hops is future "
+            "work — set overlap='off' (or drop the fault surface)")
+
+
+def faults_params_diverge(participation: float, on_straggler: str,
+                          fault_plan) -> bool:
+    """True when the fault surface lets replicas apply DIFFERENT synced
+    updates — partial participation folds per-replica neighbor subsets, and
+    an active FaultPlan with a degrade policy folds stale/skipped buffers
+    per receiver — so params drift apart like DiLoCo's and the training
+    state must keep the per-replica leading axis."""
+    if participation < 1.0:
+        return True
+    return (fault_plan is not None and fault_plan.active
+            and on_straggler != "fail")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +335,11 @@ def ring_gather_decode(
     axes: Sequence[str],
     accumulate: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
     init: jnp.ndarray,
+    step=None,
+    fault_plan=None,
+    on_straggler: str = "fail",
+    gossip: bool = False,
+    participation: float = 1.0,
 ) -> tuple[jnp.ndarray, int]:
     """Pipelined ring all-gather + decode of one buffer per replica.
 
@@ -275,18 +359,118 @@ def ring_gather_decode(
     in ring-arrival order, which is a per-replica rotation of the canonical
     order -- exact for sign-compressed (ternary) payloads, whose sums are
     small integers in fp32, and ulp-close otherwise.
+
+    Fault surface (all optional; the default arguments stage the EXACT
+    no-fault program above — bit-identity is the contract):
+
+      * ``fault_plan`` + ``on_straggler`` -- gate each hop on
+        ``plan.hop_ok(step, sender, hop)`` where ``sender`` is the traced
+        flat replica id the arriving buffer ORIGINATED at.  A failed hop
+        either re-folds the stale last-received buffer (``stale_fold``,
+        divisor stays |R|) or is skipped with the mean renormalized by the
+        traced fold count (``skip`` — the accumulator comes back
+        PRE-DIVIDED with the returned divisor 1, so every caller's
+        ``acc / n`` stays correct without handling a traced divisor).
+      * ``gossip`` + ``participation`` -- partial-participation folding:
+        every hop still transfers (static shapes), but each replica folds
+        only a seeded random subset of exactly ``n_sel =
+        round(p * (|R|-1))`` arrivals (re-drawn per step); the returned
+        divisor is the static ``1 + n_sel``.  At ``p=1.0`` every gate is
+        True and the result is bit-identical to the ring.
+
+    Degraded/gossip hops emit the traced ``hops_stale`` / ``hops_dropped``
+    counters through ``comms.faults.emit_counter``.
     """
     acc = accumulate(init, buf)
     if not axes:
         return acc, 1
     sizes = {a: int(jax.lax.psum(1, a)) for a in axes}
+    n = int(math.prod(sizes.values()))
     if tmtrace.active():
-        tmtrace.on_buffer("ring", buf.nbytes, int(math.prod(sizes.values())))
+        tmtrace.on_buffer("gossip" if gossip else "ring", buf.nbytes, n)
+    plan_on = (fault_plan is not None and fault_plan.active
+               and on_straggler != "fail")
+    if not plan_on and not gossip:
+        inflight = buf
+        for ax in _ring_schedule(tuple(axes), sizes):
+            inflight = ring_shift(inflight, ax, sizes[ax])
+            acc = accumulate(acc, inflight)
+        return acc, n
+    return _ring_decode_degraded(
+        buf, acc, axes=tuple(axes), sizes=sizes, accumulate=accumulate,
+        step=step, fault_plan=fault_plan if plan_on else None,
+        on_straggler=on_straggler, gossip=gossip,
+        participation=participation)
+
+
+def _ring_decode_degraded(buf, acc, *, axes, sizes, accumulate, step,
+                          fault_plan, on_straggler, gossip, participation):
+    """The gated ring fold behind :func:`ring_gather_decode`'s fault surface.
+
+    Hop ``j`` of the snake schedule delivers the buffer that originated
+    ``delta_j`` lattice positions upstream, so the sender's flat id is
+    recoverable per hop from ``axis_index`` arithmetic — the FaultPlan gates
+    on the ORIGIN replica, which is the same predicate at every receiver
+    (a dead sender's buffer is stale/skipped ring-wide, exactly one hop
+    after it would have arrived).
+    """
+    n = int(math.prod(sizes.values()))
+    n_hops = n - 1
+    strides = comm_faults.flat_replica_strides(axes, sizes)
+    if step is None:
+        step = jnp.zeros((), jnp.int32)
+    sel = None
+    n_sel = n_hops
+    if gossip:
+        n_sel = comm_faults.gossip_n_sel(participation, n_hops)
+        my_id = sum(jax.lax.axis_index(a) * strides[a] for a in axes)
+        sel = comm_faults.gossip_gate(step, my_id, n_hops, n_sel)
+    one = jnp.ones((), jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
+    stale, dropped, count = zero, zero, one
     inflight = buf
-    for ax in _ring_schedule(tuple(axes), sizes):
-        inflight = ring_shift(inflight, ax, sizes[ax])
-        acc = accumulate(acc, inflight)
-    return acc, int(math.prod(sizes.values()))
+    delta = {a: 0 for a in axes}
+    for j, ax in enumerate(_ring_schedule(axes, sizes)):
+        shifted = ring_shift(inflight, ax, sizes[ax])
+        delta[ax] += 1
+        ok = jnp.ones((), jnp.bool_)
+        if fault_plan is not None:
+            sender = sum(
+                ((jax.lax.axis_index(a) - delta[a]) % sizes[a]) * strides[a]
+                for a in axes)
+            ok = fault_plan.hop_ok(step, sender, j)
+        want = sel[j] if gossip else None     # gossip fold gate (traced)
+        miss = jnp.where(ok, zero, one)
+        if want is not None:
+            miss = jnp.where(want, miss, zero)
+        if on_straggler == "skip" and fault_plan is not None:
+            inflight = shifted
+            fold = ok if want is None else (want & ok)
+            acc = jnp.where(fold, accumulate(acc, inflight), acc)
+            count = count + jnp.where(fold, one, zero)
+            dropped = dropped + miss
+        else:
+            # stale_fold (or pure gossip): a late hop re-folds the stale
+            # last-received buffer and keeps forwarding it downstream.
+            if fault_plan is not None:
+                inflight = jnp.where(ok, shifted, inflight)
+                stale = stale + miss
+            else:
+                inflight = shifted
+            if want is not None:
+                acc = jnp.where(want, accumulate(acc, inflight), acc)
+            else:
+                acc = accumulate(acc, inflight)
+    if fault_plan is not None:
+        if on_straggler == "skip":
+            comm_faults.emit_counter("hops_dropped", dropped)
+        else:
+            comm_faults.emit_counter("hops_stale", stale)
+    if on_straggler == "skip" and fault_plan is not None:
+        # renormalize by the traced fold count HERE so callers keep their
+        # static `acc / n` (and the Pallas idct_mean's static n) untouched.
+        return acc / count, 1
+    return acc, (1 + n_sel) if gossip else n
 
 
 def ring_gather_decode_buckets(
@@ -349,6 +533,10 @@ def sync_dense_values(
     codec: str = "fp32",
     sign: bool = False,
     modeled_bytes: int | None = None,
+    step=None,
+    fault_plan=None,
+    on_straggler: str = "fail",
+    participation: float = 1.0,
 ) -> tuple[jnp.ndarray, int]:
     """Mean a flat value stream over R through the dense wire codec.
 
@@ -371,11 +559,14 @@ def sync_dense_values(
 
         cod = codecs.DenseCodec(vals.size, codec, signed=sign)
         buf = cod.encode(vals)
-        if impl == "ring" and axes:
+        if impl in ("ring", "gossip") and axes:
             acc, n = ring_gather_decode(
                 buf, axes=axes,
                 accumulate=lambda a, b: a + cod.decode(b),
-                init=jnp.zeros((vals.size,), jnp.float32))
+                init=jnp.zeros((vals.size,), jnp.float32),
+                step=step, fault_plan=fault_plan,
+                on_straggler=on_straggler, gossip=impl == "gossip",
+                participation=participation)
             return acc / n, cod.wire_bytes
         if not axes:
             g = buf[None]                                     # |R| = 1
@@ -480,6 +671,12 @@ class ValueStreamReplicator(Replicator):
     # stream into n_buckets leaf-group buffers with independent collectives.
     overlap: str = "auto"
     n_buckets: int = 0
+    # fault surface (validate_fault_config / comms.faults): partial
+    # participation is impl="gossip"'s knob; on_straggler is the degrade
+    # policy for hops an active FaultPlan fails.
+    participation: float = 1.0
+    on_straggler: str = "fail"
+    fault_plan = None
 
     def select_leaf(self, m: jnp.ndarray, *, step, seed: int, sign: bool):
         """-> ``(vals, ctx)``: the leaf's selected value stream (static
@@ -494,6 +691,21 @@ class ValueStreamReplicator(Replicator):
         resolve_sync_impl(self.impl, self.codec)
         resolve_overlap(self.overlap, amp=self.codec,
                         n_buckets=self.n_buckets)
+        validate_fault_config(
+            sync_impl=self.impl, amp=self.codec,
+            participation=self.participation,
+            on_straggler=self.on_straggler, fault_plan=self.fault_plan,
+            overlap_on=self._overlap_on())
+
+    @property
+    def params_diverge(self) -> bool:  # overrides the base class attr
+        return faults_params_diverge(self.participation, self.on_straggler,
+                                     self.fault_plan)
+
+    def _fault_kwargs(self, step) -> dict:
+        return dict(step=step, fault_plan=self.fault_plan,
+                    on_straggler=self.on_straggler,
+                    participation=self.participation)
 
     def _overlap_on(self) -> bool:
         return resolve_overlap(self.overlap, amp=self.codec,
@@ -517,7 +729,8 @@ class ValueStreamReplicator(Replicator):
         mean_vals, wire = sync_dense_values(
             vals, axes=axes, impl=self._resolved_impl(sign),
             codec=self.codec, sign=sign,
-            modeled_bytes=self.wire_bytes(m.size))
+            modeled_bytes=self.wire_bytes(m.size),
+            **self._fault_kwargs(step))
         q_sync, m_residual = self.apply_leaf(m, mean_vals, ctx)
         return ReplicatorOutput(q_sync=q_sync, m_residual=m_residual,
                                 wire_bytes=wire)
@@ -564,7 +777,8 @@ class ValueStreamReplicator(Replicator):
         else:
             mean_stream, wire = sync_dense_values(
                 stream, axes=axes, impl=self._resolved_impl(sign),
-                codec=self.codec, sign=sign)
+                codec=self.codec, sign=sign,
+                **self._fault_kwargs(step))
         parts = packing.unpack_values(mean_stream, layout)
         qs, res = [], []
         for (_, leaf), (_, ctx), part in zip(paths_leaves, selected, parts):

@@ -87,6 +87,12 @@ class DeMoReplicator(base.Replicator):
     # + byte pack writing the uint8 wire segments directly; requires a codec
     # and the v2 "local" idx layout).  "auto" -> staged.
     encode_impl: str = "auto"
+    # Fault surface (base.validate_fault_config / comms.faults): partial
+    # participation rides sync_impl="gossip"; on_straggler is the degrade
+    # policy for hops an active FaultPlan fails.
+    participation: float = 1.0
+    on_straggler: str = "fail"
+    fault_plan: object = None
 
     def __post_init__(self):
         # validate sync_impl x codec at construction (ring needs a buffer to
@@ -94,11 +100,28 @@ class DeMoReplicator(base.Replicator):
         base.resolve_sync_impl(self.sync_impl, self.amp_dtype())
         base.resolve_overlap(self.overlap, amp=self.amp_dtype(),
                              n_buckets=self.n_buckets)
+        base.validate_fault_config(
+            sync_impl=self.sync_impl, amp=self.amp_dtype(),
+            participation=self.participation,
+            on_straggler=self.on_straggler, fault_plan=self.fault_plan,
+            overlap_on=base.resolve_overlap(self.overlap,
+                                            amp=self.amp_dtype(),
+                                            n_buckets=self.n_buckets))
         if (base.resolve_encode_impl(self.encode_impl, self.amp_dtype())
                 == "fused" and self.idx_layout != "local"):
             raise ValueError(
                 "encode_impl='fused' emits wire v2 in-chunk positions; "
                 f"idx_layout={self.idx_layout!r} needs encode_impl='staged'")
+
+    @property
+    def params_diverge(self) -> bool:  # overrides the base class attr
+        return base.faults_params_diverge(self.participation,
+                                          self.on_straggler, self.fault_plan)
+
+    def _fault_kwargs(self, step) -> dict:
+        return dict(step=step, fault_plan=self.fault_plan,
+                    on_straggler=self.on_straggler,
+                    participation=self.participation)
 
     def amp_dtype(self) -> str:
         from repro.comms import codecs
@@ -117,7 +140,7 @@ class DeMoReplicator(base.Replicator):
         axes: Sequence[str],
         sign: bool,
     ) -> base.ReplicatorOutput:
-        del step, seed
+        del seed
         s, k = self.chunk_size, self.topk
         vals, idx, q_local = compression.dct_topk_extract(m, s, k)
         m_residual = m - q_local
@@ -135,7 +158,7 @@ class DeMoReplicator(base.Replicator):
                 n_rows=vals.shape[0], chunk_size=s, k=k, amp_dtype=amp,
                 signed=sign, idx_layout=self.idx_layout)
             payload = codec.encode(tx, idx)
-            if impl == "ring" and axes:
+            if impl in ("ring", "gossip") and axes:
                 # streaming ring: decode-accumulate each arriving buffer into
                 # a dense (C, s) coefficient accumulator while the in-flight
                 # copy rides the next hop; mean + iDCT once at the end.
@@ -145,7 +168,8 @@ class DeMoReplicator(base.Replicator):
 
                 acc, n = base.ring_gather_decode(
                     payload, axes=axes, accumulate=accum,
-                    init=jnp.zeros((vals.shape[0], s), jnp.float32))
+                    init=jnp.zeros((vals.shape[0], s), jnp.float32),
+                    gossip=impl == "gossip", **self._fault_kwargs(step))
                 q_rows = compression.coeff_mean_idct(acc, n, s)
             else:
                 if not axes:
@@ -198,7 +222,7 @@ class DeMoReplicator(base.Replicator):
         tree, instead of one of each per leaf. The layout plan is static
         (shapes only), so this traces to a fixed graph under jit/shard_map.
         """
-        del step, salt
+        del salt
         s, k = self.chunk_size, self.topk
         impl = compression.resolve_extract_impl(self.extract_impl)
         kernel = impl in ("pallas", "pallas_interpret")
@@ -234,7 +258,7 @@ class DeMoReplicator(base.Replicator):
             return self._decode_payload(
                 momentum, payload, codec, layout, axes=axes, sync=sync,
                 kernel=kernel, interpret=interpret, wire=wire,
-                residual=residual)
+                residual=residual, step=step)
         vals, idx, q_rows = compression.packed_dct_topk(chunks, k, impl=impl)
         q_local = packing.unpack_tree(q_rows, layout)
         residual = jax.tree_util.tree_map(
@@ -258,7 +282,7 @@ class DeMoReplicator(base.Replicator):
             return self._decode_payload(
                 momentum, payload, codec, layout, axes=axes, sync=sync,
                 kernel=kernel, interpret=interpret, wire=codec.wire_bytes,
-                residual=residual)
+                residual=residual, step=step)
         else:
             if not axes:
                 g_vals, g_idx = tx[None], idx[None]            # |R| = 1
@@ -294,18 +318,21 @@ class DeMoReplicator(base.Replicator):
         return q_sync, residual, wire
 
     def _decode_payload(self, momentum, payload, codec, layout, *, axes,
-                        sync, kernel, interpret, wire, residual):
-        """Sync + decode ONE encoded buffer (ring or gather transport).
+                        sync, kernel, interpret, wire, residual, step=None):
+        """Sync + decode ONE encoded buffer (ring/gossip or gather transport).
 
         Ring: the (|R|, B) gathered stack is never built.  Each hop decodes
         ONE buffer into the (C_pad, s) coefficient accumulator — the fused
         accumulate-into Pallas kernel when a kernel impl is selected — while
         ppermute forwards the in-flight copy; the mean + iDCT run once after
-        the last hop with the same tiling as the gathered kernel.
+        the last hop with the same tiling as the gathered kernel.  The fault
+        surface (FaultPlan gating, gossip participation) rides the same
+        hops; skip-mode renormalization comes back pre-divided (n == 1), so
+        the static-n mean kernels below stay untouched.
         """
         s = self.chunk_size
         pad = layout.n_rows_padded - layout.n_rows
-        if sync == "ring" and axes:
+        if sync in ("ring", "gossip") and axes:
             if kernel:
                 from repro.kernels.dct_topk.ops import (decode_topk_accum,
                                                         idct_mean)
@@ -321,7 +348,8 @@ class DeMoReplicator(base.Replicator):
 
             acc, n = base.ring_gather_decode(
                 payload, axes=axes, accumulate=accum,
-                init=jnp.zeros((layout.n_rows_padded, s), jnp.float32))
+                init=jnp.zeros((layout.n_rows_padded, s), jnp.float32),
+                gossip=sync == "gossip", **self._fault_kwargs(step))
             if kernel:
                 q_sync_rows = idct_mean(acc, s, n, interpret=interpret)
             else:

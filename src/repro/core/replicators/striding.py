@@ -32,6 +32,11 @@ class StridingReplicator(base.ValueStreamReplicator):
     # leaf-group buffers with independent collectives (base.resolve_overlap)
     overlap: str = "auto"
     n_buckets: int = 0
+    # fault surface (base.validate_fault_config / comms.faults): partial
+    # participation rides impl="gossip"; on_straggler degrades failed hops.
+    participation: float = 1.0
+    on_straggler: str = "fail"
+    fault_plan: object = None
 
     def __post_init__(self):
         self._validate_impl()

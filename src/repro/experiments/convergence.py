@@ -72,15 +72,31 @@ class Setting:
     idx_layout: str = "local"
     chunk_size: int = 64
     topk: int | None = None
+    # fault surface (comms.faults): gossip fold fraction, per-hop deadline
+    # policy, and a FaultPlan spec as its JSON string (kept as a string so
+    # Setting stays hashable and the committed baseline row is plain data).
+    # Injection is deterministic — seeded events on absolute step indices —
+    # so fault rows keep the smoke-prefix bit-exactness promise.
+    participation: float = 1.0
+    on_straggler: str = "fail"
+    faults: str = ""
 
     def flex(self) -> FlexConfig:
+        fault_plan = None
+        if self.faults:
+            from repro.comms import faults as comm_faults
+
+            fault_plan = comm_faults.FaultPlan.from_json(self.faults)
         return FlexConfig(scheme=self.scheme, rate=self.rate,
                           codec=self.codec, sign=self.sign,
                           overlap=self.overlap, n_buckets=self.n_buckets,
                           sync_impl=self.sync_impl,
                           encode_impl=self.encode_impl,
                           idx_layout=self.idx_layout,
-                          chunk_size=self.chunk_size, topk=self.topk)
+                          chunk_size=self.chunk_size, topk=self.topk,
+                          participation=self.participation,
+                          on_straggler=self.on_straggler,
+                          fault_plan=fault_plan)
 
     def build_optimizer(self, lr):
         if self.optimizer == "adamw":
@@ -103,6 +119,17 @@ SETTINGS = (
     Setting("striding-fp32-sign", scheme="striding", codec="fp32", sign=True,
             deterministic=True),
     Setting("diloco-fp32-sign", scheme="diloco", codec="fp32", sign=True),
+    # Fault-injected robustness row (ROADMAP item 2): replica 1's outgoing
+    # links die at step 3 (inside the smoke prefix, so CI exercises the
+    # degraded transport) and every surviving replica stale-folds the missed
+    # hops.  Deterministic — the injection is seeded data on absolute step
+    # indices — and flexdemo-gated: the degraded run must stay inside the
+    # paper-parity band against the AdamW reference.
+    Setting("demo-faults-stale-dead", scheme="demo", codec="fp32", sign=True,
+            deterministic=True, flexdemo=True, sync_impl="ring",
+            on_straggler="stale_fold",
+            faults='{"events": [{"kind": "dead_from", "replica": 1, '
+                   '"step": 3}]}'),
 )
 
 
@@ -209,7 +236,7 @@ def run_setting(wl: Workload, setting: Setting, mesh, log=print,
         recorder=recorder)
     if recorder is not None:
         recorder.close()
-    return {
+    row = {
         "setting": setting.name,
         "optimizer": setting.optimizer,
         "scheme": setting.scheme,
@@ -219,6 +246,9 @@ def run_setting(wl: Workload, setting: Setting, mesh, log=print,
         "deterministic": setting.deterministic,
         "reference": setting.reference,
         "flexdemo": setting.flexdemo,
+        "participation": setting.participation,
+        "on_straggler": setting.on_straggler,
+        "faults": setting.faults,
         "steps": res.steps,
         "train_losses": res.train_losses,
         "val_losses": [[int(s), float(v)] for s, v in res.val_losses],
@@ -226,6 +256,14 @@ def run_setting(wl: Workload, setting: Setting, mesh, log=print,
         "final_train": res.final_train(),
         "final_val": res.final_val(),
     }
+    # fault rows surface their summed degraded-hop counters (the optimizer
+    # emits hops_stale/hops_dropped as step metrics whenever a FaultPlan is
+    # active); scripts/check_convergence.py gates fault_hops_stale > 0 so a
+    # fault row that silently ran the pristine transport fails the check.
+    for name in ("hops_stale", "hops_dropped"):
+        if name in res.metrics:
+            row["fault_" + name] = float(sum(res.metrics[name]))
+    return row
 
 
 def run_domain(domain: str, mesh_shape=DEFAULT_MESH, smoke: bool = False,

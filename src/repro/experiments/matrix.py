@@ -51,11 +51,12 @@ DEFAULT_TIMEOUT_S = 900.0
 
 SCHEMES = ("demo", "random", "striding", "diloco", "full")
 CODECS = ("auto", "fp32", "bf16", "int8", "off")
-SYNC_IMPLS = ("gather", "psum", "ring", "auto")
+SYNC_IMPLS = ("gather", "psum", "ring", "gossip", "auto")
 OVERLAP_MODES = ("auto", "on", "off")
 ENCODE_IMPLS = ("auto", "staged", "fused")
 IDX_LAYOUTS = ("local", "flat")
 OPTIMIZERS = ("demo_sgd", "adamw")
+ON_STRAGGLER_MODES = ("fail", "stale_fold", "skip")
 
 # One knob -> one axis.  AXIS_ORDER fixes the cartesian-product enumeration
 # order (and therefore cell order in the output file) regardless of JSON key
@@ -74,6 +75,11 @@ CELL_DEFAULTS = {
     "overlap": "auto",
     "n_buckets": 0,
     "encode_impl": "auto",
+    # fault surface (comms.faults): gossip fold fraction, per-hop deadline
+    # policy, FaultPlan spec as its JSON string ("" = no injected faults)
+    "participation": 1.0,
+    "on_straggler": "fail",
+    "faults": "",
     "mesh": (2, 4),                 # data x model
     "devices": 8,                   # fake host devices for the subprocess
     "steps": 0,                     # 0 = the workload's own step budget
@@ -218,11 +224,15 @@ def cell_id(cell: dict) -> str:
     h = hashlib.sha1(sig.encode()).hexdigest()[:8]
     slug = f"{cell['workload']}:{cell['scheme']}:{cell['codec']}"
     for axis in ("sync_impl", "overlap", "encode_impl", "idx_layout",
-                 "optimizer"):
+                 "optimizer", "on_straggler"):
         if cell.get(axis) != CELL_DEFAULTS[axis]:
             slug += f":{cell[axis]}"
     if not cell.get("sign", True):
         slug += ":nosign"
+    if float(cell.get("participation", 1.0)) != 1.0:
+        slug += f":p{float(cell['participation']):g}"
+    if cell.get("faults"):
+        slug += ":faults"
     return f"{slug}#{h}"
 
 
@@ -266,9 +276,9 @@ def compatibility(cell: dict) -> str | None:
         return f"unknown idx_layout {idx!r}"
     if sync == "psum" and amp != "off":
         return f"psum all-reduces raw values and cannot ride codec={amp}"
-    if sync == "ring" and amp == "off":
-        return "ring streams the encoded buffer; codec=off leaves nothing " \
-               "to forward"
+    if sync in ("ring", "gossip") and amp == "off":
+        return f"{sync} streams the encoded buffer; codec=off leaves " \
+               "nothing to forward"
     if overlap == "on" and amp == "off":
         return "overlap=on buckets the encoded buffer; codec=off leaves " \
                "nothing to bucket"
@@ -281,6 +291,54 @@ def compatibility(cell: dict) -> str | None:
     if encode == "fused" and idx != "local":
         return "encode_impl=fused emits wire-v2 local indices; " \
                "idx_layout=flat needs staged"
+    # fault surface (mirrors replicators.base.validate_fault_config rule
+    # for rule, including the auto->ring/gather sync resolution):
+    straggler = cell.get("on_straggler", "fail")
+    if straggler not in ON_STRAGGLER_MODES:
+        return f"unknown on_straggler {straggler!r}"
+    try:
+        participation = float(cell.get("participation", 1.0))
+    except (TypeError, ValueError):
+        return f"participation must be a number in (0, 1], " \
+               f"got {cell.get('participation')!r}"
+    if not 0.0 < participation <= 1.0:
+        return f"participation must be in (0, 1], got {participation:g}"
+    if participation < 1.0 and sync != "gossip":
+        return "participation < 1 is the gossip fold fraction; needs " \
+               "sync_impl=gossip"
+    faults_spec = cell.get("faults", "") or ""
+    plan = None
+    if faults_spec:
+        from repro.comms import faults as comm_faults
+
+        try:
+            plan = comm_faults.FaultPlan.from_json(faults_spec)
+        except Exception:  # noqa: BLE001 - any malformed spec is one reason
+            return "faults is not a valid FaultPlan JSON spec"
+    plan_active = plan is not None and plan.active
+    resolved = sync if sync != "auto" else (
+        "ring" if (amp != "off" and cell.get("sign", True)) else "gather")
+    if plan_active and straggler == "fail":
+        return "an active fault plan needs a degrade policy: " \
+               "on_straggler=stale_fold or skip"
+    if plan_active and resolved not in ("ring", "gossip"):
+        return f"fault injection gates ring-family hops; sync_impl={sync} " \
+               f"resolves to {resolved}"
+    if straggler != "fail" and resolved not in ("ring", "gossip"):
+        return f"on_straggler={straggler} degrades ring-family hops; " \
+               f"sync_impl={sync} resolves to {resolved}"
+    overlap_on = overlap == "on" or (
+        overlap == "auto" and amp != "off"
+        and int(cell.get("n_buckets", 0)) >= 2)
+    if overlap_on and (sync == "gossip" or participation < 1.0
+                       or plan_active):
+        return "overlap=on runs the monolithic ring-family transports " \
+               "only; no gossip / partial participation / fault injection"
+    fault_surface = (plan is not None or sync == "gossip"
+                     or participation < 1.0 or straggler != "fail")
+    if fault_surface and scheme == "diloco":
+        return "scheme=diloco syncs raw params periodically; it has no " \
+               "per-step ring fault surface"
     # runner-level rules (no FlexConfig counterpart):
     mesh = cell.get("mesh", (1, 1))
     n_mesh = int(mesh[0]) * int(mesh[1])
@@ -327,7 +385,9 @@ def run_cell(cell: dict, telemetry_out: str = "", log=None) -> dict:
         rate=float(cell["rate"]), sync_impl=cell["sync_impl"],
         overlap=cell["overlap"], n_buckets=int(cell["n_buckets"]),
         encode_impl=cell["encode_impl"], idx_layout=cell["idx_layout"],
-        chunk_size=int(cell["chunk_size"]), topk=cell["topk"])
+        chunk_size=int(cell["chunk_size"]), topk=cell["topk"],
+        participation=float(cell["participation"]),
+        on_straggler=cell["on_straggler"], faults=cell["faults"])
     mesh = make_mesh((d, m), ("data", "model"))
     row = C.run_setting(wl, setting, mesh, log=log,
                         telemetry_out=telemetry_out)
@@ -347,6 +407,11 @@ def run_cell(cell: dict, telemetry_out: str = "", log=None) -> dict:
         # compares them exactly on every row carrying this marker
         "wire_deterministic": True,
     }
+    # degraded-transport evidence: a fault-injected cell that never engaged
+    # its degrade policy should be visible in the results row
+    for name in ("fault_hops_stale", "fault_hops_dropped"):
+        if name in row:
+            out[name] = row[name]
     if telemetry_out:
         out.update(_telemetry_summary(telemetry_out))
     return out

@@ -24,10 +24,30 @@ def main():
                     help="DeMo extractor: packed tree-level (one fused call "
                          "+ one collective per step) vs per-leaf reference")
     ap.add_argument("--sync-impl", default="auto",
-                    choices=["auto", "gather", "ring", "psum"],
+                    choices=["auto", "gather", "ring", "psum", "gossip"],
                     help="replication-sync transport: streaming ppermute "
                          "ring (pipelined gather+decode, the auto default "
-                         "with a codec on) vs all_gather vs raw all-reduce")
+                         "with a codec on) vs all_gather vs raw all-reduce "
+                         "vs partial-participation gossip ring "
+                         "(--participation)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="gossip fold fraction p in (0, 1]: each step every "
+                         "replica folds n_sel = max(1, round(p*(R-1))) "
+                         "seeded-random ring hops; 1.0 is bit-identical to "
+                         "--sync-impl ring. p < 1 requires --sync-impl "
+                         "gossip")
+    ap.add_argument("--on-straggler", default="fail",
+                    choices=["fail", "stale_fold", "skip"],
+                    help="per-hop deadline policy under an active "
+                         "--fault-plan: fail = pristine transport (no gating "
+                         "code), stale_fold = fold the last-arrived buffer "
+                         "for missed hops (divisor stays R), skip = drop the "
+                         "hop and renormalize by the arrived count")
+    ap.add_argument("--fault-plan", default="",
+                    help="JSON file with a comms.faults.FaultPlan spec "
+                         "(deterministic seeded failure injection: dead_from "
+                         "/ slow / drop events per replica); requires "
+                         "--on-straggler stale_fold|skip")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route model AND extractor hot paths through the "
                          "fused Pallas kernels")
@@ -116,6 +136,18 @@ def main():
         shape = ((2, d, m) if args.multi_pod else (d, m))
         mesh = make_mesh(shape, axes)
 
+    fault_plan = None
+    if args.fault_plan:
+        from repro.comms import faults as comm_faults
+
+        with open(args.fault_plan) as f:
+            fault_plan = comm_faults.FaultPlan.from_json(f.read())
+        print(f"fault plan: {len(fault_plan.events)} events, "
+              f"deadline x{fault_plan.deadline_factor:g}, "
+              f"policy {args.on_straggler}")
+    fault_kw = dict(participation=args.participation,
+                    on_straggler=args.on_straggler, fault_plan=fault_plan)
+
     plan = make_train_plan(cfg, mesh, args.batch, args.seq,
                            args.microbatches)
     if args.comm_budget > 0:
@@ -141,14 +173,16 @@ def main():
                                    sync_impl=args.sync_impl,
                                    overlap=args.overlap,
                                    n_buckets=args.n_buckets,
-                                   encode_impl=args.encode_impl)
+                                   encode_impl=args.encode_impl,
+                                   **fault_kw)
     else:
         flex = FlexConfig(scheme=args.scheme, rate=args.rate,
                           extract_impl=args.extract_impl,
                           sync_impl=args.sync_impl,
                           overlap=args.overlap,
                           n_buckets=args.n_buckets,
-                          encode_impl=args.encode_impl)
+                          encode_impl=args.encode_impl,
+                          **fault_kw)
     opt = make_optimizer(args.optimizer,
                          schedules.warmup_cosine(args.lr, args.steps),
                          **({} if args.optimizer == "adamw" else

@@ -180,6 +180,44 @@ def test_overhead_from_bench_baseline():
         topology.overhead_from_bench("does/not/exist.json")
 
 
+def test_resolve_overhead_sources(tmp_path):
+    """String sources calibrate from disk; None/CodecOverhead pass through;
+    anything else is a type error and a missing source raises (never a
+    silent zero-overhead fallback)."""
+    ov = topology.CodecOverhead(encode_s_per_byte=1e-9)
+    assert topology.resolve_overhead(None) is None
+    assert topology.resolve_overhead(ov) is ov
+    auto = topology.resolve_overhead("auto")
+    assert auto.encode_s_per_byte > 0
+    assert auto.source == topology.overhead_from_bench().source
+    with pytest.raises(TypeError):
+        topology.resolve_overhead(1.5)
+    with pytest.raises((FileNotFoundError, OSError)):
+        topology.resolve_overhead(str(tmp_path / "missing.json"))
+
+
+def test_solve_calibrated_vs_uncalibrated():
+    """The satellite acceptance: planner.solve accepts a calibration SOURCE
+    (here "auto" = the committed comms-bench baseline) and the calibrated
+    plan prices strictly more comm time than the uncalibrated one for the
+    same bytes — measured codec overhead is a planner default, not a caller
+    chore."""
+    params = _params()
+    budget = 5e-3
+    bare = planner.solve(params, "ethernet-100g", 8, budget_s=budget)
+    cal = planner.solve(params, "ethernet-100g", 8, budget_s=budget,
+                        overhead="auto")
+    flex = dataclasses.replace(cal.flex)
+    p_bare = planner.predict(flex, params, "ethernet-100g", 8)
+    p_cal = planner.predict(flex, params, "ethernet-100g", 8,
+                            overhead="auto")
+    assert p_cal.wire_bytes == p_bare.wire_bytes    # bytes never move
+    assert p_cal.comm_seconds > p_bare.comm_seconds
+    # both plans honour the budget under their own pricing
+    assert bare.feasible and cal.feasible
+    assert cal.comm_seconds_pipelined <= budget
+
+
 def test_predict_intra_node_rides_fast_link():
     params = _params()
     flex = FlexConfig(scheme="demo", chunk_size=64, topk=4)

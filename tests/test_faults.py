@@ -1,0 +1,611 @@
+"""Fault-tolerant elastic replication (comms.faults + the degraded ring).
+
+Covers the whole fault surface of ROADMAP item 2:
+
+  * FaultPlan / FaultEvent: validation, hashability, JSON round-trip, the
+    planner's expected per-hop miss rate;
+  * gossip (partial participation): the seeded per-(step, replica) hop gate,
+    bitwise identity with ``sync_impl="ring"`` at p=1.0 (vmap AND real
+    shard_map lowering), exact subset-mean semantics at p<1;
+  * degrade policies: stale_fold's double-fold semantics (divisor stays R)
+    and skip's arrived-count renormalization, checked against hand-built
+    expectations on the full-sync scheme where sign payloads make the fold
+    arithmetic exact;
+  * traced counters: hops_stale / hops_dropped through the comms.faults
+    side channel and all the way out of a real demo_sgd train step;
+  * pristine-path protection: no plan / participation=1.0 / on_straggler=
+    "fail" is byte-for-byte today's transport;
+  * planner pricing: participation shortens the priced hop chain, an active
+    plan stretches it, wire bytes NEVER change (gossip gates folding, not
+    transfer);
+  * elastic catch-up: the packed momentum blob round-trips bit-exactly and
+    a replica reseeded from it continues the exact trajectory;
+  * config validation at every level (FlexConfig, replicators, the
+    experiment matrix's mirrored compatibility predicate).
+
+Replicas are simulated with vmap over a named axis; the shard_map tests are
+skipped unless the process sees >= 8 devices (the CI ``multidevice`` job).
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.comms import faults, planner
+from repro.core.flexdemo import FlexConfig, communicate_tree
+from repro.core.replicators import base as rbase
+
+R = 4
+
+DEAD1 = faults.FaultPlan(
+    events=(faults.FaultEvent(kind="dead_from", replica=1, step=2),))
+
+
+def _stacked(n_rep, numel=256, seed=0):
+    rng = np.random.RandomState(seed)
+    return {"w": jnp.asarray(rng.randn(n_rep, numel).astype(np.float32)),
+            "b": jnp.asarray(rng.randn(n_rep, 33).astype(np.float32))}
+
+
+def _run_vmap(flex, stacked, step=0, sign=True):
+    """(q, counters) through the vmap replica simulator; the counter window
+    opens INSIDE the traced function (the collector's same-trace contract,
+    exactly how demo_sgd drains it)."""
+    rep = flex.make()
+
+    def f(m):
+        with faults.collect_counters() as fc:
+            q, _, _ = communicate_tree(rep, m, step=jnp.asarray(step),
+                                       axes=("r",), sign=sign)
+        return (q, fc.get("hops_stale", jnp.zeros(())),
+                fc.get("hops_dropped", jnp.zeros(())))
+
+    q, stale, dropped = jax.vmap(f, axis_name="r")(stacked)
+    return q, np.asarray(stale), np.asarray(dropped)
+
+
+def _bitwise_equal(a, b):
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultEvent data model
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        faults.FaultEvent(kind="explode", replica=0)
+    with pytest.raises(ValueError):
+        faults.FaultEvent(kind="drop", replica=-1)
+    with pytest.raises(ValueError):
+        faults.FaultEvent(kind="drop", replica=0, rate=1.5)
+    with pytest.raises(ValueError):
+        faults.FaultEvent(kind="slow", replica=0, factor=0.5)
+
+
+def test_fault_plan_json_round_trip_and_hashable():
+    plan = faults.FaultPlan(
+        events=(faults.FaultEvent(kind="dead_from", replica=1, step=3),
+                faults.FaultEvent(kind="slow", replica=2, factor=4.0),
+                faults.FaultEvent(kind="drop", replica=0, rate=0.25)),
+        seed=7, deadline_factor=3.0, drop_rate=0.01)
+    rt = faults.FaultPlan.from_json(plan.to_json())
+    assert rt == plan
+    assert faults.FaultPlan.from_json(json.dumps(plan.to_json())) == plan
+    hash(plan)                              # frozen: usable in FlexConfig
+    assert plan.active
+    assert not faults.FaultPlan().active
+    with pytest.raises((ValueError, KeyError, TypeError)):
+        faults.FaultPlan.from_json({"events": [], "bogus_field": 1})
+
+
+def test_expected_miss_rate():
+    assert faults.FaultPlan().expected_miss_rate(4) == 0.0
+    assert DEAD1.expected_miss_rate(4) == pytest.approx(1 / 4)
+    drop = faults.FaultPlan(drop_rate=0.1)
+    assert drop.expected_miss_rate(8) == pytest.approx(0.1)
+    # slow events miss only when slower than the plan deadline
+    fast = faults.FaultPlan(
+        events=(faults.FaultEvent(kind="slow", replica=0, factor=1.5),),
+        deadline_factor=2.0)
+    assert fast.expected_miss_rate(4) == 0.0
+
+
+def test_gossip_n_sel_static():
+    assert faults.gossip_n_sel(1.0, 7) == 7
+    assert faults.gossip_n_sel(0.5, 7) == 4          # round(3.5) -> 4
+    assert faults.gossip_n_sel(0.01, 7) == 1         # floor of 1 hop
+    assert faults.gossip_n_sel(1.0, 0) == 0
+    with pytest.raises(ValueError):
+        faults.gossip_n_sel(0.0, 7)
+    with pytest.raises(ValueError):
+        faults.gossip_n_sel(1.5, 7)
+
+
+def test_gossip_gate_selects_exactly_n_sel():
+    for step in (0, 5):
+        for rep in range(4):
+            gate = np.asarray(faults.gossip_gate(
+                jnp.asarray(step), jnp.asarray(rep), 7, 3))
+            assert gate.shape == (7,) and gate.sum() == 3
+    # deterministic: same (step, replica) -> same gate
+    g1 = np.asarray(faults.gossip_gate(jnp.asarray(9), jnp.asarray(2), 7, 3))
+    g2 = np.asarray(faults.gossip_gate(jnp.asarray(9), jnp.asarray(2), 7, 3))
+    np.testing.assert_array_equal(g1, g2)
+
+
+# ---------------------------------------------------------------------------
+# gossip transport
+
+
+@pytest.mark.parametrize("amp", ["fp32", "int8"])
+@pytest.mark.parametrize("scheme", ["demo", "random", "full"])
+def test_gossip_p1_bitwise_identical_to_ring(scheme, amp):
+    """Acceptance: participation=1.0 gates every hop True, and jnp.where
+    with an all-True gate returns the fold branch's exact bits — gossip at
+    p=1.0 IS the ring, bit for bit, on every scheme x codec."""
+    vb = {"fp32": 4, "int8": 1}[amp]
+    stacked = _stacked(8, seed=3)
+    kw = dict(scheme=scheme, rate=1 / 8, codec=amp, value_bytes=vb)
+    qr, _, _ = _run_vmap(FlexConfig(sync_impl="ring", **kw), stacked)
+    qg, _, _ = _run_vmap(FlexConfig(sync_impl="gossip", participation=1.0,
+                                    **kw), stacked)
+    assert _bitwise_equal(qg, qr)
+
+
+def test_gossip_partial_subset_mean_exact():
+    """p < 1: replica r folds own + the origins of its n_sel selected hops,
+    divided by the STATIC 1 + n_sel — reproduced here hop by hop from the
+    same seeded gate the transport draws."""
+    stacked = _stacked(R, seed=5)
+    step = 6
+    q, _, _ = _run_vmap(FlexConfig(scheme="full", sync_impl="gossip",
+                                   participation=0.5), stacked, step=step)
+    n_hops = R - 1
+    n_sel = faults.gossip_n_sel(0.5, n_hops)
+    signs = {k: np.sign(np.asarray(v)) for k, v in stacked.items()}
+    for r in range(R):
+        gate = np.asarray(faults.gossip_gate(
+            jnp.asarray(step), jnp.asarray(r), n_hops, n_sel))
+        for key in stacked:
+            acc = signs[key][r].copy()
+            for j in range(n_hops):
+                if gate[j]:
+                    acc = acc + signs[key][(r - (j + 1)) % R]
+            np.testing.assert_array_equal(np.asarray(q[key])[r],
+                                          (acc / (1 + n_sel)).astype(
+                                              np.float32))
+
+
+def test_gossip_deterministic_and_differs_from_ring():
+    stacked = _stacked(8, seed=7)
+    flex = FlexConfig(scheme="demo", rate=1 / 8, sync_impl="gossip",
+                      participation=0.5)
+    q1, _, _ = _run_vmap(flex, stacked, step=4)
+    q2, _, _ = _run_vmap(flex, stacked, step=4)
+    assert _bitwise_equal(q1, q2)
+    qr, _, _ = _run_vmap(FlexConfig(scheme="demo", rate=1 / 8,
+                                    sync_impl="ring"), stacked, step=4)
+    assert not _bitwise_equal(q1, qr)
+
+
+def test_auto_never_resolves_to_gossip():
+    assert rbase.resolve_sync_impl("auto", "fp32", True) == "ring"
+    assert rbase.resolve_sync_impl("auto", "off", True) == "gather"
+    assert rbase.resolve_sync_impl("gossip", "fp32", True) == "gossip"
+
+
+# ---------------------------------------------------------------------------
+# degrade policies against hand-built expectations (full scheme: the sign
+# payload makes the ternary fold arithmetic exact in any order)
+
+
+def test_stale_fold_double_folds_successor():
+    """Origin d's outgoing links are dead: at the hop whose origin is d the
+    receiver's in-flight buffer still holds the PREVIOUS hop's payload
+    (origin d+1), so d+1 is folded twice and the divisor stays R."""
+    stacked = _stacked(R, seed=9)
+    q, stale, _ = _run_vmap(
+        FlexConfig(scheme="full", sync_impl="ring",
+                   on_straggler="stale_fold", fault_plan=DEAD1),
+        stacked, step=5)
+    d = 1
+    signs = {k: np.sign(np.asarray(v)) for k, v in stacked.items()}
+    for r in range(R):
+        for key in stacked:
+            acc = signs[key][r].copy()
+            for j in range(1, R):
+                o = (r - j) % R
+                acc = acc + signs[key][(o + 1) % R if o == d else o]
+            np.testing.assert_array_equal(
+                np.asarray(q[key])[r], (acc / R).astype(np.float32))
+    # every replica but the dead one misses exactly one hop; the dead
+    # replica's INCOMING links are fine (only its outgoing payload is lost)
+    np.testing.assert_array_equal(stale, [1.0, 0.0, 1.0, 1.0])
+
+
+def test_skip_renormalizes_by_arrived_count():
+    stacked = _stacked(R, seed=11)
+    q, _, dropped = _run_vmap(
+        FlexConfig(scheme="full", sync_impl="ring", on_straggler="skip",
+                   fault_plan=DEAD1),
+        stacked, step=5)
+    d = 1
+    signs = {k: np.sign(np.asarray(v)) for k, v in stacked.items()}
+    for r in range(R):
+        origins = [r] + [o for o in range(R) if o != r and o != d]
+        for key in stacked:
+            exp = np.mean([signs[key][o] for o in origins], axis=0)
+            np.testing.assert_array_equal(np.asarray(q[key])[r],
+                                          exp.astype(np.float32))
+    np.testing.assert_array_equal(dropped, [1.0, 0.0, 1.0, 1.0])
+
+
+def test_faults_gate_on_step():
+    """dead_from step 2: earlier steps run pristine (zero counters, output
+    bit-identical to the no-plan transport)."""
+    stacked = _stacked(R, seed=13)
+    faulted = FlexConfig(scheme="demo", rate=1 / 8, sync_impl="ring",
+                         on_straggler="stale_fold", fault_plan=DEAD1)
+    pristine = FlexConfig(scheme="demo", rate=1 / 8, sync_impl="ring")
+    q0, stale0, _ = _run_vmap(faulted, stacked, step=1)
+    qp, _, _ = _run_vmap(pristine, stacked, step=1)
+    assert stale0.sum() == 0
+    assert _bitwise_equal(q0, qp)
+    q1, stale1, _ = _run_vmap(faulted, stacked, step=2)
+    assert stale1.sum() > 0
+    assert not _bitwise_equal(q1, qp)
+
+
+def test_inactive_plan_and_fail_policy_are_pristine():
+    """on_straggler != "fail" with an INACTIVE plan must not perturb the
+    transport: the gated decode path is compiled out entirely."""
+    stacked = _stacked(R, seed=15)
+    empty = faults.FaultPlan()
+    assert not empty.active
+    qp, _, _ = _run_vmap(FlexConfig(scheme="demo", rate=1 / 8,
+                                    sync_impl="ring"), stacked)
+    qi, stale, dropped = _run_vmap(
+        FlexConfig(scheme="demo", rate=1 / 8, sync_impl="ring",
+                   on_straggler="stale_fold", fault_plan=empty), stacked)
+    assert _bitwise_equal(qi, qp)
+    assert stale.sum() == 0 and dropped.sum() == 0
+
+
+def test_seeded_drop_rate_is_deterministic():
+    plan = faults.FaultPlan(drop_rate=0.5, seed=3)
+    flex = FlexConfig(scheme="full", sync_impl="ring",
+                      on_straggler="skip", fault_plan=plan)
+    stacked = _stacked(R, seed=17)
+    q1, _, d1 = _run_vmap(flex, stacked, step=2)
+    q2, _, d2 = _run_vmap(flex, stacked, step=2)
+    assert _bitwise_equal(q1, q2)
+    np.testing.assert_array_equal(d1, d2)
+    # across many steps SOME hops must drop at rate 0.5
+    total = sum(_run_vmap(flex, stacked, step=s)[2].sum() for s in range(8))
+    assert total > 0
+
+
+def test_counters_require_open_window():
+    assert not faults.counters_active()
+    faults.emit_counter("hops_stale", jnp.ones(()))   # no window: a no-op
+    with faults.collect_counters() as fc:
+        assert faults.counters_active()
+        faults.emit_counter("hops_stale", jnp.ones(()))
+        faults.emit_counter("hops_stale", jnp.ones(()))
+    assert float(fc["hops_stale"]) == 2.0
+    assert not faults.counters_active()
+
+
+# ---------------------------------------------------------------------------
+# multi-axis replica groups (the sender-origin arithmetic over a 2x2 grid)
+
+
+def test_stale_fold_multi_axis_completes():
+    stacked = _stacked(4, seed=19)
+    grid = jax.tree_util.tree_map(
+        lambda x: x.reshape(2, 2, *x.shape[1:]), stacked)
+    flex = FlexConfig(scheme="full", sync_impl="ring",
+                      on_straggler="stale_fold", fault_plan=DEAD1)
+    rep = flex.make()
+
+    def f(m):
+        with faults.collect_counters() as fc:
+            q, _, _ = communicate_tree(rep, m, step=jnp.asarray(5),
+                                       axes=("ra", "rb"), sign=True)
+        return q, fc.get("hops_stale", jnp.zeros(()))
+
+    q, stale = jax.vmap(jax.vmap(f, axis_name="rb"), axis_name="ra")(grid)
+    stale = np.asarray(stale)
+    assert np.isfinite(np.asarray(q["w"])).all()
+    # flat replica 1 = (ra=0, rb=1) under row-major strides; its outgoing
+    # payload is missed once per OTHER replica
+    assert stale.sum() == 3.0
+    assert stale[0, 1] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# demo_sgd end to end: counters drain inside the real update trace
+
+
+def test_demo_sgd_surfaces_fault_counters():
+    from repro.core.optimizers.demo_sgd import demo_sgd
+
+    flex = FlexConfig(scheme="demo", rate=1 / 4, sync_impl="ring",
+                      on_straggler="stale_fold", fault_plan=DEAD1)
+    opt = demo_sgd(0.1, flex)
+    assert "hops_stale" in opt.telemetry_metrics
+    params = {"w": jnp.zeros((R, 64), jnp.float32)}
+    grads = {"w": jnp.asarray(
+        np.random.RandomState(0).randn(R, 64).astype(np.float32))}
+
+    def f(g, p):
+        state = opt.init(p)
+        state["step"] = jnp.asarray(3, jnp.int32)
+        _, _, aux = opt.update(g, state, p, axes=("r",))
+        return aux.extras["hops_stale"]
+
+    stale = np.asarray(jax.vmap(f, axis_name="r")(grads, params))
+    assert stale.sum() > 0
+
+    # pristine config: no fault metrics, extras untouched
+    opt0 = demo_sgd(0.1, FlexConfig(scheme="demo", rate=1 / 4))
+    assert "hops_stale" not in opt0.telemetry_metrics
+
+
+# ---------------------------------------------------------------------------
+# validation: FlexConfig, replicators, and the matrix mirror
+
+
+@pytest.mark.parametrize("bad", [
+    dict(participation=0.0),
+    dict(participation=1.5),
+    dict(participation=0.5),                       # p < 1 needs gossip
+    dict(sync_impl="gossip", codec="off"),
+    dict(on_straggler="sometimes"),
+    dict(fault_plan=DEAD1),                        # active plan needs policy
+    dict(fault_plan=DEAD1, on_straggler="stale_fold", sync_impl="psum",
+         codec="off"),                             # no hops to gate
+    dict(scheme="diloco", sync_impl="gossip"),
+    dict(scheme="none", on_straggler="skip"),
+    dict(sync_impl="gossip", overlap="on"),        # monolithic only
+    dict(fault_plan=DEAD1, on_straggler="skip", overlap="on"),
+])
+def test_flexconfig_rejects_bad_fault_configs(bad):
+    with pytest.raises((ValueError, TypeError)):
+        FlexConfig(**bad)
+
+
+def test_replicator_level_validation_matches():
+    from repro.core.replicators import make_replicator
+
+    with pytest.raises(ValueError):
+        make_replicator("demo", participation=0.5)
+    with pytest.raises(ValueError):
+        make_replicator("full", fault_plan=DEAD1)
+    rep = make_replicator("full", impl="gossip", participation=0.5)
+    assert rep.params_diverge
+
+
+def test_params_diverge_surface():
+    assert not FlexConfig(scheme="demo").make().params_diverge
+    assert not FlexConfig(scheme="demo", sync_impl="gossip").make() \
+        .params_diverge                            # p=1.0 == ring
+    assert FlexConfig(scheme="demo", sync_impl="gossip",
+                      participation=0.5).make().params_diverge
+    assert FlexConfig(scheme="demo", sync_impl="ring",
+                      on_straggler="stale_fold",
+                      fault_plan=DEAD1).make().params_diverge
+    assert not FlexConfig(scheme="demo", sync_impl="ring",
+                          on_straggler="stale_fold",
+                          fault_plan=faults.FaultPlan()).make().params_diverge
+
+
+def test_matrix_compatibility_mirrors_flexconfig():
+    """Property sweep over the fault knobs: the matrix predicate and
+    FlexConfig construction must agree combo for combo (the lockstep
+    contract the matrix docstring promises)."""
+    import warnings
+
+    from repro.experiments import matrix
+
+    plan_json = DEAD1.to_json()
+    for sync in matrix.SYNC_IMPLS:
+        for codec in ("fp32", "off"):
+            for p in (1.0, 0.5):
+                for strag in matrix.ON_STRAGGLER_MODES:
+                    for fspec in ("", json.dumps(plan_json)):
+                        cell = dict(matrix.CELL_DEFAULTS,
+                                    workload="lm", scheme="full",
+                                    codec=codec, sync_impl=sync,
+                                    participation=p, on_straggler=strag,
+                                    faults=fspec, mesh=[2, 4], devices=8)
+                        reason = matrix.compatibility(cell)
+                        fp = (faults.FaultPlan.from_json(fspec)
+                              if fspec else None)
+                        try:
+                            with warnings.catch_warnings():
+                                warnings.simplefilter("ignore")
+                                FlexConfig(scheme="full", codec=codec,
+                                           sync_impl=sync, participation=p,
+                                           on_straggler=strag, fault_plan=fp)
+                            ok = True
+                        except (ValueError, TypeError):
+                            ok = False
+                        assert ok == (reason is None), \
+                            (sync, codec, p, strag, bool(fspec), reason)
+
+
+# ---------------------------------------------------------------------------
+# planner pricing
+
+
+def test_planner_prices_participation_not_wire():
+    ring = planner.predict(FlexConfig(scheme="demo", sync_impl="ring"),
+                           500_000, "ethernet-100g", 8)
+    g1 = planner.predict(FlexConfig(scheme="demo", sync_impl="gossip"),
+                         500_000, "ethernet-100g", 8)
+    g5 = planner.predict(FlexConfig(scheme="demo", sync_impl="gossip",
+                                    participation=0.5),
+                         500_000, "ethernet-100g", 8)
+    # wire bytes are transfer, not folding: EXACTLY equal at any p
+    assert g5.wire_bytes == g1.wire_bytes == ring.wire_bytes
+    assert g1.comm_seconds_pipelined == ring.comm_seconds_pipelined
+    assert g5.comm_seconds_pipelined < ring.comm_seconds_pipelined
+    assert g5.participation == 0.5 and g5.quality < g1.quality
+    assert g5.to_json()["participation"] == 0.5
+
+
+def test_planner_prices_straggler_stretch():
+    base_ = planner.predict(FlexConfig(scheme="demo", sync_impl="ring"),
+                            500_000, "ethernet-100g", 8)
+    plan = faults.FaultPlan(
+        events=(faults.FaultEvent(kind="dead_from", replica=0),),
+        deadline_factor=3.0)
+    faulted = planner.predict(
+        FlexConfig(scheme="demo", sync_impl="ring",
+                   on_straggler="stale_fold", fault_plan=plan),
+        500_000, "ethernet-100g", 8)
+    rate = plan.expected_miss_rate(8)
+    assert faulted.straggler_rate == pytest.approx(rate)
+    assert faulted.comm_seconds == pytest.approx(
+        base_.comm_seconds * (1 + rate * 2.0))
+
+
+# ---------------------------------------------------------------------------
+# elastic membership: deterministic catch-up from the packed momentum blob
+
+
+def test_momentum_blob_round_trip_bitwise():
+    rng = np.random.RandomState(2)
+    tree = {"a": jnp.asarray(rng.randn(17, 3).astype(np.float32)),
+            "b": {"c": jnp.asarray(rng.randn(40).astype(np.float32))}}
+    blob = ckpt_io.pack_momentum_blob(tree)
+    assert blob.dtype == jnp.uint8
+    out = ckpt_io.seed_momentum_from_blob(blob, tree)
+    assert _bitwise_equal(out, tree)
+
+
+def test_momentum_blob_rejects_mismatch_and_tamper():
+    tree = {"a": jnp.ones((8,), jnp.float32)}
+    blob = np.asarray(ckpt_io.pack_momentum_blob(tree))
+    with pytest.raises(ValueError):
+        ckpt_io.seed_momentum_from_blob(blob, {"a": jnp.ones((9,))})
+    bad = blob.copy()
+    bad[0] ^= 0xFF                                  # corrupt the magic
+    with pytest.raises(ValueError):
+        ckpt_io.seed_momentum_from_blob(bad, tree)
+
+
+def test_rejoining_replica_continues_exact_trajectory():
+    """The elastic-membership invariant: a replica that reseeds its momentum
+    from a peer's packed blob continues EXACTLY the trajectory it would have
+    had without leaving — same bits, step for step."""
+    from repro.core.optimizers.demo_sgd import demo_sgd
+
+    flex = FlexConfig(scheme="demo", rate=1 / 4)
+    opt = demo_sgd(0.05, flex)
+    params = {"w": jnp.asarray(
+        np.random.RandomState(1).randn(R, 48).astype(np.float32))}
+
+    def steps(n, state, p, start=0):
+        for i in range(n):
+            g = jax.vmap(lambda key: {"w": jax.random.normal(key, (48,))})(
+                jax.random.split(jax.random.PRNGKey(100 + start + i), R))
+
+            def upd(gg, ss, pp):
+                u, s2, _ = opt.update(gg, ss, pp, axes=("r",))
+                return u["w"], s2
+            u, state = jax.vmap(upd, axis_name="r")(g, state, p)
+            p = {"w": p["w"] + u}
+        return state, p
+
+    state0 = jax.vmap(opt.init)(params)
+    state_a, p_a = steps(3, state0, params)
+    # replica 2 "leaves": reseed its momentum slice from replica 0's blob
+    # (in a real deployment the blob ships over the wire; here it's the
+    # same bits by construction, so catch-up must be a perfect no-op)
+    blob = ckpt_io.pack_momentum_blob(
+        jax.tree_util.tree_map(lambda x: x[2], state_a["m"]))
+    reseeded = ckpt_io.seed_momentum_from_blob(
+        blob, jax.tree_util.tree_map(lambda x: x[2], state_a["m"]))
+    state_b = dict(state_a)
+    state_b["m"] = jax.tree_util.tree_map(
+        lambda full, one: full.at[2].set(one), state_a["m"], reseeded)
+    sa, pa = steps(2, state_a, p_a, start=3)
+    sb, pb = steps(2, state_b, p_a, start=3)
+    assert _bitwise_equal(pa, pb)
+    assert _bitwise_equal(sa["m"], sb["m"])
+
+
+# ---------------------------------------------------------------------------
+# shard_map on a real 8-device mesh (CI multidevice job)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (run under XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_gossip_p1_matches_ring_under_shard_map():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.utils import compat
+
+    mesh = compat.make_mesh((8,), ("r",))
+    rng = np.random.RandomState(23)
+    stacked = {"w": jnp.asarray(rng.randn(8, 64, 5).astype(np.float32))}
+
+    def run(sync, p):
+        rep = FlexConfig(scheme="demo", rate=1 / 8, sync_impl=sync,
+                         participation=p).make()
+
+        def f(m):
+            q, _, _ = communicate_tree(
+                rep, jax.tree_util.tree_map(lambda x: x[0], m),
+                step=jnp.asarray(0), axes=("r",), sign=True)
+            return jax.tree_util.tree_map(lambda x: x[None], q)
+
+        spec = jax.tree_util.tree_map(lambda _: P("r"), stacked)
+        return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(spec,),
+                                        out_specs=spec))(stacked)
+
+    qr = jax.device_get(run("ring", 1.0))
+    qg = jax.device_get(run("gossip", 1.0))
+    assert _bitwise_equal(qg, qr)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (run under XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_dead_replica_stale_fold_completes_under_shard_map():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.utils import compat
+
+    mesh = compat.make_mesh((8,), ("r",))
+    rng = np.random.RandomState(29)
+    stacked = {"w": jnp.asarray(rng.randn(8, 130).astype(np.float32))}
+    plan = faults.FaultPlan(
+        events=(faults.FaultEvent(kind="dead_from", replica=3, step=0),))
+    rep = FlexConfig(scheme="demo", rate=1 / 8, sync_impl="ring",
+                     on_straggler="stale_fold", fault_plan=plan).make()
+
+    def f(m):
+        with faults.collect_counters() as fc:
+            q, _, _ = communicate_tree(
+                rep, jax.tree_util.tree_map(lambda x: x[0], m),
+                step=jnp.asarray(1), axes=("r",), sign=True)
+        return (jax.tree_util.tree_map(lambda x: x[None], q),
+                fc.get("hops_stale", jnp.zeros(()))[None])
+
+    spec = jax.tree_util.tree_map(lambda _: P("r"), stacked)
+    q, stale = jax.jit(compat.shard_map(
+        f, mesh=mesh, in_specs=(spec,), out_specs=(spec, P("r"))))(stacked)
+    stale = np.asarray(stale)
+    assert np.isfinite(np.asarray(q["w"])).all()
+    assert stale.sum() == 7.0 and stale[3] == 0.0

@@ -170,7 +170,7 @@ def test_committed_smoke_spec_shape():
     from repro.experiments import matrix
 
     spec = matrix.load_spec(SMOKE_SPEC)
-    assert 8 <= len(spec.cells) <= 16
+    assert 8 <= len(spec.cells) <= 20
     domains = {c["workload_cfg"]["domain"] for c in spec.cells}
     assert domains == {"lm", "vit"}
     runnable = [c for c in spec.cells if matrix.compatibility(c) is None]
@@ -179,6 +179,16 @@ def test_committed_smoke_spec_shape():
                if matrix.compatibility(c) is not None]
     assert len(reasons) >= 3
     assert len(set(reasons)) == len(reasons)    # distinct rule families
+    # the fault-tolerance slice: a gossip cell at p=1.0 AND p<1, a
+    # fault-injected degraded-ring cell, and at least one fault-family
+    # skip row (rule mirror coverage)
+    assert any(c["sync_impl"] == "gossip" and c["participation"] == 1.0
+               for c in runnable)
+    assert any(c["sync_impl"] == "gossip" and c["participation"] < 1.0
+               for c in runnable)
+    assert any(c["faults"] and c["on_straggler"] == "stale_fold"
+               for c in runnable)
+    assert any("fault surface" in r or "on_straggler" in r for r in reasons)
 
 
 # ---------------------------------------------------------------------------
@@ -432,6 +442,44 @@ def test_run_python_captures_and_times_out():
         ["-c", "import time; time.sleep(30)"], env=dict(os.environ),
         timeout=0.5)
     assert rc == 124 and "timeout" in err
+
+
+def test_hanging_cell_records_rc124_error_row_and_reruns_on_resume(tmp_path):
+    """Fault-tolerance for the RUNNER itself: a cell whose child genuinely
+    hangs (a real subprocess sleeping far past the deadline) must come back
+    as an rc-124 error row — not wedge the sweep — and the next resume must
+    re-launch exactly that cell and convert it to ok."""
+    import time
+
+    from repro.experiments import matrix
+    from repro.launch import subproc
+
+    spec = matrix.load_spec(_tiny_spec())
+    out = str(tmp_path / "r.jsonl")
+    launched = []
+
+    def launcher(cell, tm):
+        launched.append(cell["scheme"])
+        if cell["scheme"] == "random" and launched.count("random") == 1:
+            rc, _, err = subproc.run_python(
+                ["-c", "import time; time.sleep(60)"],
+                env=subproc.cell_env(devices=0), timeout=1.0)
+            raise matrix.MatrixError(f"cell subprocess rc={rc}: "
+                                     f"{err.strip()}")
+        return _fake_body(cell, tm)
+
+    t0 = time.monotonic()
+    s1 = matrix.run_sweep(spec, out, launcher=launcher, log=lambda *_: None)
+    assert time.monotonic() - t0 < 30           # the deadline bit, not the
+    assert (s1["ok"], s1["errors"]) == (1, 1)   # child's 60 s sleep
+    err = [r for r in matrix.read_results(out) if r.get("status") == "error"]
+    assert len(err) == 1
+    assert "rc=124" in err[0]["error"] and "timeout after" in err[0]["error"]
+    s2 = matrix.run_sweep(spec, out, launcher=launcher, log=lambda *_: None)
+    assert launched == ["demo", "random", "random"]  # ONLY the hung cell
+    assert (s2["ok"], s2["resumed"]) == (1, 1)
+    assert not [r for r in matrix.completed_cells(matrix.read_results(out))
+                .values() if r.get("status") == "error"]
 
 
 # ---------------------------------------------------------------------------

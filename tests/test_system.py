@@ -112,3 +112,61 @@ def test_checkpoint_roundtrip(tmp_path):
     from repro.utils.tree import tree_allclose
 
     assert tree_allclose(params, restored)
+
+
+def test_checkpoint_crash_mid_save_keeps_previous_restorable(tmp_path,
+                                                            monkeypatch):
+    """Atomic-write contract: a crash ANYWHERE inside save() — here while
+    the payload is still streaming to the temp file — must leave latest()
+    pointing at the previous, fully intact checkpoint."""
+    from repro.checkpoint import io as ckpt
+    from repro.utils.tree import tree_allclose
+
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    ckpt.save(str(tmp_path / "ckpt_1"), params, step=1)
+
+    def torn_savez(path, **arrays):
+        with open(path, "wb") as f:
+            f.write(b"PK\x03\x04 torn")          # partial bytes, then die
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt.np, "savez", torn_savez)
+    with pytest.raises(OSError):
+        ckpt.save(str(tmp_path / "ckpt_2"), params, step=2)
+    monkeypatch.undo()
+
+    # the torn temp file never got promoted and no ckpt_2 index exists
+    assert not (tmp_path / "ckpt_2.npz").exists()
+    assert not (tmp_path / "ckpt_2.json").exists()
+    step, path = ckpt.latest(str(tmp_path))
+    assert step == 1
+    restored, rstep = ckpt.restore(path, params)
+    assert rstep == 1 and tree_allclose(params, restored)
+
+
+def test_checkpoint_crash_between_payload_and_index(tmp_path, monkeypatch):
+    """Worst torn state: the .npz promoted but the crash hit before the
+    .json index landed.  latest() keys on the index, so the directory still
+    resolves to the previous checkpoint."""
+    import json as _json
+
+    from repro.checkpoint import io as ckpt
+    from repro.utils.tree import tree_allclose
+
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    ckpt.save(str(tmp_path / "ckpt_1"), params, step=1)
+
+    def crash_dump(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt.json, "dump", crash_dump)
+    with pytest.raises(OSError):
+        ckpt.save(str(tmp_path / "ckpt_2"), params, step=2)
+    monkeypatch.setattr(ckpt.json, "dump", _json.dump)
+
+    assert (tmp_path / "ckpt_2.npz").exists()      # payload DID land...
+    assert not (tmp_path / "ckpt_2.json").exists()  # ...but is unreferenced
+    step, path = ckpt.latest(str(tmp_path))
+    assert step == 1
+    restored, rstep = ckpt.restore(path, params)
+    assert rstep == 1 and tree_allclose(params, restored)
