@@ -47,7 +47,7 @@ def main() -> None:
                          "fig11_chunk, fig13_dtype, fig10_bandwidth, "
                          "fig5_6_scaling, fig2a_t5_true_encdec, kernels, "
                          "packed_extraction, comms, overlap, matrix, "
-                         "convergence, telemetry, roofline")
+                         "convergence, telemetry, roofline, serving")
     ap.add_argument("--json", default="",
                     help="write a machine-readable run summary to PATH")
     ap.add_argument("--smoke", action="store_true",
@@ -77,8 +77,8 @@ def main() -> None:
                             bench_convergence, bench_dtype, bench_encdec,
                             bench_kernels, bench_matrix, bench_overlap,
                             bench_packed, bench_replicators, bench_scaling,
-                            bench_sign, bench_telemetry, bench_topk,
-                            roofline)
+                            bench_serving, bench_sign, bench_telemetry,
+                            bench_topk, roofline)
 
     bench("fig1_replicators_sgd_vs_adamw",
           lambda: bench_replicators.run(
@@ -177,6 +177,15 @@ def main() -> None:
           lambda r: f"rows={len(r)}," + (
               "dominant=" + ",".join(sorted(set(x["dominant"] for x in r)))
               if r else "no-artifacts"))
+
+    # continuous batching vs sequential static batches on the smoke traffic
+    # mix; request/token counts exact, compiles_after_warmup must be 0
+    # (gated by scripts/check_serving.py against experiments/bench/serving.json)
+    bench("serving", bench_serving.run,
+          lambda r: (f"speedup={r[0]['speedup_vs_sequential']:.2f}x,"
+                     f"tok/s={r[0]['tokens_per_s']:.0f},"
+                     f"occ={r[0]['occupancy']:.2f},"
+                     f"compiles={r[0]['compiles_after_warmup']}"))
 
     print(f"# total {time.perf_counter() - t_all:.1f}s")
     if args.json:

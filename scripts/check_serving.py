@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""Serving-bench gate: compare a fresh ``benchmarks/run.py --only serving
+--json`` summary against the committed ``experiments/bench/serving.json``.
+
+Checks, per row (matched by ``setting``):
+
+  * exact      -- ``requests`` / ``admitted`` / ``rejected`` / ``tokens`` /
+                  ``compiles_after_warmup``.  The traffic trace is seeded and
+                  EOS-free, so these are platform-independent counts; any
+                  drift means the scheduler, the traffic stream, or the lane
+                  pool changed behavior.  ``compiles_after_warmup`` must be
+                  exactly 0 — the continuous-batching contract.
+  * throughput -- ``tokens_per_s`` must stay above ``tol * baseline``
+                  (machine-dependent; catches order-of-magnitude rot only).
+  * latency    -- ``ttft_p50_ms`` / ``ttft_p99_ms`` / ``tok_p50_ms`` /
+                  ``tok_p99_ms`` must stay below ``baseline / tol`` (same
+                  slack, upper-bounded).
+  * speedup    -- the CURRENT continuous row's ``speedup_vs_sequential``
+                  must be >= ``--min-speedup`` (default 1.5).  Both sides of
+                  the ratio ran on the same machine in the same process, so
+                  unlike the timings it is NOT baseline-relative.
+
+Usage:
+  python scripts/check_serving.py CURRENT.json
+      [--baseline experiments/bench/serving.json] [--tol 0.1]
+      [--min-speedup 1.5] [--update]
+
+``--update`` rewrites the baseline from CURRENT.json (after an intentional
+traffic-mix or scheduler change; re-run ``benchmarks/run.py --only serving
+--json ...`` first).
+
+Exit status: 0 = gate passed, 1 = regression (printed), 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+EXACT = ("requests", "admitted", "rejected", "tokens",
+         "compiles_after_warmup")
+LATENCY = ("ttft_p50_ms", "ttft_p99_ms", "tok_p50_ms", "tok_p99_ms")
+
+
+class CheckError(Exception):
+    """Malformed input (usage error, exit 2) — never a traceback."""
+
+
+def load_rows(path: str) -> list:
+    """Serving rows from a run.py --json summary or a bare row list."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        raise CheckError(f"{path}: cannot read ({e})")
+    except json.JSONDecodeError as e:
+        raise CheckError(f"{path}: not valid JSON ({e})")
+    if isinstance(data, dict) and "results" in data:
+        for r in data["results"]:
+            if isinstance(r, dict) and r.get("name") == "serving":
+                return r["rows"]
+        raise CheckError(f"{path}: no 'serving' entry in the summary — run "
+                         "benchmarks/run.py --only serving --json PATH")
+    if isinstance(data, list):
+        return data
+    raise CheckError(f"{path}: neither a run.py summary nor a row list")
+
+
+def _index(rows: list, failures: list) -> dict:
+    out = {}
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            continue
+        key = str(row.get("setting", f"#{i}"))
+        if key in out:
+            failures.append(f"serving[{key}]: duplicate row key")
+        out[key] = row
+    return out
+
+
+def compare(current: list, baseline: list, tol: float,
+            min_speedup: float) -> list:
+    failures: list = []
+    cur = _index(current, failures)
+    base = _index(baseline, failures)
+    for key, brow in base.items():
+        crow = cur.get(key)
+        if crow is None:
+            failures.append(f"serving[{key}]: row disappeared from the bench")
+            continue
+        for field in EXACT:
+            bval, cval = brow.get(field), crow.get(field)
+            if bval is None:
+                continue
+            if cval is None or int(cval) != int(bval):
+                failures.append(
+                    f"serving[{key}].{field}: exact count changed "
+                    f"{bval} -> {cval} (seeded trace; refresh with --update "
+                    "if the traffic mix changed intentionally)")
+        bval, cval = brow.get("tokens_per_s"), crow.get("tokens_per_s")
+        if isinstance(bval, (int, float)) and bval > 0:
+            if not isinstance(cval, (int, float)) or cval < tol * bval:
+                failures.append(
+                    f"serving[{key}].tokens_per_s: {cval} below "
+                    f"{tol:g} x baseline {bval:.1f}")
+        for field in LATENCY:
+            bval, cval = brow.get(field), crow.get(field)
+            if not isinstance(bval, (int, float)) or bval <= 0:
+                continue
+            if not isinstance(cval, (int, float)) or cval > bval / tol:
+                failures.append(
+                    f"serving[{key}].{field}: latency {cval} above "
+                    f"baseline {bval:.3f} / {tol:g}")
+    crow = cur.get("continuous")
+    if crow is None:
+        failures.append("serving[continuous]: row missing from the bench")
+    else:
+        sp = crow.get("speedup_vs_sequential")
+        if not isinstance(sp, (int, float)) or sp < min_speedup:
+            failures.append(
+                f"serving[continuous].speedup_vs_sequential: {sp} below the "
+                f"required {min_speedup:g}x (continuous batching must beat "
+                "naive sequential static batches)")
+        if crow.get("compiles_after_warmup") != 0:
+            failures.append(
+                "serving[continuous].compiles_after_warmup: "
+                f"{crow.get('compiles_after_warmup')} != 0 — the lane pool "
+                "retraced under traffic")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("current",
+                    help="summary written by benchmarks/run.py --json")
+    ap.add_argument("--baseline", default="experiments/bench/serving.json")
+    ap.add_argument("--tol", type=float, default=0.1,
+                    help="tokens_per_s floor / latency ceiling factor vs "
+                    "baseline (default 0.1: order-of-magnitude rot only)")
+    ap.add_argument("--min-speedup", type=float, default=1.5,
+                    help="required continuous/sequential tokens_per_s ratio "
+                    "from the CURRENT run (same-machine, not vs baseline)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from CURRENT")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"error: {args.current} not found", file=sys.stderr)
+        return 2
+    try:
+        rows = load_rows(args.current)
+        if args.update:
+            os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
+            with open(args.baseline, "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            print(f"updated baseline {args.baseline} ({len(rows)} rows)")
+            return 0
+        try:
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        except OSError as e:
+            raise CheckError(f"{args.baseline}: cannot read ({e}); create "
+                             "it with --update")
+        except json.JSONDecodeError as e:
+            raise CheckError(f"{args.baseline}: not valid JSON ({e})")
+        if not isinstance(baseline, list):
+            raise CheckError(f"{args.baseline}: not a row list; re-create "
+                             "with --update")
+        failures = compare(rows, baseline, args.tol, args.min_speedup)
+    except CheckError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if failures:
+        print(f"SERVING REGRESSION: {len(failures)} check(s) failed")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print("serving gate: OK (counts exact, zero recompiles, speedup and "
+          "throughput within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

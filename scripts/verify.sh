@@ -6,7 +6,10 @@
 #   3. the quick kernel microbench (Pallas-interpret vs jnp oracles),
 #   4. the packed-vs-per-leaf extraction comparison (must stay bit-compatible),
 #   5. a smoke run of the benchmark runner entrypoint (so benchmarks/run.py
-#      and its imports can't silently rot between full bench runs).
+#      and its imports can't silently rot between full bench runs),
+#   6. the serving bench in smoke mode (continuous-batching lane pool vs the
+#      sequential baseline; in-bench asserts pin zero recompiles after
+#      warmup and equal token counts between the two schedulers).
 # Usage: scripts/verify.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -47,3 +50,4 @@ EOF
 # scripts/check_bench.py) are never overwritten with 2-rep smoke timings.
 BENCH_OUT="$(mktemp -d)" python benchmarks/run.py --only packed_extraction --smoke
 BENCH_OUT="$(mktemp -d)" python benchmarks/run.py --only comms --smoke
+BENCH_OUT="$(mktemp -d)" python benchmarks/run.py --only serving --smoke

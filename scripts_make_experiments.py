@@ -417,6 +417,71 @@ def matrix_section():
         "to witness resume-from-partial: byte-identical prefix, zero "
         "re-execution) and `scripts/check_matrix.py` gates status, skip "
         "reasons, and exact wire bytes against this baseline.",
+        "",
+        "### Nightly full sweep (experiments/matrix/full.json)",
+        "",
+        "The nightly workflow (.github/workflows/nightly.yml; also "
+        "manually dispatchable with a `max_cells` cap) drives the full "
+        "spec: one workload per supported arch — 14 archs spanning dense, "
+        "MoE, sliding-window, hybrid-recurrent (rglru), RWKV, "
+        "encoder-decoder, vision, audio, and VLM, each on its "
+        "arch-appropriate `domain=\"auto\"` synthetic stream — crossed "
+        "with two mesh topologies (2x4 on 8 fake devices, 2x2 on 4) = 28 "
+        "cells. Each nightly run is split into a capped slice plus a "
+        "resume, so the resume protocol is re-witnessed against the full "
+        "spec every night, and any cell error fails the workflow.",
+    ]
+    return "\n".join(lines)
+
+
+def serving_section():
+    """The continuous-batching serving layer (serving/scheduler.py +
+    serving/traffic.py, gated by scripts/check_serving.py + the CI
+    `serving-smoke` job)."""
+    rows = bench("serving")
+    lines = [
+        "## §Serving — continuous-batching lane pool (baseline: "
+        "experiments/bench/serving.json)",
+        "",
+        "One jitted decode step drives a fixed-shape lane pool — "
+        "`(n_lanes, 1)` tokens + per-lane `(n_lanes,)` positions — and a "
+        "vacated lane is refilled by a bucketed prefill + cache injection "
+        "into the pool's decode state, so admission never retraces "
+        "(trace-counter witness: `compiles_after_warmup` must be exactly "
+        "0, asserted in tests/test_serving.py, by launch/serve.py itself, "
+        "and by the CI gate). Traffic is a seeded Poisson process in "
+        "virtual ticks with discrete prompt/output-length mixtures "
+        "(serving/traffic.py) and the smoke preset is EOS-free, so "
+        "request/token counts are platform-independent and gated "
+        "EXACTLY. The sequential baseline runs the SAME compiled pool "
+        "programs over static batches in arrival order — the speedup "
+        "isolates the scheduling win, and both schedulers must emit "
+        "identical token streams (asserted in-bench).",
+        "",
+        "| setting | tok/s | speedup | occupancy | ttft p50/p99 ms | "
+        "tok p50/p99 ms | compiles |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        sp = (f"{r['speedup_vs_sequential']:.2f}x"
+              if "speedup_vs_sequential" in r else "—")
+        lines.append(
+            f"| {r['setting']} | {r['tokens_per_s']:.0f} | {sp} | "
+            f"{r['occupancy']:.2f} | {r['ttft_p50_ms']:.0f}/"
+            f"{r['ttft_p99_ms']:.0f} | {r['tok_p50_ms']:.2f}/"
+            f"{r['tok_p99_ms']:.2f} | {r['compiles_after_warmup']} |")
+    if not rows:
+        lines.append("| (pending: run benchmarks/run.py --only serving) "
+                     "| | | | | | |")
+    lines += [
+        "",
+        "Gate semantics (scripts/check_serving.py): request / admitted / "
+        "rejected / token counts and `compiles_after_warmup` exact vs the "
+        "committed baseline; tokens/sec and latency percentiles within a "
+        "loose machine-tolerance; `speedup_vs_sequential >= 1.5x` from "
+        "the CURRENT run (both sides same-machine, so not "
+        "baseline-relative). Refresh after an intentional traffic-mix or "
+        "scheduler change with `--update`.",
     ]
     return "\n".join(lines)
 
@@ -588,6 +653,7 @@ def main():
         matrix_section(),
         faults_section(),
         overlap_section(),
+        serving_section(),
         perf_section(),
         extensions_section(),
     ]

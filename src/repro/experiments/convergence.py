@@ -160,6 +160,14 @@ class Workload:
         return cfg
 
     def stream(self):
+        if self.domain == "auto":
+            # arch-appropriate synthetic stream (vision patches, audio
+            # frames, VLM embeddings+mrope, seq2seq, bigram tokens) — the
+            # nightly all-arch matrix sweep rides this
+            from repro.data.synthetic import make_stream
+
+            return make_stream(self.config(), self.batch, self.seq,
+                               seed=self.seed)
         if self.domain == "vit":
             s = SyntheticImages(n_classes=self.n_classes,
                                 d_model=self.d_model,

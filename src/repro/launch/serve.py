@@ -1,22 +1,46 @@
-"""Production serving launcher: batched decode against the flash-decode
-engine (seq-sharded KV cache / recurrent state).
+"""Production serving launcher: continuous-batching traffic over the
+lane-pool scheduler, or a raw static-batch decode loop.
+
+Traffic mode (the serving smoke CI job):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
-      --batch 4 --max-len 64 --tokens 16 --fake-devices 8
+      --traffic smoke --n-lanes 4 --max-queue 64 --max-len 64 \
+      --mesh 2x4 --fake-devices 8 --telemetry-out /tmp/serve.jsonl
+
+streams per-request tokens, emits one telemetry `request` event per
+request, prints a summary line, and ASSERTS zero recompiles after warmup
+(the compile-count witness).  Static mode (the original launcher) stays
+available via --tokens without --traffic.
 """
 import argparse
+import json
 import os
+import sys
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static mode: batch size")
     ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16,
+                    help="static mode: tokens to decode")
     ap.add_argument("--mesh", default="2x4")
     ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--traffic", default=None,
+                    help="traffic preset name (smoke/burst/prop200): run the "
+                         "continuous-batching scheduler instead of one "
+                         "static batch")
+    ap.add_argument("--n-lanes", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--buckets", default="8,16",
+                    help="prefill prompt-length buckets, comma-separated")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each (rid, token) as generated")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="JSONL path for per-request telemetry events")
     args = ap.parse_args()
     if args.fake_devices:
         os.environ["XLA_FLAGS"] = (
@@ -42,9 +66,55 @@ def main():
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_mesh((d, m), ("data", "model"))
 
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    if args.traffic is not None:
+        from repro import telemetry
+        from repro.serving import traffic as traffic_mod
+        from repro.serving.scheduler import LanePool, Scheduler
+
+        spec = traffic_mod.SPECS[args.traffic]
+        reqs = traffic_mod.generate(spec, cfg.vocab_size)
+        pool = LanePool(
+            cfg, params, n_lanes=args.n_lanes, max_len=args.max_len,
+            buckets=tuple(int(b) for b in args.buckets.split(",")),
+            mesh=mesh)
+        t0 = time.perf_counter()
+        pool.warmup()
+        print(f"warmup: {pool.trace_count()} traces "
+              f"({time.perf_counter() - t0:.1f}s) on "
+              f"{len(jax.devices())} devices")
+
+        recorder = None
+        if args.telemetry_out:
+            recorder = telemetry.Recorder(
+                sinks=[telemetry.JsonlSink(args.telemetry_out)],
+                manifest={"kind": "serving", "arch": args.arch,
+                          "traffic": spec.name, "n_lanes": args.n_lanes,
+                          "max_queue": args.max_queue,
+                          "max_len": args.max_len})
+        on_token = None
+        if args.stream:
+            on_token = lambda rid, tok: print(f"  rid={rid} tok={tok}")
+        sched = Scheduler(pool, max_queue=args.max_queue,
+                          eos_id=spec.eos_id, recorder=recorder,
+                          on_token=on_token)
+        report = sched.serve(reqs)
+        m = report.metrics()
+        if recorder is not None:
+            recorder.emit({"event": "summary", **m})
+            recorder.close()
+        print("serving summary: " + json.dumps(m))
+        print(f"admitted={m['admitted']} rejected={m['rejected']} "
+              f"tokens={m['tokens']} tokens_per_s={m['tokens_per_s']} "
+              f"compiles_after_warmup={m['compiles_after_warmup']}")
+        if m["compiles_after_warmup"] != 0:
+            print("FAIL: lane pool retraced after warmup", file=sys.stderr)
+            sys.exit(1)
+        return
+
     plan = make_serve_plan(cfg, mesh, args.batch, args.max_len)
     step, *_ = build_serve_step(cfg, mesh, plan, donate=False)
-    params = init_model(jax.random.PRNGKey(0), cfg)
     state = transformer.init_decode_state(cfg, args.batch, plan.max_len)
     tok = (jnp.zeros((args.batch, 1), jnp.int32) if cfg.input_mode == "tokens"
            else jnp.zeros((args.batch, 1, cfg.d_model), jnp.bfloat16))

@@ -251,14 +251,18 @@ def attention_decode(
 ) -> tuple[jnp.ndarray, dict]:
     """One-token decode. x: (B, 1, D); cache k/v: (B, S_loc, KV, hd).
 
-    ``length`` (scalar int32) = number of tokens already in the cache; the new
-    token is written at global position ``length``.
+    ``length`` (scalar int32, or (B,) int32 for per-lane lengths) = number of
+    tokens already in the cache; the new token is written at global position
+    ``length``. A scalar broadcasts to all rows and produces bit-identical
+    results to the historical scalar-only path; a (B,) vector lets each batch
+    row sit at its own position (the serving lane pool).
     """
     if window == "cfg":
         window = cfg.window
     b = x.shape[0]
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    pos = jnp.full((b, 1), length, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    pos = lengths[:, None]                          # (B, 1)
     if cfg.rope_kind == "mrope":
         pos = jnp.broadcast_to(pos[None], (3, b, 1))
     q, k_new, v_new = _project_qkv(p, x, cfg, ctx)
@@ -273,6 +277,7 @@ def attention_decode(
         q = jax.lax.dynamic_slice_in_dim(q, off, b_loc, axis=0)
         k_new = jax.lax.dynamic_slice_in_dim(k_new, off, b_loc, axis=0)
         v_new = jax.lax.dynamic_slice_in_dim(v_new, off, b_loc, axis=0)
+        lengths = jax.lax.dynamic_slice_in_dim(lengths, off, b_loc, axis=0)
         b = b_loc
 
     s_loc = cache["k"].shape[1]
@@ -280,16 +285,16 @@ def attention_decode(
     s_total = s_loc * n_shards
     shard = ctx.seq_index()
     ring = window is not None  # ring buffer of size s_total (== window cap)
-    wpos = (length % s_total) if ring else length
+    wpos = (lengths % s_total) if ring else lengths           # (B,)
     local_pos = wpos - shard * s_loc
     in_range = (local_pos >= 0) & (local_pos < s_loc)
     lp = jnp.clip(local_pos, 0, s_loc - 1)
+    hit = (jnp.arange(s_loc)[None, :] == lp[:, None]) & in_range[:, None]
 
     def write(buf, new):
-        new = new.astype(buf.dtype)
-        cur = jax.lax.dynamic_slice_in_dim(buf, lp, 1, axis=1)
-        upd = jnp.where(in_range, new, cur)
-        return jax.lax.dynamic_update_slice_in_dim(buf, upd, lp, axis=1)
+        # one-hot row write: each batch row lands at its own slot (or nowhere
+        # when its slot lives on another seq shard).
+        return jnp.where(hit[:, :, None, None], new.astype(buf.dtype), buf)
 
     cache = {"k": write(cache["k"], k_new), "v": write(cache["v"], v_new)}
 
@@ -303,11 +308,11 @@ def attention_decode(
     if ring:
         # token position held by each ring slot: the latest t <= length with
         # t % s_total == slot. Entries older than `window` were overwritten.
-        slot_pos = length - (length - slots) % s_total
-        valid = slot_pos >= 0
+        slot_pos = lengths[:, None] - (lengths[:, None] - slots[None, :]) % s_total
+        valid = slot_pos >= 0                      # (B, S_loc)
     else:
-        valid = slots <= length                    # causal incl. new token
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid = slots[None, :] <= lengths[:, None]  # causal incl. new token
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
 
     # flash-decode partial-softmax combine over the seq axis.
     m_loc = logits.max(axis=-1, keepdims=True)                    # (B,H,1,1)

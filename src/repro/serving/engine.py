@@ -113,9 +113,16 @@ def init_serve_state(cfg: ArchConfig, plan: ServePlan, dtype=jnp.bfloat16):
 
 
 def build_serve_step(cfg: ArchConfig, mesh, plan: ServePlan,
-                     params_shapes=None, donate: bool = True):
+                     params_shapes=None, donate: bool = True,
+                     vector_length: bool = False, on_trace=None):
     """Returns (jitted serve_step(params, state, inputs, length)
-    -> (logits, state), shardings, specs)."""
+    -> (logits, state), shardings, specs).
+
+    ``vector_length`` switches ``length`` from a scalar to a per-lane (B,)
+    vector (replicated across the mesh — each lane's position is global
+    state). ``on_trace(tag)`` is invoked every time the step is (re)traced;
+    the serving lane pool uses it as its compile-count witness.
+    """
     if params_shapes is None:
         params_shapes = jax.eval_shape(
             functools.partial(transformer.init_model, cfg=cfg),
@@ -136,13 +143,16 @@ def build_serve_step(cfg: ArchConfig, mesh, plan: ServePlan,
         in_ps = P(b, None, None)
 
     def step(params, state, inputs, length):
+        if on_trace is not None:
+            on_trace("serve_step")
         logits, state = transformer.decode_step(
             params, state, inputs, length, cfg, ctx, specs=param_specs)
         return logits, state
 
+    len_ps = P(b) if vector_length else P()
     mapped = compat.shard_map(
         step, mesh=mesh,
-        in_specs=(p_ps, st_ps, in_ps, P()),
+        in_specs=(p_ps, st_ps, in_ps, len_ps),
         out_specs=(P(b, None, None), st_ps),
         check_vma=False)
     jitted = jax.jit(mapped, donate_argnums=(1,) if donate else ())
@@ -158,7 +168,7 @@ def build_serve_step(cfg: ArchConfig, mesh, plan: ServePlan,
 
 
 def build_prefill_step(cfg: ArchConfig, mesh, plan: ServePlan,
-                       seq_len: int, params_shapes=None):
+                       seq_len: int, params_shapes=None, on_trace=None):
     """Prefill uses the TRAIN layout (gathered weights, seq-parallel
     activations); it returns final-position hidden states and the populated
     seq-sharded cache."""
@@ -224,6 +234,8 @@ def build_prefill_step(cfg: ArchConfig, mesh, plan: ServePlan,
     st_ps = jax.tree_util.tree_map_with_path(spec_for_state, state_shapes)
 
     def step(params, inputs, positions):
+        if on_trace is not None:
+            on_trace("prefill_step")
         x, state = transformer.prefill(params, inputs, positions, cfg, ctx,
                                        specs=param_specs)
         return x, state

@@ -1,0 +1,578 @@
+"""Continuous-batching request scheduler over a fixed-shape decode lane pool.
+
+The static-batch engine (`serving/engine.py`) compiles ONE decode program for
+a `(n_lanes, 1)` token batch.  This module keeps that program hot under real
+traffic: each batch row is a *lane* with its own position, and a finished
+lane is refilled by the next queued request WITHOUT recompiling anything —
+the same static-shape contract the training side enforces everywhere.
+
+Lane lifecycle rule:
+  free -> (admit: bucketed prefill, cache injected at the lane slot,
+           first token from the prompt's last hidden state)
+       -> active (per-lane length advances each pool decode step)
+       -> free  (EOS, max_new_tokens reached, or cache capacity hit).
+  An admit overwrites the lane's FULL cache slice (prefill cache padded with
+  zeros up to the cache length), so a vacated lane needs no clearing and
+  stale K/V from the previous occupant is never attended (per-lane validity
+  masks in `attention_decode` stop at the lane's own length).
+
+Compile discipline: the pool jit-compiles one decode step, one prefill per
+prompt-length bucket, and one cache-inject per bucket.  `warmup()` traces
+all of them once; `compiles_after_warmup()` is the compile-count witness —
+it must stay 0 across any trace, which tests and CI assert.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.common import ArchConfig
+from repro.models.layers import embeddings as emb
+from repro.sharding import specs as sp
+
+DEFAULT_BUCKETS = (8, 16, 32)
+
+
+# ---------------------------------------------------------------------------
+# requests
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One inference request: a token prompt plus a generation budget."""
+
+    rid: int
+    prompt: np.ndarray            # (L,) int32 token ids
+    max_new_tokens: int
+    arrival: int = 0              # virtual tick the request arrives at
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request lifecycle record (telemetry + bench source of truth)."""
+
+    rid: int
+    prompt_len: int
+    arrival: int
+    status: str = "queued"        # queued | active | done | rejected
+    reject_reason: str | None = None
+    finish_reason: str | None = None
+    lane: int | None = None
+    admit_tick: int | None = None
+    finish_tick: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    arrival_wall: float | None = None
+    admit_wall: float | None = None
+    first_token_wall: float | None = None
+    finish_wall: float | None = None
+    token_walls: list = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.first_token_wall is None or self.arrival_wall is None:
+            return None
+        return self.first_token_wall - self.arrival_wall
+
+    def to_event(self) -> dict:
+        return {
+            "event": "request", "rid": self.rid,
+            "prompt_len": self.prompt_len, "n_tokens": len(self.tokens),
+            "status": self.status, "reject_reason": self.reject_reason,
+            "finish_reason": self.finish_reason,
+            "arrival_tick": self.arrival, "admit_tick": self.admit_tick,
+            "finish_tick": self.finish_tick,
+            "arrival_wall": self.arrival_wall, "admit_wall": self.admit_wall,
+            "first_token_wall": self.first_token_wall,
+            "finish_wall": self.finish_wall,
+            "ttft_s": self.ttft_s,
+        }
+
+
+# ---------------------------------------------------------------------------
+# lane pool
+
+
+class LanePool:
+    """Fixed-shape decode lane pool: `n_lanes` independent sequences sharing
+    one compiled `(n_lanes, 1)` decode step with per-lane `(n_lanes,)`
+    lengths.
+
+    Two backends behind one API:
+      mesh=None — plain `jax.jit` over `transformer.decode_step` /
+                  `transformer.prefill` (tests, benchmarks, single device);
+      mesh      — the sharded serving engine (`build_serve_step` with
+                  `vector_length=True`, per-bucket `build_prefill_step`).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, n_lanes: int, max_len: int,
+                 buckets: tuple = DEFAULT_BUCKETS, mesh=None,
+                 cache_dtype=jnp.bfloat16):
+        if cfg.input_mode != "tokens":
+            raise ValueError("LanePool serves token-in token-out archs only "
+                             f"(input_mode={cfg.input_mode!r})")
+        self.cfg = cfg
+        self.n_lanes = int(n_lanes)
+        self.max_len = int(max_len)
+        self.cache_len = (min(max_len, cfg.window)
+                          if cfg.window is not None else max_len)
+        self.ring = cfg.window is not None
+        buckets = tuple(sorted(int(b) for b in buckets))
+        if buckets[-1] > self.cache_len:
+            raise ValueError(f"largest prefill bucket {buckets[-1]} exceeds "
+                             f"cache length {self.cache_len}")
+        self.buckets = buckets
+        self.mesh = mesh
+        self.cache_dtype = cache_dtype
+        self.counters: collections.Counter = collections.Counter()
+        self._warmup_counts: int | None = None
+
+        # host-side lane registers
+        self.lengths = np.zeros((self.n_lanes,), np.int32)
+        self.last_tokens = np.zeros((self.n_lanes,), np.int32)
+        self.active = np.zeros((self.n_lanes,), bool)
+
+        if mesh is None:
+            self._build_single(params)
+        else:
+            self._build_mesh(params)
+        self._admit_fn = self._build_admit()
+        self.reset()
+
+    # -- construction -------------------------------------------------------
+
+    def _bump(self, tag: str) -> None:
+        self.counters[tag] += 1
+
+    def _build_single(self, params):
+        cfg = self.cfg
+        self.params = params
+        self._embed = params["embed"]
+        self._init_state = lambda: transformer.init_decode_state(
+            cfg, self.n_lanes, self.cache_len, 1, self.cache_dtype)
+        self._state_shardings = None
+
+        def decode(p, state, toks, lengths):
+            self._bump("decode")
+            return transformer.decode_step(p, state, toks, lengths, cfg)
+
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+        def prefill(p, toks, positions):
+            self._bump("prefill")
+            return transformer.prefill(p, toks, positions, cfg)
+
+        # one jitted prefill; jit's shape cache specializes it per bucket
+        self._prefill = {b: jax.jit(prefill) for b in self.buckets}
+
+    def _build_mesh(self, params):
+        from repro.serving import engine
+
+        cfg, mesh = self.cfg, self.mesh
+        params_shapes = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params)
+        self.plan = engine.make_serve_plan(cfg, mesh, self.n_lanes,
+                                           self.max_len)
+        (self._decode, shardings, _specs, state_shapes,
+         _st_ps) = engine.build_serve_step(
+            cfg, mesh, self.plan, params_shapes=params_shapes,
+            vector_length=True, on_trace=self._bump)
+        self.params = jax.device_put(params, shardings["params"])
+        self._embed = self.params["embed"]
+        self._state_shardings = shardings["state"]
+        self._init_state = lambda: jax.device_put(
+            engine.init_serve_state(cfg, self.plan, self.cache_dtype),
+            shardings["state"])
+        plan1 = engine.make_serve_plan(cfg, mesh, 1, self.max_len)
+        self._prefill = {}
+        for b in self.buckets:
+            fn, _ps = engine.build_prefill_step(
+                cfg, mesh, plan1, b, params_shapes=params_shapes,
+                on_trace=self._bump)
+            self._prefill[b] = fn
+
+    def _build_admit(self):
+        cfg = self.cfg
+
+        def admit(embed, pool_state, pstate, x, lane, true_len):
+            self._bump("admit")
+            # first-token logits from the prompt's last REAL position
+            h = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+            logits = emb.lm_logits(embed, h, cfg)
+
+            def inject(path, pl, pf):
+                stacked = sp.is_stacked_path(jax.tree_util.keystr(path))
+                ba = 1 if stacked else 0
+                pf = pf.astype(pl.dtype)
+                pads = [(0, 0)] * pf.ndim
+                for ax in range(ba + 1, pf.ndim):
+                    pads[ax] = (0, pl.shape[ax] - pf.shape[ax])
+                if any(p != (0, 0) for p in pads):
+                    pf = jnp.pad(pf, pads)   # zero-fill wipes stale K/V
+                starts = [0] * pf.ndim
+                starts[ba] = lane
+                return jax.lax.dynamic_update_slice(pl, pf, tuple(starts))
+
+            new_state = jax.tree_util.tree_map_with_path(
+                inject, pool_state, pstate)
+            return new_state, logits
+
+        return jax.jit(admit, donate_argnums=(1,))
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def reset(self) -> None:
+        """Fresh pool state; compiled programs (and their traces) survive."""
+        self.state = self._init_state()
+        self.lengths[:] = 0
+        self.last_tokens[:] = 0
+        self.active[:] = False
+
+    def bucket_for(self, prompt_len: int) -> int | None:
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        return None
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> str | None:
+        """None if admissible, else the rejection reason."""
+        if prompt_len < 1 or self.bucket_for(prompt_len) is None:
+            return "too_long"
+        if not self.ring and prompt_len + max_new_tokens - 1 > self.cache_len:
+            return "too_long"
+        return None
+
+    def _positions(self, bucket: int):
+        pos = np.arange(bucket, dtype=np.int32)[None]          # (1, B)
+        if self.cfg.rope_kind == "mrope":
+            pos = np.broadcast_to(pos[None], (3, 1, bucket)).copy()
+        return pos
+
+    def admit(self, prompt: np.ndarray, lane: int) -> int:
+        """Prefill `prompt` into `lane`; returns the first generated token."""
+        prompt = np.asarray(prompt, np.int32)
+        plen = int(prompt.shape[0])
+        bucket = self.bucket_for(plen)
+        if bucket is None or self.active[lane]:
+            raise ValueError(f"bad admit: len={plen} lane={lane}")
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = prompt
+        x, pstate = self._prefill[bucket](self.params, toks,
+                                          self._positions(bucket))
+        self.state, logits = self._admit_fn(
+            self._embed, self.state, pstate, x,
+            np.int32(lane), np.int32(plen))
+        tok = int(np.argmax(np.asarray(logits[0, 0], np.float32)))
+        self.lengths[lane] = plen
+        self.last_tokens[lane] = tok
+        self.active[lane] = True
+        return tok
+
+    def step(self) -> dict:
+        """One pool decode step; returns {lane: next_token} for active lanes.
+
+        Inactive lanes decode a frozen dummy row (token 0 at their last
+        length); their output is discarded and the slot they rewrite is
+        wiped by the next admit, so active lanes are bit-independent of
+        pool occupancy.
+        """
+        logits, self.state = self._decode(
+            self.params, self.state, self.last_tokens[:, None].copy(),
+            self.lengths.copy())
+        logits = np.asarray(logits, np.float32)
+        out = {}
+        for lane in np.nonzero(self.active)[0]:
+            tok = int(np.argmax(logits[lane, 0]))
+            out[int(lane)] = tok
+            self.last_tokens[lane] = tok
+            self.lengths[lane] += 1
+        return out
+
+    def release(self, lane: int) -> None:
+        self.active[lane] = False
+
+    def at_capacity(self, lane: int) -> bool:
+        """True when the lane cannot take another decode step (next write
+        would fall outside a non-ring cache)."""
+        return (not self.ring) and int(self.lengths[lane]) + 1 > self.cache_len
+
+    # -- compile-count witness ----------------------------------------------
+
+    def trace_count(self) -> int:
+        return int(sum(self.counters.values()))
+
+    def warmup(self) -> None:
+        """Trace every compiled program once (decode + each bucket's prefill
+        and inject); afterwards `compiles_after_warmup()` must stay 0."""
+        for i, b in enumerate(self.buckets):
+            lane = i % self.n_lanes
+            self.active[lane] = False
+            self.admit(np.ones((b,), np.int32), lane)
+        self.step()
+        self.reset()
+        self._warmup_counts = self.trace_count()
+
+    def compiles_after_warmup(self) -> int:
+        if self._warmup_counts is None:
+            raise RuntimeError("call warmup() first")
+        return self.trace_count() - self._warmup_counts
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Outcome of one scheduler run over a request trace."""
+
+    records: list
+    n_steps: int
+    wall_s: float
+    occupancy: float              # mean active-lane fraction per decode step
+    compiles_after_warmup: int
+
+    def done(self) -> list:
+        return [r for r in self.records if r.status == "done"]
+
+    def rejected(self) -> list:
+        return [r for r in self.records if r.status == "rejected"]
+
+    def total_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.done())
+
+    def metrics(self) -> dict:
+        done = self.done()
+        ttft = sorted(r.ttft_s for r in done if r.ttft_s is not None)
+        tok_lat = sorted(w for r in done for w in r.token_walls)
+
+        def pct(xs, q):
+            if not xs:
+                return 0.0
+            return float(xs[min(len(xs) - 1, int(q * (len(xs) - 1) + 0.5))])
+
+        total = self.total_tokens()
+        return {
+            "requests": len(self.records),
+            "admitted": len(done),
+            "rejected": len(self.rejected()),
+            "tokens": total,
+            "n_steps": self.n_steps,
+            "wall_s": round(self.wall_s, 4),
+            "tokens_per_s": round(total / self.wall_s, 2) if self.wall_s else 0.0,
+            "occupancy": round(self.occupancy, 4),
+            "ttft_p50_ms": round(1e3 * pct(ttft, 0.50), 3),
+            "ttft_p99_ms": round(1e3 * pct(ttft, 0.99), 3),
+            "tok_p50_ms": round(1e3 * pct(tok_lat, 0.50), 3),
+            "tok_p99_ms": round(1e3 * pct(tok_lat, 0.99), 3),
+            "compiles_after_warmup": self.compiles_after_warmup,
+        }
+
+
+class Scheduler:
+    """Admission control + continuous batching over a LanePool.
+
+    Admission policy: a bounded FIFO queue (`max_queue`).  An arriving
+    request is rejected immediately — with a reason — when the queue is full
+    (`queue_full`) or it can never fit the pool's buckets/cache
+    (`too_long`).  Queued requests are admitted into free lanes in FIFO
+    order; one virtual tick == one pool decode step.
+    """
+
+    def __init__(self, pool: LanePool, *, max_queue: int = 16,
+                 eos_id: int | None = None, recorder=None,
+                 on_token: Callable[[int, int], None] | None = None):
+        self.pool = pool
+        self.max_queue = int(max_queue)
+        self.eos_id = eos_id
+        self.recorder = recorder
+        self.on_token = on_token
+
+    def _emit(self, rec: RequestRecord) -> None:
+        if self.recorder is not None:
+            self.recorder.emit(rec.to_event())
+
+    def serve(self, requests: list) -> ServeReport:
+        pool = self.pool
+        if pool._warmup_counts is None:
+            pool.warmup()
+        base_traces = pool.trace_count()
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        recs = {r.rid: RequestRecord(r.rid, len(r.prompt), r.arrival)
+                for r in pending}
+        by_rid = {r.rid: r for r in pending}
+        queue: deque = deque()
+        lane_rid = [None] * pool.n_lanes
+        tick = 0
+        steps = 0
+        occ_sum = 0.0
+        t0 = time.perf_counter()
+
+        def finish(lane: int, reason: str) -> None:
+            rec = recs[lane_rid[lane]]
+            rec.status = "done"
+            rec.finish_reason = reason
+            rec.finish_tick = tick
+            rec.finish_wall = time.perf_counter()
+            pool.release(lane)
+            lane_rid[lane] = None
+            self._emit(rec)
+
+        def push_token(lane: int, tok: int, wall: float) -> None:
+            rec = recs[lane_rid[lane]]
+            rec.tokens.append(tok)
+            rec.token_walls.append(wall)
+            if rec.first_token_wall is None:
+                rec.first_token_wall = time.perf_counter()
+            if self.on_token is not None:
+                self.on_token(rec.rid, tok)
+
+        while pending or queue or pool.active.any():
+            # 1) arrivals due at this tick (admission control)
+            while pending and pending[0].arrival <= tick:
+                r = pending.popleft()
+                rec = recs[r.rid]
+                rec.arrival_wall = time.perf_counter()
+                reason = pool.fits(rec.prompt_len, r.max_new_tokens)
+                if reason is None and len(queue) >= self.max_queue:
+                    reason = "queue_full"
+                if reason is not None:
+                    rec.status = "rejected"
+                    rec.reject_reason = reason
+                    self._emit(rec)
+                else:
+                    queue.append(r)
+
+            # 2) admit queued requests into free lanes (FIFO)
+            free = [i for i in range(pool.n_lanes) if not pool.active[i]]
+            while queue and free:
+                r = queue.popleft()
+                lane = free.pop(0)
+                rec = recs[r.rid]
+                rec.status = "active"
+                rec.lane = lane
+                rec.admit_tick = tick
+                rec.admit_wall = time.perf_counter()
+                lane_rid[lane] = r.rid
+                ta = time.perf_counter()
+                tok = pool.admit(r.prompt, lane)
+                push_token(lane, tok, time.perf_counter() - ta)
+                if ((self.eos_id is not None and tok == self.eos_id)
+                        or r.max_new_tokens <= 1):
+                    finish(lane, "eos" if (self.eos_id is not None
+                                           and tok == self.eos_id)
+                           else "max_new_tokens")
+                elif pool.at_capacity(lane):
+                    finish(lane, "max_len")
+
+            # 3) one pool decode step == one tick
+            if pool.active.any():
+                occ_sum += float(pool.active.sum()) / pool.n_lanes
+                ts = time.perf_counter()
+                toks = pool.step()
+                step_wall = time.perf_counter() - ts
+                steps += 1
+                for lane, tok in toks.items():
+                    r = by_rid[lane_rid[lane]]
+                    push_token(lane, tok, step_wall)
+                    rec = recs[r.rid]
+                    if self.eos_id is not None and tok == self.eos_id:
+                        finish(lane, "eos")
+                    elif len(rec.tokens) >= r.max_new_tokens:
+                        finish(lane, "max_new_tokens")
+                    elif pool.at_capacity(lane):
+                        finish(lane, "max_len")
+            elif not queue and pending:
+                tick = max(tick + 1, int(pending[0].arrival))
+                continue
+            tick += 1
+
+        return ServeReport(
+            records=[recs[r] for r in sorted(recs)],
+            n_steps=steps,
+            wall_s=time.perf_counter() - t0,
+            occupancy=(occ_sum / steps) if steps else 0.0,
+            compiles_after_warmup=pool.trace_count() - base_traces,
+        )
+
+
+def run_sequential_static(pool: LanePool, requests: list,
+                          eos_id: int | None = None) -> ServeReport:
+    """Naive baseline: static batches of `n_lanes` in arrival order; each
+    batch decodes until its SLOWEST member finishes (no lane refill).  Uses
+    the same compiled pool programs, so the comparison isolates scheduling."""
+    if pool._warmup_counts is None:
+        pool.warmup()
+    base_traces = pool.trace_count()
+    pool.reset()
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    recs = {}
+    steps = 0
+    occ_sum = 0.0
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), pool.n_lanes):
+        batch = reqs[i:i + pool.n_lanes]
+        lane_req: dict[int, Request] = {}
+        for lane, r in enumerate(batch):
+            rec = recs[r.rid] = RequestRecord(r.rid, len(r.prompt), r.arrival)
+            rec.arrival_wall = t0
+            reason = pool.fits(len(r.prompt), r.max_new_tokens)
+            if reason is not None:
+                rec.status = "rejected"
+                rec.reject_reason = reason
+                continue
+            rec.status = "active"
+            rec.lane = lane
+            rec.admit_wall = time.perf_counter()
+            ta = time.perf_counter()
+            tok = pool.admit(r.prompt, lane)
+            rec.tokens.append(tok)
+            rec.token_walls.append(time.perf_counter() - ta)
+            rec.first_token_wall = time.perf_counter()
+            lane_req[lane] = r
+            if ((eos_id is not None and tok == eos_id)
+                    or r.max_new_tokens <= 1 or pool.at_capacity(lane)):
+                rec.status = "done"
+                rec.finish_reason = ("eos" if eos_id is not None
+                                     and tok == eos_id else "max_new_tokens")
+                rec.finish_wall = time.perf_counter()
+                pool.release(lane)
+                del lane_req[lane]
+        while pool.active.any():
+            occ_sum += float(pool.active.sum()) / pool.n_lanes
+            ts = time.perf_counter()
+            toks = pool.step()
+            step_wall = time.perf_counter() - ts
+            steps += 1
+            for lane, tok in toks.items():
+                r = lane_req[lane]
+                rec = recs[r.rid]
+                rec.tokens.append(tok)
+                rec.token_walls.append(step_wall)
+                done_reason = None
+                if eos_id is not None and tok == eos_id:
+                    done_reason = "eos"
+                elif len(rec.tokens) >= r.max_new_tokens:
+                    done_reason = "max_new_tokens"
+                elif pool.at_capacity(lane):
+                    done_reason = "max_len"
+                if done_reason:
+                    rec.status = "done"
+                    rec.finish_reason = done_reason
+                    rec.finish_wall = time.perf_counter()
+                    pool.release(lane)
+                    del lane_req[lane]
+    return ServeReport(
+        records=[recs[r] for r in sorted(recs)],
+        n_steps=steps,
+        wall_s=time.perf_counter() - t0,
+        occupancy=(occ_sum / steps) if steps else 0.0,
+        compiles_after_warmup=pool.trace_count() - base_traces,
+    )

@@ -1,0 +1,78 @@
+"""Seeded synthetic serving traffic: Poisson arrivals + length mixtures.
+
+A `TrafficSpec` is a fully-deterministic description of a request trace:
+inter-arrival gaps are exponential (so arrivals are a Poisson process) in
+VIRTUAL ticks — one tick == one pool decode step — and prompt/output lengths
+are drawn from discrete mixtures.  `generate(spec, vocab)` expands it into
+concrete `Request`s with seeded token prompts; the same (spec, vocab) always
+yields byte-identical traces, which is what lets CI gate exact request and
+token counts.
+
+Spec schema (the JSON-ish view documented in README §Serving):
+  name              preset id
+  seed              RNG seed (numpy default_rng / PCG64 stream)
+  n_requests        trace length
+  mean_interarrival mean gap between arrivals, in ticks
+  prompt_lens/probs discrete prompt-length mixture
+  max_new/probs     discrete output-budget mixture
+  eos_id            optional EOS token (None => budgets are exact, so token
+                    counts are platform-independent — the smoke gate relies
+                    on this)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    name: str
+    seed: int
+    n_requests: int
+    mean_interarrival: float
+    prompt_lens: tuple
+    prompt_probs: tuple
+    max_new: tuple
+    max_new_probs: tuple
+    eos_id: int | None = None
+
+
+def generate(spec: TrafficSpec, vocab: int) -> list:
+    """Expand a spec into concrete requests (tokens in [2, vocab))."""
+    rng = np.random.default_rng(spec.seed)
+    gaps = rng.exponential(spec.mean_interarrival, spec.n_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    reqs = []
+    for i in range(spec.n_requests):
+        plen = int(rng.choice(spec.prompt_lens, p=spec.prompt_probs))
+        mnew = int(rng.choice(spec.max_new, p=spec.max_new_probs))
+        prompt = rng.integers(2, vocab, size=(plen,), dtype=np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=mnew,
+                            arrival=int(arrivals[i])))
+    return reqs
+
+
+# the CI smoke mix: short/long outputs at even odds make naive static
+# batching pay the full straggler tail, arrivals fast enough to keep the
+# continuous pool saturated.  eos_id=None => token counts are exact.
+SPECS = {
+    "smoke": TrafficSpec(
+        name="smoke", seed=0, n_requests=48, mean_interarrival=0.5,
+        prompt_lens=(4, 12), prompt_probs=(0.6, 0.4),
+        max_new=(2, 48), max_new_probs=(0.7, 0.3)),
+    # bursty arrivals against a tiny queue — exercises deterministic
+    # queue_full rejections (tests; not gated on counts in CI)
+    "burst": TrafficSpec(
+        name="burst", seed=1, n_requests=24, mean_interarrival=0.2,
+        prompt_lens=(4, 8), prompt_probs=(0.5, 0.5),
+        max_new=(16, 32), max_new_probs=(0.5, 0.5)),
+    # the 200-request property trace (zero-recompile witness)
+    "prop200": TrafficSpec(
+        name="prop200", seed=7, n_requests=200, mean_interarrival=3.0,
+        prompt_lens=(3, 6, 14), prompt_probs=(0.4, 0.4, 0.2),
+        max_new=(2, 8, 24), max_new_probs=(0.3, 0.5, 0.2)),
+}

@@ -35,9 +35,11 @@ def axis_size(name) -> int:
     """
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(name)
-    import jax.core
+    # NB: must not `import jax.core` here — that would bind `jax` as a
+    # function local and shadow the module-level import above.
+    from jax.core import axis_frame
 
-    return jax.core.axis_frame(name)
+    return axis_frame(name)
 
 
 def make_mesh(shape, axes):
